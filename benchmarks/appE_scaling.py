@@ -1,0 +1,41 @@
+"""App. E / Fig. 12: a relufied LARGER model beats a dense SMALLER model at
+equal inference MACs (the relufied points sit above the dense scaling line)."""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+
+from benchmarks.common import BASE, data_cfg, eval_nll, get_model, train_model
+from repro.core import flops as fl
+from repro.core.sparsity import measure_site_sparsity
+from repro.data.pipeline import eval_batches
+
+
+def run():
+    # dense-small: half width
+    small_cfg = BASE.replace(name="bench-small", d_model=48, d_ff=192,
+                             head_dim=12)
+    small_params, _ = train_model(small_cfg, 150, "scratch_small")
+    small_nll = eval_nll(small_cfg, small_params)
+    small_macs = fl.macs_per_token(small_cfg) / 1e6
+
+    # relufied-large at its measured sparsity
+    cfg2, p2, _ = get_model("relufied_s2")
+    batch = {k: jnp.asarray(v) for k, v in eval_batches(data_cfg(), 1)[0].items()}
+    m = measure_site_sparsity(p2, batch, cfg2)
+    sp = fl.SparsityLevels(qkv=m.get("mean/qkv", 0), up=m.get("mean/up", 0),
+                           down=m.get("mean/down", 0))
+    reluf_nll = eval_nll(cfg2, p2)
+    reluf_macs = fl.macs_per_token(cfg2, sp) / 1e6
+
+    full = {"dense_small": {"nll": small_nll, "MMACs": small_macs},
+            "relufied_large": {"nll": reluf_nll, "MMACs": reluf_macs},
+            "wins": reluf_nll < small_nll}
+    with open("experiments/bench_appE.json", "w") as f:
+        json.dump(full, f, indent=2)
+    return [
+        f"appE/dense_small,0,nll={small_nll:.4f};mmacs={small_macs:.3f}",
+        f"appE/relufied_large,0,nll={reluf_nll:.4f};mmacs={reluf_macs:.3f};"
+        f"better_at_similar_macs={full['wins']}",
+    ]

@@ -1,0 +1,111 @@
+"""Shared trained tiny models for the benchmark harness (disk-cached so the
+whole suite trains each model once)."""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import TrainConfig, get_config
+from repro.configs.base import ModelConfig
+from repro.core import relufication
+from repro.data.pipeline import DataConfig
+from repro.models import registry
+from repro.train.loop import Trainer
+
+CACHE = os.environ.get("BENCH_CACHE", "experiments/bench_models")
+
+BASE = ModelConfig(
+    name="bench-base", family="dense", n_layers=4, d_model=96, n_heads=4,
+    n_kv_heads=4, d_ff=384, vocab_size=256, max_seq_len=128,
+    activation="silu", ffn_kind="glu", norm_kind="rmsnorm",
+)
+
+BASE_OPT = BASE.replace(name="bench-opt", ffn_kind="mlp",
+                        norm_kind="layernorm", use_rope=False,
+                        tie_embeddings=True, activation="relu")
+
+DC = DataConfig(vocab_size=256, seq_len=64, batch_size=8)
+
+
+def data_cfg() -> DataConfig:
+    return DC
+
+
+def train_model(cfg: ModelConfig, steps: int, tag: str,
+                init_params=None, lr: float = 5e-3,
+                log=lambda *_: None) -> Tuple[dict, list]:
+    """Train (or load cached) tiny model; returns (params, losses)."""
+    path = os.path.join(CACHE, tag)
+    mgr = CheckpointManager(path, keep=1, async_save=False)
+    fam = registry.get_family(cfg)
+    template = fam.init_params(jax.random.PRNGKey(0), cfg)
+    if mgr.latest_step() is not None:
+        params, extras = mgr.restore(template)
+        return params, extras.get("losses", [])
+    tc = TrainConfig(learning_rate=lr, total_steps=steps, warmup_steps=10,
+                     schedule="cosine", num_microbatches=1,
+                     remat_policy="none", seed=0)
+    tr = Trainer(cfg, tc, DC, log=log)
+    rep = tr.run(steps, params=init_params)
+    mgr.save(steps, tr.params, block=True,
+             extras={"step": steps, "losses": [float(x) for x in rep.losses]})
+    return tr.params, rep.losses
+
+
+def eval_nll(cfg: ModelConfig, params, n_batches: int = 3) -> float:
+    from repro.data.pipeline import eval_batches
+    from repro.train.step import lm_loss
+    import jax.numpy as jnp
+    batches = eval_batches(DC, n_batches)
+    return float(np.mean([
+        float(lm_loss(params, {k: jnp.asarray(v) for k, v in b.items()}, cfg)[0])
+        for b in batches]))
+
+
+_MODELS: Dict[str, tuple] = {}
+
+
+def get_model(kind: str):
+    """Returns (cfg, params, losses). kinds: silu / gelu / relu / beta8
+    (scratch); relufied_s1 / relufied_s2 / shifted (surgery on the silu
+    base, paper Sec. 4/5.3); draft (1-layer, for speculative decoding)."""
+    if kind in _MODELS:
+        return _MODELS[kind]
+    if kind in ("silu", "gelu", "relu", "beta8"):
+        act = {"beta8": "beta=8"}.get(kind, kind)
+        cfg = BASE.replace(name=f"bench-{kind}", activation=act)
+        params, losses = train_model(cfg, 150, f"scratch_{kind}")
+    elif kind == "relufied_s1":
+        _, base_params, _ = get_model("silu")
+        cfg = relufication.relufy_stage1(BASE).replace(name="bench-reluf1")
+        params, losses = train_model(cfg, 80, "relufied_s1",
+                                     init_params=base_params, lr=2e-3)
+    elif kind == "relufied_s2":
+        _, p1, _ = get_model("relufied_s1")
+        cfg = relufication.relufy_stage2(BASE).replace(name="bench-reluf2")
+        params, losses = train_model(cfg, 80, "relufied_s2",
+                                     init_params=p1, lr=2e-3)
+    elif kind == "shifted":
+        import jax.numpy as jnp
+        from repro.data.pipeline import eval_batches
+        _, base_params, _ = get_model("silu")
+        batch = {k: jnp.asarray(v) for k, v in eval_batches(DC, 1)[0].items()}
+        cfg1 = relufication.relufy_stage1(BASE)
+        b = relufication.calibrate_shift(base_params, batch, cfg1,
+                                         target_sparsity=0.9)
+        cfg = relufication.shifted_relufy(BASE, shift=max(0.0, b)).replace(
+            name="bench-shifted")
+        params, losses = train_model(cfg, 80, "shifted",
+                                     init_params=base_params, lr=2e-3)
+    elif kind == "draft":
+        cfg = BASE.replace(name="bench-draft", n_layers=1, d_model=48,
+                           n_heads=4, head_dim=12, d_ff=192, activation="relu")
+        params, losses = train_model(cfg, 100, "draft")
+    else:
+        raise KeyError(kind)
+    _MODELS[kind] = (cfg, params, losses)
+    return _MODELS[kind]

@@ -1,0 +1,33 @@
+"""Fig. 6: the relufied model quickly recovers the performance lost to the
+architecture surgery during fine-tuning."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import eval_nll, get_model
+
+
+def run():
+    cfg_base, p_base, _ = get_model("silu")
+    cfg1, p1, losses1 = get_model("relufied_s1")
+    cfg2, p2, losses2 = get_model("relufied_s2")
+
+    base_nll = eval_nll(cfg_base, p_base)
+    # NLL right after surgery (base weights under the relufied config)
+    surgery_nll = eval_nll(cfg1, p_base)
+    s1_nll = eval_nll(cfg1, p1)
+    s2_nll = eval_nll(cfg2, p2)
+
+    recovered = (surgery_nll - s1_nll) / max(1e-9, surgery_nll - base_nll)
+    full = {"base_nll": base_nll, "post_surgery_nll": surgery_nll,
+            "s1_finetuned_nll": s1_nll, "s2_finetuned_nll": s2_nll,
+            "recovery_fraction": recovered,
+            "s1_loss_curve": losses1, "s2_loss_curve": losses2}
+    with open("experiments/bench_fig6.json", "w") as f:
+        json.dump(full, f, indent=2)
+    return [
+        f"fig6_recovery/surgery_gap,0,base={base_nll:.4f};"
+        f"post_surgery={surgery_nll:.4f}",
+        f"fig6_recovery/finetuned,0,s1={s1_nll:.4f};s2={s2_nll:.4f};"
+        f"recovered={recovered:.3f}",
+    ]

@@ -1,0 +1,50 @@
+"""Fig. 9b / App. B: with structured (tile) activation sparsity, FLOPs is an
+honest latency proxy — measured wall-clock of the gathered matmul tracks the
+density linearly. Measured on the XLA path (the Pallas kernel is validated
+in interpret mode; its FLOP/byte model is in kernels/ops.flops_saved)."""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.RandomState(0)
+    T, d, F = 4, 512, 8192
+    x = jnp.asarray(rng.randn(T, d), jnp.float32)
+    wu = jnp.asarray(rng.randn(d, F) / np.sqrt(d), jnp.float32)
+    wd = jnp.asarray(rng.randn(F, d) / np.sqrt(F), jnp.float32)
+
+    rows, full = [], {}
+    for density in (1.0, 0.5, 0.25, 0.125):
+        fn = jax.jit(lambda x, wu, wd, dn=density:
+                     ops.sparse_ffn_apply_xla(x, wu, wd, density=dn)[0])
+        us = _time(fn, x, wu, wd)
+        model = ops.flops_saved(F, d, T, density)
+        full[str(density)] = {"us": us, **model}
+        rows.append(f"fig9_latency/density{density},{us:.0f},"
+                    f"flops_saving={model['flops_saving']:.3f};"
+                    f"io_saving={model['io_saving']:.3f}")
+    # correlation between time and density (paper: FLOPS ~ latency)
+    ds = [1.0, 0.5, 0.25, 0.125]
+    ts = [full[str(d)]["us"] for d in ds]
+    corr = float(np.corrcoef(ds, ts)[0, 1])
+    rows.append(f"fig9_latency/corr,0,pearson_time_vs_density={corr:.3f}")
+    with open("experiments/bench_fig9.json", "w") as f:
+        json.dump(full, f, indent=2)
+    return rows

@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Each module runs in its OWN subprocess (the XLA CPU JIT accumulates code
+memory across eager stats passes; isolation keeps the suite within RAM).
+Prints ``name,us_per_call,derived`` CSV rows; full results in
+experiments/bench_*.json. Trained tiny models are disk-cached and shared.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+MODULES = [
+    "benchmarks.fig1_sparsity",
+    "benchmarks.fig2_actfn_spectrum",
+    "benchmarks.table1_flops",
+    "benchmarks.fig5_preactivation",
+    "benchmarks.fig6_recovery",
+    "benchmarks.fig7_aggregated",
+    "benchmarks.fig7_spec_decode",
+    "benchmarks.fig8_shifted_relu",
+    "benchmarks.fig9_flops_latency",
+    "benchmarks.fig10_optimal_gamma",
+    "benchmarks.appE_scaling",
+]
+
+
+def run_module(mod_name: str) -> None:
+    import importlib
+    mod = importlib.import_module(mod_name)
+    for r in mod.run():
+        print(r, flush=True)
+
+
+def main() -> None:
+    os.makedirs("experiments", exist_ok=True)
+    if len(sys.argv) > 1 and sys.argv[1] != "--all":
+        run_module(sys.argv[1])
+        return
+    print("name,us_per_call,derived", flush=True)
+    failures = 0
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    for mod_name in MODULES:
+        t0 = time.time()
+        r = subprocess.run([sys.executable, "-m", "benchmarks.run", mod_name],
+                           capture_output=True, text=True, env=env)
+        dt = time.time() - t0
+        if r.returncode == 0:
+            sys.stdout.write(r.stdout)
+            print(f"# {mod_name} done in {dt:.1f}s", file=sys.stderr)
+        else:
+            failures += 1
+            print(f"# FAILED {mod_name}:\n{r.stderr[-2000:]}", file=sys.stderr)
+        sys.stdout.flush()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""End-to-end relufication driver (paper Sec. 4, Figs. 4/6):
+
+  1. pretrain a SiLU (SwiGLU) model from scratch,
+  2. stage-1 surgery: swap SiLU -> ReLU, fine-tune, watch recovery,
+  3. stage-2 surgery: insert post-norm ReLU, fine-tune,
+  4. report sparsity + FLOPs saving at each stage.
+
+Presets: --preset cpu (default, ~minutes on this container) runs a tiny
+model; --preset pod emits the full production invocation (qwen2-7b on the
+16x16 mesh) without running it.
+
+    PYTHONPATH=src python examples/train_relufication.py --steps 120
+"""
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TrainConfig
+from repro.configs.base import ModelConfig
+from repro.core import flops as fl
+from repro.core import relufication
+from repro.core.sparsity import measure_site_sparsity
+from repro.data.pipeline import DataConfig, eval_batches
+from repro.train.loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="cpu", choices=["cpu", "pod"])
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--finetune-steps", type=int, default=80)
+    args = ap.parse_args()
+
+    if args.preset == "pod":
+        print("production invocation (per-host, v5e 16x16 pod):")
+        print("  python -m repro.launch.train --arch qwen2-7b --shape train_4k"
+              " --relufy-stage 2 --steps 30000 --ckpt gs://.../qwen2-relu")
+        return
+
+    cfg = ModelConfig(name="ex-base", family="dense", n_layers=4, d_model=96,
+                      n_heads=4, n_kv_heads=4, d_ff=384, vocab_size=256,
+                      max_seq_len=128, activation="silu", ffn_kind="glu")
+    dc = DataConfig(vocab_size=256, seq_len=64, batch_size=8)
+    batch = {k: jnp.asarray(v) for k, v in eval_batches(dc, 1)[0].items()}
+
+    def fit(cfg, steps, init=None, lr=5e-3, tag=""):
+        tc = TrainConfig(learning_rate=lr, total_steps=steps, warmup_steps=10,
+                         schedule="cosine")
+        tr = Trainer(cfg, tc, dc, log=lambda *_: None)
+        rep = tr.run(steps, params=init)
+        nll = tr.eval_loss(tr.params)
+        sp = measure_site_sparsity(tr.params, batch, cfg)
+        print(f"[{tag}] steps={rep.steps} train_loss={rep.losses[-1]:.4f} "
+              f"eval_nll={nll:.4f} down_sparsity={sp.get('mean/down', 0):.3f} "
+              f"qkv_sparsity={sp.get('mean/qkv', 0):.3f}")
+        return tr.params, nll, sp
+
+    print("== 1. pretrain (SiLU/SwiGLU) ==")
+    base, base_nll, _ = fit(cfg, args.steps, tag="pretrain")
+
+    print("== 2. stage-1 relufication + fine-tune ==")
+    cfg1 = relufication.relufy_stage1(cfg)
+    post_nll = None
+    p1, s1_nll, sp1 = fit(cfg1, args.finetune_steps, init=base, lr=2e-3,
+                          tag="stage1")
+
+    print("== 3. stage-2 relufication + fine-tune ==")
+    cfg2 = relufication.relufy_stage2(cfg)
+    p2, s2_nll, sp2 = fit(cfg2, args.finetune_steps, init=p1, lr=2e-3,
+                          tag="stage2")
+
+    print("== 4. FLOPs accounting (paper Table 1 style) ==")
+    for tag, c, sp in (("dense", cfg, {}), ("stage1", cfg1, sp1),
+                       ("stage2", cfg2, sp2)):
+        lv = fl.SparsityLevels(qkv=sp.get("mean/qkv", 0),
+                               up=sp.get("mean/up", 0),
+                               down=sp.get("mean/down", 0))
+        m = fl.macs_per_token(c, lv) / 1e6
+        print(f"  {tag:8s}: {m:8.3f} MMACs/token")
+    print(f"quality: base {base_nll:.4f} -> s1 {s1_nll:.4f} -> s2 {s2_nll:.4f}"
+          " (paper: recovers to within a few % after brief fine-tuning)")
+
+
+if __name__ == "__main__":
+    main()

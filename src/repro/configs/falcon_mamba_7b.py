@@ -1,0 +1,22 @@
+"""falcon-mamba-7b [ssm] 64L d_model=4096 (attn-free) d_ff=0 vocab=65024,
+ssm_state=16 — mamba1 arch [arXiv:2410.05355; unverified]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="falcon-mamba-7b",
+    family="mamba",
+    n_layers=64,
+    d_model=4096,
+    n_heads=1,  # unused (attention-free)
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=65024,
+    max_seq_len=524288,
+    activation="silu",  # mamba gate; relufication swaps this (DESIGN.md §5)
+    norm_kind="rmsnorm",
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_conv=4,
+    subquadratic=True,
+))

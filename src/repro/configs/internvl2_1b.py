@@ -1,0 +1,25 @@
+"""internvl2-1b [vlm] 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655
+— InternViT + InternLM2 [arXiv:2404.16821; hf].
+
+The transformer BACKBONE only; the ViT frontend is a STUB — input_specs()
+provides precomputed patch embeddings (b, n_vision_tokens, d_model)."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    max_seq_len=32768,
+    activation="silu",
+    ffn_kind="glu",
+    norm_kind="rmsnorm",
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    n_vision_tokens=256,
+))

@@ -1,0 +1,24 @@
+"""mixtral-8x22b [moe] 56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768,
+MoE 8e top-2 — 8 experts top-2, SWA [arXiv:2401.04088; hf]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    max_seq_len=65536,
+    activation="silu",
+    ffn_kind="glu",
+    norm_kind="rmsnorm",
+    rope_theta=1_000_000.0,
+    sliding_window=4096,
+    n_experts=8,
+    top_k=2,
+    moe_group_size=1024,
+))

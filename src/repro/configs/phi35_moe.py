@@ -1,0 +1,23 @@
+"""phi3.5-moe-42b-a6.6b [moe] 32L d_model=4096 32H (GQA kv=8) d_ff=6400
+vocab=32064, MoE 16e top-2 [hf:microsoft/Phi-3.5-MoE-instruct; hf]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6400,
+    vocab_size=32064,
+    max_seq_len=131072,
+    activation="silu",
+    ffn_kind="glu",
+    norm_kind="layernorm",
+    rope_theta=10000.0,
+    n_experts=16,
+    top_k=2,
+    moe_group_size=1024,
+))

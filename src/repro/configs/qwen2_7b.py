@@ -1,0 +1,21 @@
+"""qwen2-7b [dense] 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064
+— GQA, QKV bias [arXiv:2407.10671; hf]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="qwen2-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    max_seq_len=32768,
+    activation="silu",
+    ffn_kind="glu",
+    norm_kind="rmsnorm",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+))

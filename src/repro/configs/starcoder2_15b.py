@@ -1,0 +1,21 @@
+"""starcoder2-15b [dense] 40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152 — GQA, RoPE [arXiv:2402.19173; hf]. GELU MLP, layernorm."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    max_seq_len=16384,
+    activation="gelu",
+    ffn_kind="mlp",
+    norm_kind="layernorm",
+    qkv_bias=True,  # starcoder2 uses bias on attention & mlp projections
+    rope_theta=100_000.0,
+))

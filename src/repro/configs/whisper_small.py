@@ -1,0 +1,25 @@
+"""whisper-small [audio] 12L d_model=768 12H (MHA kv=12) d_ff=3072 vocab=51865
+— enc-dec, conv frontend (stub) [arXiv:2212.04356; unverified].
+
+12 encoder + 12 decoder layers; the conv frontend is a STUB — input_specs()
+provides precomputed frame embeddings (b, n_audio_frames, d_model)."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,
+    n_encoder_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    max_seq_len=32768,  # assigned decode_32k exercises a 32k decoder cache
+    activation="gelu",
+    ffn_kind="mlp",
+    norm_kind="layernorm",
+    use_rope=False,  # learned positions (decoder) + sinusoidal (encoder)
+    n_audio_frames=1500,
+))

@@ -1,0 +1,29 @@
+"""zamba2-7b [hybrid] 81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000,
+ssm_state=64 — Mamba2 + shared attn blocks [arXiv:2411.15242; unverified].
+
+81 Mamba-2 blocks; a SHARED attention+FFN block (one set of weights) is
+applied every `attn_every` layers (13 applications)."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,  # MHA in the shared block
+    d_ff=14336,
+    vocab_size=32000,
+    max_seq_len=524288,
+    activation="silu",
+    ffn_kind="glu",
+    norm_kind="rmsnorm",
+    rope_theta=10000.0,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_head_dim=64,
+    attn_every=6,
+    subquadratic=True,
+))

@@ -1,0 +1,91 @@
+"""Activation-function registry (paper Sec. 3 + Sec. 5.3).
+
+The paper studies the one-parameter family ``f(x) = x * sigmoid(beta * x)``:
+beta=1 is SiLU, beta≈1.7 approximates GELU, beta→inf is ReLU. We expose the
+family plus exact GELU/ReLU and the paper's *shifted ReLU* ``relu(x - b)``
+(Sec. 5.3) and FATReLU-style thresholding for completeness.
+
+All functions are pure jnp and safe under jit/grad/vmap/pjit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Act = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def gated_sigmoid(x, beta: float):
+    """f(x) = x * sigmoid(beta x). beta=1: SiLU; beta->inf: ReLU (Fig. 2a)."""
+    return x * jax.nn.sigmoid(beta * x)
+
+
+def shifted_relu(x, shift: float):
+    """relu(x - b) — paper Sec. 5.3. b chosen from pre-activation quantiles."""
+    return jax.nn.relu(x - shift)
+
+
+def fat_relu(x, threshold: float):
+    """FATReLU: x if x > t else 0 (keeps magnitudes, drops small positives)."""
+    return jnp.where(x > threshold, x, jnp.zeros_like(x))
+
+
+_REGISTRY: Dict[str, Act] = {
+    "relu": relu,
+    "gelu": gelu,
+    "silu": silu,
+    "swish": silu,
+    "silu_b1": functools.partial(gated_sigmoid, beta=1.0),
+    "gelu_b1.7": functools.partial(gated_sigmoid, beta=1.7),
+    "gated_b8": functools.partial(gated_sigmoid, beta=8.0),
+}
+
+
+def register(name: str, fn: Act) -> None:
+    _REGISTRY[name] = fn
+
+
+def get(name: str, shift: float = 0.0) -> Act:
+    """Resolve an activation by name.
+
+    Supported names: registry keys, ``beta=<float>`` for the gated family,
+    ``shifted_relu`` / ``shifted_relu:<b>`` for ReLU(x-b), ``fatrelu:<t>``.
+    The ``shift`` argument overrides for "shifted_relu" (used by
+    SparsityConfig.shift so the calibrated per-model shift applies).
+    """
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    if name.startswith("beta="):
+        return functools.partial(gated_sigmoid, beta=float(name[5:]))
+    if name == "shifted_relu":
+        return functools.partial(shifted_relu, shift=shift)
+    if name.startswith("shifted_relu:"):
+        return functools.partial(shifted_relu, shift=float(name.split(":", 1)[1]))
+    if name.startswith("fatrelu:"):
+        return functools.partial(fat_relu, threshold=float(name.split(":", 1)[1]))
+    raise KeyError(f"unknown activation {name!r}; known: {sorted(_REGISTRY)}")
+
+
+def is_sparse_activation(name: str) -> bool:
+    """Does this activation produce exact zeros (hence exploitable sparsity)?"""
+    return name == "relu" or name.startswith("shifted_relu") or name.startswith("fatrelu")
+
+
+def sparsity_of(x: jnp.ndarray, eps: float = 0.0) -> jnp.ndarray:
+    """Fraction of entries that are (exactly or nearly) zero."""
+    return jnp.mean((jnp.abs(x) <= eps).astype(jnp.float32))

@@ -1,0 +1,99 @@
+"""Sparsity measurement + aggregated-sparsity machinery (paper Secs. 3-5).
+
+* `measure_site_sparsity` — per-layer, per-site input sparsity (Fig. 1a /
+  Fig. 4 / Table 1 columns) via the instrumented stats forward.
+* `AggregatedTracker` — the union of neurons (or 128-tiles) activated while
+  decoding tokens 1..t (Sec. 5.1, Fig. 7a/b), plus the paper's random
+  baseline s_i^t.
+* tile-level helpers shared with the serving engine's γ-window weight reuse
+  (Fig. 7c) and sparse speculative decoding (Sec. 5.2).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import registry
+
+
+def measure_site_sparsity(params, batch, cfg: ModelConfig) -> Dict[str, float]:
+    """Mean input sparsity per site, averaged over layers: keys 'qkv', 'up',
+    'down' (paper Table 1 columns) + per-layer details."""
+    stats = cm.StatsCollector(True)
+    fam = registry.get_family(cfg)
+    fam.model_forward(params, batch, cfg, stats=stats)
+    out: Dict[str, float] = {}
+    agg: Dict[str, List[float]] = {"qkv_in": [], "up_in": [], "down_in": []}
+    for k, v in stats.stats.items():
+        if getattr(v, "ndim", 0):  # vector stats (activity masks) skipped
+            continue
+        val = float(v)
+        out[k] = val
+        for site in agg:
+            if k.endswith("/" + site):
+                agg[site].append(val)
+    for site, vals in agg.items():
+        if vals:
+            out["mean/" + site.replace("_in", "")] = float(np.mean(vals))
+    return out
+
+
+def preactivation_stats(params, batch, cfg: ModelConfig) -> Dict[str, float]:
+    """Per-layer pre-activation mean/std/frac_neg (Fig. 5 / Fig. 11)."""
+    stats = cm.StatsCollector(True)
+    fam = registry.get_family(cfg)
+    fam.model_forward(params, batch, cfg, stats=stats)
+    return {k: float(v) for k, v in stats.stats.items()
+            if "pre/" in k or k.endswith(("mean", "std", "frac_neg"))}
+
+
+class AggregatedTracker:
+    """Union of activated units over decoded tokens (paper Sec. 5.1).
+
+    `update(masks)` takes per-layer boolean activity (n_layers, n_units)
+    for one token; `aggregated_sparsity()` returns the fraction of units
+    never used so far (non-increasing in t — the paper's Fig. 7a curve).
+    """
+
+    def __init__(self, n_layers: int, n_units: int):
+        self.used = np.zeros((n_layers, n_units), bool)
+        self.per_token_sparsity: List[float] = []
+        self.curve: List[float] = []
+
+    def update(self, masks: np.ndarray) -> None:
+        masks = np.asarray(masks, bool)
+        self.per_token_sparsity.append(1.0 - masks.mean())
+        self.used |= masks
+        self.curve.append(1.0 - self.used.mean())
+
+    def aggregated_sparsity(self) -> float:
+        return 1.0 - self.used.mean()
+
+    def mean_token_sparsity(self) -> float:
+        return float(np.mean(self.per_token_sparsity)) if self.per_token_sparsity else 0.0
+
+    def random_baseline(self, t: Optional[int] = None) -> float:
+        """Random aggregated sparsity s^t (paper Fig. 7b dashed line)."""
+        s = self.mean_token_sparsity()
+        t = t if t is not None else len(self.per_token_sparsity)
+        return float(s ** t)
+
+
+def ffn_activity_masks(stats: cm.StatsCollector, cfg: ModelConfig,
+                       tile: int = 0) -> np.ndarray:
+    """Extract per-layer down-proj input activity from a stats decode step.
+
+    Requires the stats path to have stored 'layerN/down_act' vectors — see
+    serving.engine (it runs decode with collect_activity=True).
+    """
+    masks = []
+    for i in range(cfg.n_layers):
+        key = f"layer{i}/down_act"
+        if key in stats.stats:
+            masks.append(np.asarray(stats.stats[key]))
+    return np.stack(masks) if masks else np.zeros((0, 0))

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused up-projection + (shifted) ReLU + tile-activity
+scores in one HBM pass.
+
+Produces the sparse activations h = relu(x@Wu − b) AND the per-128-tile
+activity scores the sparse down-projection needs for its top-k selection —
+without a second pass over h. Grid over F tiles; x stays VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(shift: float):
+    def kernel(x_ref, w_ref, h_ref, s_ref):
+        h = jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        h = jnp.maximum(h - shift, 0.0)
+        h_ref[...] = h
+        T, Fb = h.shape
+        s_ref[...] = jnp.max(jnp.abs(h).reshape(T, Fb // 128, 128),
+                             axis=(0, 2))[None, :]
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("shift", "block_f", "interpret"))
+def fused_up_relu(x, wu, shift: float = 0.0, *, block_f: int = 512,
+                  interpret: bool = True):
+    """x: (T, d), wu: (d, F) -> (h (T, F) f32, scores (1, F/128) f32)."""
+    T, d = x.shape
+    F = wu.shape[1]
+    block_f = min(block_f, F)
+    assert F % block_f == 0 and block_f % 128 == 0
+    grid = (F // block_f,)
+    h, scores = pl.pallas_call(
+        _make_kernel(shift),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, block_f), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((T, block_f), lambda i: (0, i)),
+            pl.BlockSpec((1, block_f // 128), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, F), jnp.float32),
+            jax.ShapeDtypeStruct((1, F // 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, wu)
+    return h, scores[0]

@@ -1,0 +1,66 @@
+"""jit'd wrappers around the Pallas kernels + the XLA fallback path.
+
+``sparse_ffn_apply`` is the deployment-shaped composition the serving engine
+targets on TPU: fused up-proj+ReLU with tile scores, static top-k tile
+selection, then the scalar-prefetch gathered down-projection. On this CPU
+container the kernels run in interpret mode; the dry-run lowers the
+mathematically identical XLA gather path (models/common.gathered_matmul).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_ffn import fused_up_relu
+from repro.kernels.sparse_matmul import sparse_matmul
+from repro.models import common as cm
+
+
+def select_tiles_static(scores, density: float):
+    """Top-k tile selection with static capacity (paper: predictable
+    sparsity -> load only what's needed). Returns (idx (K,), nvalid ())."""
+    n_tiles = scores.shape[-1]
+    k = max(1, int(math.ceil(density * n_tiles)))
+    top, idx = jax.lax.top_k(scores, k)
+    nvalid = jnp.sum((top > 0).astype(jnp.int32))
+    return idx.astype(jnp.int32), nvalid
+
+
+@functools.partial(jax.jit, static_argnames=("density", "shift", "interpret"))
+def sparse_ffn_apply(x, wu, wd, *, density: float = 0.25, shift: float = 0.0,
+                     interpret: bool = True):
+    """Full sparse FFN hot path: h = relu(x@wu − b); y = h @ wd over the
+    top-⌈density·F/128⌉ active tiles only. Returns (y, h, idx, nvalid)."""
+    h, scores = fused_up_relu(x, wu, shift, interpret=interpret)
+    idx, nvalid = select_tiles_static(scores, density)
+    y = sparse_matmul(h.astype(x.dtype), wd, idx, nvalid, interpret=interpret)
+    return y, h, idx, nvalid
+
+
+def sparse_ffn_apply_xla(x, wu, wd, *, density: float = 0.25,
+                         shift: float = 0.0):
+    """XLA gather fallback (what the multi-pod dry-run lowers)."""
+    h = jnp.maximum(
+        jax.lax.dot_general(x, wu, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32) - shift, 0.0)
+    scores = jnp.max(jnp.abs(h).reshape(h.shape[0], -1, 128), axis=(0, 2))
+    idx, nvalid = select_tiles_static(scores, density)
+    mask = (jnp.arange(idx.shape[0]) < nvalid).astype(h.dtype)
+    y = cm.gathered_matmul(h.astype(x.dtype), wd, idx, mask, 128)
+    return y, h, idx, nvalid
+
+
+def flops_saved(F: int, D: int, T: int, density: float) -> dict:
+    """Analytic savings of the gathered down-projection (paper Fig. 1c)."""
+    dense = 2.0 * T * F * D
+    sparse = 2.0 * T * math.ceil(density * F / 128) * 128 * D
+    bytes_dense = F * D * 2
+    bytes_sparse = math.ceil(density * F / 128) * 128 * D * 2
+    return {"dense_flops": dense, "sparse_flops": sparse,
+            "flops_saving": 1 - sparse / dense,
+            "dense_weight_bytes": bytes_dense,
+            "sparse_weight_bytes": bytes_sparse,
+            "io_saving": 1 - bytes_sparse / bytes_dense}

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_matmul_ref(x, w, idx, nvalid, tile: int):
+    """y = x @ w restricted to the selected F-tiles.
+
+    x: (T, F); w: (F, D); idx: (K,) tile indices (may contain padding past
+    nvalid); nvalid: () int32 — only idx[:nvalid] participate.
+    """
+    T, F = x.shape
+    n_tiles = F // tile
+    k = idx.shape[0]
+    valid = jnp.arange(k) < nvalid
+    sel = jnp.zeros((n_tiles,), jnp.bool_).at[idx].max(valid)
+    mask = jnp.repeat(sel, tile)
+    xm = jnp.where(mask[None, :], x, 0)
+    return jax.lax.dot_general(
+        xm, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def fused_up_relu_ref(x, wu, shift: float):
+    """h = relu(x @ wu - shift) and per-128-tile activity scores.
+
+    x: (T, d); wu: (d, F). Returns (h (T, F) f32, scores (F//128,) f32).
+    """
+    h = jax.lax.dot_general(x, wu, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = jnp.maximum(h - shift, 0.0)
+    T, F = h.shape
+    scores = jnp.max(jnp.abs(h).reshape(T, F // 128, 128), axis=(0, 2))
+    return h, scores

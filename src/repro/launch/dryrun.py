@@ -1,0 +1,217 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all          # every cell, subprocess each
+  python -m repro.launch.dryrun --all --multi-pod
+
+Outputs one JSON per cell (stdout in single-cell mode; aggregated into
+experiments/dryrun_results.jsonl with --all).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+ICI_BW = 50e9  # per-link
+
+# wire-byte multiplier per collective kind (ring algorithms)
+_COLL_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+_COLL_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "tuple": 0}
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device wire bytes by collective kind, from the partitioned HLO."""
+    seen_done = set()
+    out = {k: 0.0 for k in _COLL_MULT}
+    counts = {k: 0 for k in _COLL_MULT}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if "-done(" in m.group(0):
+            continue  # started ops counted at -start
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d.strip():
+                nbytes *= int(d)
+        out[kind] += nbytes * _COLL_MULT[kind]
+        counts[kind] += 1
+    return out, counts
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, sparse: float = 0.0,
+             microbatches: int = 0, profile: int = 0, sp: bool = False,
+             ngroups: int = 1, remat: str = "minimal") -> dict:
+    import jax
+    from repro.configs import SHAPES, get_config
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import specs as specs_lib
+    from repro.launch import hlo_cost
+    from repro.core import flops as flops_lib
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if microbatches:
+        import dataclasses
+        shape = dataclasses.replace(shape, num_microbatches=microbatches)
+    if sparse > 0:
+        cfg = cfg.replace(activation="relu", post_norm_relu=True)
+        cfg = cfg.replace_sparsity(enabled=True, ffn_tile_density=sparse,
+                                   input_tile_density=min(1.0, sparse * 3.0),
+                                   n_groups=ngroups)
+    if sp:
+        cfg = cfg.replace(sp_residuals=True)
+    # All cells compile in f32: the CPU backend legalizes bf16 dots through
+    # f32 converts, which wrecks buffer aliasing and byte/wire counts. An
+    # all-f32 module has clean aliasing and uniformly 2x-sized tensors, so
+    # bytes/wire/peak are scaled by 0.5 to model the bf16 TPU deployment
+    # (FLOPs are dtype-independent). Caveat: f32-native state (AdamW m/v,
+    # master params, logits softmax) is undercounted by 2x under this scale —
+    # it is a small fraction of traffic and makes the fit check conservative
+    # at the microbatch counts we pick.
+    cfg = cfg.replace(param_dtype="float32", compute_dtype="float32")
+    dscale = 0.5
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "sparse": sparse, "microbatches": shape.num_microbatches,
+           "sp_residuals": sp, "n_groups": ngroups, "remat": remat,
+           "dtype_scale": dscale}
+    t0 = time.time()
+    from repro.configs.base import TrainConfig
+    tc = TrainConfig(num_microbatches=shape.num_microbatches,
+                     remat_policy=remat)
+    with mesh:
+        jitted, args = specs_lib.build_cell(cfg, shape, mesh, tc=tc)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ca = compiled.cost_analysis()
+        ma = compiled.memory_analysis()
+        cm = hlo_cost.CostModel(compiled.as_text())
+
+    flops = cm.flops
+    bytes_acc = cm.bytes * dscale
+    wire = cm.wire * dscale
+
+    n_chips = 512 if multi_pod else 256
+    rec.update(
+        hlo_flops_per_chip=flops,
+        hlo_bytes_per_chip=bytes_acc,
+        wire_bytes_per_chip=wire,
+        collectives={k: round(v * dscale) for k, v in cm.coll.items() if v},
+        collective_counts={k: v for k, v in cm.coll_counts.items() if v},
+        xla_cost_flops=float(ca.get("flops", 0.0)),  # raw (loop bodies x1)
+        xla_cost_bytes=float(ca.get("bytes accessed", 0.0)),
+        peak_bytes_per_chip=int(dscale * (
+            ma.temp_size_in_bytes + ma.argument_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)),
+        arg_bytes=int(ma.argument_size_in_bytes * dscale),
+        temp_bytes=int(ma.temp_size_in_bytes * dscale),
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=bytes_acc / HBM_BW,
+        t_collective=wire / ICI_BW,
+        n_chips=n_chips,
+    )
+    terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+             "collective": rec["t_collective"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["roofline_fraction"] = round(
+        max(terms.values()) / max(sum(terms.values()), 1e-30), 4)
+    # analytic model flops (6ND train / 2ND serve), per chip
+    try:
+        mf = flops_lib.model_flops(cfg, shape)
+        rec["model_flops_per_chip"] = mf / n_chips
+        rec["useful_flops_ratio"] = round((mf / n_chips) / max(flops, 1.0), 4)
+    except Exception as e:  # accounting is best-effort
+        rec["model_flops_error"] = str(e)
+    if profile:
+        rec["profile"] = cm.profile(profile)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sparse", type=float, default=0.0,
+                    help="ffn tile density for the relufied sparse variant")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--sp", action="store_true",
+                    help="Megatron-SP-style sharded residuals")
+    ap.add_argument("--ngroups", type=int, default=1,
+                    help="shard-local grouped sparse selection (16 = TP-aligned)")
+    ap.add_argument("--remat", default="minimal",
+                    choices=["none", "minimal", "full", "save_ars"])
+    ap.add_argument("--profile", type=int, default=0)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun_results.jsonl")
+    args = ap.parse_args()
+
+    if not args.all:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.sparse,
+                       args.microbatches, sp=args.sp, ngroups=args.ngroups,
+                       remat=args.remat, profile=args.profile)
+        print(json.dumps(rec, indent=2))
+        return
+
+    from repro.configs import ASSIGNED, get_config
+    from repro.launch.cells import cell_plan
+
+    results = []
+    for cell in cell_plan(multi_pod=args.multi_pod):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", cell["arch"], "--shape", cell["shape"]]
+        if cell.get("multi_pod"):
+            cmd.append("--multi-pod")
+        if cell.get("sparse"):
+            cmd += ["--sparse", str(cell["sparse"])]
+        if cell.get("microbatches"):
+            cmd += ["--microbatches", str(cell["microbatches"])]
+        if cell.get("sp"):
+            cmd.append("--sp")
+        if cell.get("remat"):
+            cmd += ["--remat", cell["remat"]]
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        dt = time.time() - t0
+        if r.returncode == 0:
+            rec = json.loads(r.stdout[r.stdout.index("{"):])
+            rec["wall_s"] = round(dt, 1)
+        else:
+            rec = {**cell, "error": (r.stderr or r.stdout)[-2000:],
+                   "wall_s": round(dt, 1)}
+        results.append(rec)
+        tag = "OK " if "error" not in rec else "ERR"
+        print(f"[{tag}] {rec.get('arch')}/{rec.get('shape')}"
+              f"/{rec.get('mesh', 'mp' if cell.get('multi_pod') else 'sp')}"
+              f" sparse={cell.get('sparse', 0)} {dt:.0f}s", flush=True)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

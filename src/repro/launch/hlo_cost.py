@@ -1,0 +1,383 @@
+"""Trip-count-aware cost analysis of compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies once regardless of trip
+count (verified empirically), which makes it useless for scan-over-layers
+models. This module re-derives the roofline terms directly from
+``compiled.as_text()``:
+
+  * FLOPs: every dot op contributes 2·|out|·K, multiplied by the trip count
+    of every while loop on its call path.
+  * HBM bytes: post-fusion, every materialized top-level value is written
+    once by its producer and read by its consumers — we count operand+output
+    bytes per op with special rules (DUS touches only the updated slice;
+    bitcast/tuple/GTE are free). bf16→f32 ``convert`` wrappers that the CPU
+    backend inserts to legalize bf16 dots are traced through to the original
+    dtype (a TPU executes these natively in bf16; the converts and their f32
+    copies are CPU-only artifacts and are NOT counted).
+  * Collective wire bytes: per-kind ring multipliers, loop-aware.
+
+The per-op tallies double as the optimization profile (top ops by bytes /
+flops / wire) used in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+
+_COLL_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"^([a-z0-9]+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(([^)]*)\))?.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def _split_op_line(line: str):
+    """'%n = TYPE opcode(rest' -> (name, type_str, opcode, rest) or None.
+
+    Tuple types contain '=' inside /*index=k*/ comments, so we depth-scan
+    instead of regexing the type.
+    """
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    s = line[m.end():]
+    if s.startswith("("):  # tuple type: find matching paren
+        depth, i = 0, 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        typestr, s = s[: i + 1], s[i + 1:]
+    else:
+        sp = s.find(" ")
+        if sp < 0:
+            return None
+        typestr, s = s[:sp], s[sp:]
+    s = s.lstrip()
+    mo = re.match(r"([\w\-]+)\((.*)$", s)
+    if not mo:
+        return None
+    return name, typestr, mo.group(1), mo.group(2)
+
+
+@dataclass
+class Op:
+    name: str
+    dtype: str
+    shape: Tuple[int, ...]
+    opcode: str
+    rest: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+    params: Dict[str, Tuple[str, Tuple[int, ...]]] = field(default_factory=dict)
+
+
+def _parse_shape(s: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return ("tuple", ())
+    dims = tuple(int(d) for d in m.group(2).split(",") if d.strip())
+    return m.group(1), dims
+
+
+def _nbytes(dtype: str, shape: Tuple[int, ...]) -> float:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    for d in shape:
+        n *= d
+    return float(b * n)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1))
+                # parse params: "p0: f32[8,128], p1: bf16[...]"
+                if m.group(2):
+                    for part in m.group(2).split(","):
+                        if ":" in part:
+                            pname, ptype = part.split(":", 1)
+                            dt, sh = _parse_shape(ptype)
+                            cur.params[pname.strip().lstrip("%")] = (dt, sh)
+                continue
+        else:
+            if stripped == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            parsed = _split_op_line(line)
+            if parsed:
+                name, typestr, opcode, rest = parsed
+                dt, sh = _parse_shape(typestr.lstrip("("))
+                op = Op(name, dt, sh, opcode, rest)
+                if dt == "tuple" or typestr.startswith("("):
+                    op.dtype = "tuple"
+                    op.rest = typestr + " " + rest  # keep type text for tuple sizing
+                # operands: %refs before attribute section
+                body = rest.split("), ")[0] if "), " in rest else rest
+                op.operands = _OPERAND_RE.findall(body)
+                cur.ops[name] = op
+                cur.order.append(name)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in the loop condition (iteration bound)."""
+    best = 1
+    for op in cond.ops.values():
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "iota", "after-all", "partition-id", "replica-id", "reshape",
+             "convert", "copy-start", "copy-done"}
+
+
+def _is_convert_fusion(name: str) -> bool:
+    return name.startswith("wrapped_convert") or name.startswith("convert_bitcast")
+
+
+class CostModel:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = re.search(r"ENTRY\s+%?([\w.\-]+)", line)
+                if m:
+                    entry = m.group(1)
+                break
+        if entry is None:  # fall back: computation referenced by no one
+            called = set()
+            for c in self.comps.values():
+                for op in c.ops.values():
+                    for m in re.finditer(r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-]+)", op.rest):
+                        called.add(m.group(1))
+            cands = [n for n in self.comps if n not in called]
+            entry = cands[-1] if cands else next(iter(self.comps))
+        self.entry = entry
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.wire = 0.0
+        self.coll = defaultdict(float)
+        self.coll_counts = defaultdict(int)
+        self.top_ops: List[Tuple[float, float, str, str]] = []  # (bytes, flops, opcode, meta)
+        self._walk(self.comps[self.entry], 1.0)
+        self.top_ops.sort(reverse=True)
+
+    # -- helpers -----------------------------------------------------------
+    def _true_bytes(self, comp: Computation, ref: str, depth: int = 0) -> float:
+        """Bytes of an operand, tracing through CPU bf16->f32 convert wrappers."""
+        op = comp.ops.get(ref)
+        if op is None:
+            if ref in comp.params:
+                dt, sh = comp.params[ref]
+                return _nbytes(dt, sh)
+            return 0.0
+        if depth < 3 and op.opcode in ("convert", "copy", "bitcast", "reshape"):
+            if op.operands:
+                return self._true_bytes(comp, op.operands[0], depth + 1)
+        if depth < 3 and op.opcode == "fusion" and _is_convert_fusion(op.name):
+            return sum(self._true_bytes(comp, o, depth + 1) for o in op.operands)
+        return _nbytes(op.dtype, op.shape)
+
+    def _operand_shape(self, comp: Computation, ref: str):
+        op = comp.ops.get(ref)
+        if op is not None:
+            return op.dtype, op.shape
+        if ref in comp.params:
+            return comp.params[ref]
+        return ("f32", ())
+
+    def _fusion_bytes(self, comp: Computation, op: Op) -> float:
+        """HBM traffic of a fusion, classified by what it actually does.
+
+        Scan xs-slicing / cache-slice extraction fusions touch only the slice
+        (2x output); token-write DUS fusions touch only the update (in-place
+        on the donated buffer); reductions read their full inputs; generic
+        elementwise fusions read each operand at most output-size (larger
+        operands are in-place-selected loop carries).
+        """
+        name = op.name
+        out_b = _nbytes(op.dtype, op.shape)
+        if name.startswith(("dynamic-slice", "slice")):
+            return 0.0  # fused into consumers on TPU (consumer counts the read)
+        if name.startswith(("copy", "transpose_copy", "bitcast")):
+            return 2.0 * out_b
+        if name.startswith("gather"):
+            return out_b
+        if "dynamic-update-slice" in name:
+            mc = re.search(r"calls=%?([\w.\-]+)", op.rest)
+            called = self.comps.get(mc.group(1)) if mc else None
+            upd = 0.0
+            if called:
+                for o2 in called.ops.values():
+                    if o2.opcode == "dynamic-update-slice" and len(o2.operands) > 1:
+                        dt, sh = self._operand_shape(called, o2.operands[1])
+                        upd += _nbytes(dt, sh)
+            return 2.0 * upd if upd else 2.0 * out_b
+        if name.startswith(("reduce", "wrapped_reduce")):
+            return out_b + sum(self._true_bytes(comp, o) for o in op.operands)
+        in_b = 0.0
+        for o in op.operands:
+            tb = self._true_bytes(comp, o)
+            in_b += min(tb, out_b) if out_b > 0 else tb
+        return out_b + in_b
+
+    def _fusion_dot_flops(self, comp: Computation) -> float:
+        f = 0.0
+        for op in comp.ops.values():
+            if op.opcode == "dot":
+                mcon = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+                lhs_dt, lhs_sh = self._operand_shape(comp, op.operands[0]) \
+                    if op.operands else ("f32", ())
+                k = 1
+                if mcon and lhs_sh:
+                    for d in mcon.group(1).split(","):
+                        if d.strip():
+                            k *= lhs_sh[int(d)]
+                out_elems = 1
+                for d in op.shape:
+                    out_elems *= d
+                f += 2.0 * out_elems * k
+        return f
+
+    # -- walk --------------------------------------------------------------
+    def _walk(self, comp: Computation, scale: float) -> None:
+        for name in comp.order:
+            op = comp.ops[name]
+            oc = op.opcode
+            if oc == "while":
+                m = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                b = re.search(r"body=%?([\w.\-]+)", op.rest)
+                trips = _trip_count(self.comps[m.group(1)]) if m and m.group(1) in self.comps else 1
+                if b and b.group(1) in self.comps:
+                    self._walk(self.comps[b.group(1)], scale * max(1, trips))
+                continue
+            if oc in ("call", "async-start"):
+                m = re.search(r"to_apply=%?([\w.\-]+)", op.rest)
+                if m and m.group(1) in self.comps:
+                    self._walk(self.comps[m.group(1)], scale)
+                continue
+            if oc == "conditional":
+                for m in re.finditer(r"%([\w.\-]+)", op.rest.split("),")[-1]):
+                    if m.group(1) in self.comps:
+                        self._walk(self.comps[m.group(1)], scale)
+                continue
+            if oc in _FREE_OPS:
+                continue
+
+            base = oc.replace("-start", "").replace("-done", "")
+            if base in _COLL_MULT:
+                if oc.endswith("-done"):
+                    continue
+                out_b = _nbytes(op.dtype, op.shape)
+                # tuple results: sum parts
+                if op.dtype == "tuple":
+                    out_b = sum(_nbytes(*_parse_shape(p))
+                                for p in re.findall(r"[a-z0-9]+\[[\d,]*\]", op.rest.split(")")[0]))
+                w = out_b * _COLL_MULT[base] * scale
+                self.wire += w
+                self.coll[base] += w
+                self.coll_counts[base] += int(scale)
+                self.bytes += 2 * out_b * scale  # local read+write
+                continue
+
+            f = 0.0
+            if oc == "dot":
+                lhs_dt, lhs_sh = self._operand_shape(comp, op.operands[0]) if op.operands else ("f32", ())
+                mcon = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+                k = 1
+                if mcon and lhs_sh:
+                    for d in mcon.group(1).split(","):
+                        if d.strip():
+                            k *= lhs_sh[int(d)]
+                out_elems = 1
+                for d in op.shape:
+                    out_elems *= d
+                f = 2.0 * out_elems * k
+            elif oc == "convolution":
+                out_elems = 1
+                for d in op.shape:
+                    out_elems *= d
+                _, lhs_sh = self._operand_shape(comp, op.operands[0]) if op.operands else ("f32", ())
+                _, rhs_sh = self._operand_shape(comp, op.operands[1]) if len(op.operands) > 1 else ("f32", ())
+                kernel = 1
+                for d in rhs_sh[:-1] if rhs_sh else ():
+                    kernel *= d
+                f = 2.0 * out_elems * max(1, kernel)
+
+            # bytes
+            if oc == "dynamic-update-slice":
+                upd = self._true_bytes(comp, op.operands[1]) if len(op.operands) > 1 else 0.0
+                b = 2.0 * upd
+            elif oc in ("dynamic-slice", "slice"):
+                # contiguous slices fuse into their consumers on TPU; the
+                # consumer's operand accounting counts the single read
+                b = 0.0
+            elif oc == "gather":
+                b = _nbytes(op.dtype, op.shape)  # random-access read
+            elif oc == "fusion" and _is_convert_fusion(op.name):
+                b = 0.0  # CPU bf16-legalization artifact; free on TPU
+            elif oc == "copy":
+                # loop-carried buffer copy: count at the original dtype
+                b = 2.0 * (self._true_bytes(comp, op.operands[0])
+                           if op.operands else _nbytes(op.dtype, op.shape))
+            elif oc == "fusion":
+                b = self._fusion_bytes(comp, op)
+                mc = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                if mc and mc.group(1) in self.comps:  # dots hidden in fusions
+                    f += self._fusion_dot_flops(self.comps[mc.group(1)])
+            else:
+                out_b = _nbytes(op.dtype, op.shape)
+                in_b = sum(self._true_bytes(comp, o) for o in op.operands)
+                b = out_b + in_b
+
+            self.flops += f * scale
+            self.bytes += b * scale
+            meta = re.search(r'op_name="([^"]*)"', op.rest)
+            self.top_ops.append((b * scale, f * scale, oc,
+                                 (meta.group(1) if meta else name)[:120]))
+
+    def summary(self) -> Dict[str, float]:
+        return {"flops": self.flops, "bytes": self.bytes, "wire": self.wire,
+                "collectives": dict(self.coll),
+                "collective_counts": dict(self.coll_counts)}
+
+    def profile(self, n: int = 20) -> List[str]:
+        out = []
+        for b, f, oc, meta in self.top_ops[:n]:
+            out.append(f"{b/1e6:10.1f} MB {f/1e9:9.2f} GF  {oc:22s} {meta}")
+        return out
+
+
+def analyze(text: str) -> Dict[str, float]:
+    return CostModel(text).summary()

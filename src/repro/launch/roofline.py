@@ -1,0 +1,89 @@
+"""Roofline report generator: reads the dry-run JSONL records and emits the
+EXPERIMENTS.md tables (per-cell three-term roofline, bottleneck, MODEL_FLOPS
+ratio, memory fit).
+
+  python -m repro.launch.roofline experiments/dryrun_results.jsonl [--md]
+
+Hardware model (v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI.
+Terms (per chip, per step):
+  compute    = HLO_FLOPs / peak          (trip-count-corrected, hlo_cost.py)
+  memory     = HLO_bytes / HBM_bw        (post-fusion op traffic, bf16-scaled)
+  collective = wire_bytes / ICI_bw       (ring multipliers, loop-aware)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+HBM_GB = 16.0
+
+
+def load(path: str) -> List[Dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def fmt_t(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:8.2f}s "
+    if x >= 1e-3:
+        return f"{x * 1e3:8.2f}ms"
+    return f"{x * 1e6:8.1f}us"
+
+
+def table(recs: List[Dict], md: bool = False) -> str:
+    rows = []
+    hdr = ("cell", "sparse", "t_compute", "t_memory", "t_coll", "bound",
+           "MF/HLO", "peak_GB", "fit", "step_est")
+    rows.append(hdr)
+    for r in recs:
+        if "error" in r:
+            rows.append((f"{r['arch']}/{r['shape']}", str(r.get("sparse", 0)),
+                         "ERROR", "", "", "", "", "", "", ""))
+            continue
+        peak = r["peak_bytes_per_chip"] / 1e9
+        cell = f"{r['arch']}/{r['shape']}"
+        step = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        rows.append((
+            cell, str(r.get("sparse", 0) or "-"),
+            fmt_t(r["t_compute"]), fmt_t(r["t_memory"]),
+            fmt_t(r["t_collective"]), r["bottleneck"][:4],
+            f"{r.get('useful_flops_ratio', 0):.2f}",
+            f"{peak:.1f}", "Y" if peak <= HBM_GB else "OVER",
+            fmt_t(step),
+        ))
+    widths = [max(len(str(row[i])) for row in rows) for i in range(len(hdr))]
+    sep = " | " if md else "  "
+    lines = []
+    for j, row in enumerate(rows):
+        line = sep.join(str(c).ljust(w) for c, w in zip(row, widths))
+        lines.append(("| " + line + " |") if md else line)
+        if md and j == 0:
+            lines.append("|" + "|".join("-" * (w + 2) for w in widths) + "|")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="experiments/dryrun_results.jsonl")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.path)
+    print(table(recs, md=args.md))
+    bad = [r for r in recs if "error" in r]
+    over = [r for r in recs if "error" not in r
+            and r["peak_bytes_per_chip"] > HBM_GB * 1e9]
+    print(f"\n{len(recs)} cells: {len(recs) - len(bad)} compiled, "
+          f"{len(bad)} errors, {len(over)} over {HBM_GB:.0f} GB HBM",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

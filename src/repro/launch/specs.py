@@ -1,0 +1,146 @@
+"""ShapeDtypeStruct input specs + step builders for the dry-run.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable stand-ins for
+every model input — no device allocation anywhere (params come from
+jax.eval_shape on init).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import registry
+from repro.optim import adamw
+from repro.sharding import rules
+from repro.train.step import make_train_step
+
+PyTree = Any
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    """Model inputs for one cell (batch dict for train/prefill; decode adds
+    token/pos and the cache comes from cache_specs)."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            out["patches"] = SDS((B, cfg.n_vision_tokens, cfg.d_model), cdt)
+        if cfg.family == "encdec":
+            out["frames"] = SDS((B, cfg.n_audio_frames, cfg.d_model), cdt)
+        return out
+    # decode: one new token against a cache of length S
+    out = {"token": SDS((B,), jnp.int32), "pos": SDS((B,), jnp.int32)}
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> PyTree:
+    B = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": NamedSharding(mesh, rules.batch_pspec(B, mesh, 1))}
+        if cfg.family == "vlm":
+            out["patches"] = NamedSharding(mesh, rules.batch_pspec(B, mesh, 2))
+        if cfg.family == "encdec":
+            out["frames"] = NamedSharding(mesh, rules.batch_pspec(B, mesh, 2))
+        return out
+    bp = NamedSharding(mesh, rules.batch_pspec(B, mesh, 0))
+    return {"token": bp, "pos": bp}
+
+
+def params_spec(cfg: ModelConfig) -> PyTree:
+    fam = registry.get_family(cfg)
+    rng = SDS((2,), jnp.uint32)
+    return jax.eval_shape(lambda r: fam.init_params(r, cfg), rng)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    fam = registry.get_family(cfg)
+    return jax.eval_shape(
+        lambda: fam.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def cache_shardings(cache_spec: PyTree, mesh: Mesh) -> PyTree:
+    def f(path, leaf):
+        name = rules._path_str(path)
+        if leaf.ndim == 5:  # KV cache (L, b, S, kvp, hd)
+            return NamedSharding(mesh, rules.cache_pspec(leaf.shape, mesh))
+        return NamedSharding(mesh, rules.ssm_cache_pspec(leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(f, cache_spec)
+
+
+# ---------------------------------------------------------------------------
+# step builders: return (jittable_fn, example_args, in_shardings, out_shardings)
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                tc: TrainConfig):
+    rules.set_mesh(mesh)
+    params_shape = params_spec(cfg)
+    ps = rules.params_shardings(params_shape, mesh, "train")
+    opt_shape = jax.eval_shape(adamw.init_opt_state, params_shape)
+    rep = NamedSharding(mesh, P())
+    opt_sh = adamw.OptState(step=rep, m=ps, v=ps)
+    batch = input_specs(cfg, shape)
+    bsh = batch_shardings(cfg, shape, mesh)
+
+    step = make_train_step(cfg, tc)
+    metrics_sh = {"loss": rep, "grad_norm": rep, "lr": rep, "step_ok": rep}
+    jitted = jax.jit(
+        step,
+        in_shardings=(ps, opt_sh, bsh),
+        out_shardings=(ps, opt_sh, metrics_sh),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (params_shape, opt_shape, batch)
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    rules.set_mesh(mesh)
+    params_shape = params_spec(cfg)
+    ps = rules.params_shardings(params_shape, mesh, "serve")
+    batch = input_specs(cfg, shape)
+    bsh = batch_shardings(cfg, shape, mesh)
+    fam = registry.get_family(cfg)
+
+    def fn(params, batch):
+        return fam.model_prefill(params, batch, cfg, shape.seq_len)
+
+    csh = cache_shardings(jax.eval_shape(
+        lambda p, b: fn(p, b)[1], params_shape, batch), mesh)
+    lsh = NamedSharding(mesh, rules.logits_pspec(shape.global_batch, mesh, False))
+    jitted = jax.jit(fn, in_shardings=(ps, bsh), out_shardings=(lsh, csh))
+    return jitted, (params_shape, batch)
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    rules.set_mesh(mesh)
+    params_shape = params_spec(cfg)
+    ps = rules.params_shardings(params_shape, mesh, "serve")
+    cache = cache_specs(cfg, shape)
+    csh = cache_shardings(cache, mesh)
+    inp = input_specs(cfg, shape)
+    ish = batch_shardings(cfg, shape, mesh)
+    fam = registry.get_family(cfg)
+
+    def fn(params, cache, token, pos):
+        return fam.model_decode(params, cache, token, pos, cfg)
+
+    lsh = NamedSharding(mesh, rules.logits_pspec(shape.global_batch, mesh, False))
+    jitted = jax.jit(fn, in_shardings=(ps, csh, ish["token"], ish["pos"]),
+                     out_shardings=(lsh, csh), donate_argnums=(1,))
+    return jitted, (params_shape, cache, inp["token"], inp["pos"])
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               tc: TrainConfig = None):
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, tc or TrainConfig(
+            num_microbatches=shape.num_microbatches, remat_policy="minimal"))
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_decode(cfg, shape, mesh)

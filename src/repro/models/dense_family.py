@@ -1,0 +1,30 @@
+"""Registry adapter for the dense decoder family (batch-dict interface)."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as T
+
+
+def init_params(rng, cfg: ModelConfig):
+    return T.init_params(rng, cfg)
+
+
+def model_forward(params, batch, cfg: ModelConfig, *, stats=None,
+                  remat_policy="none"):
+    return T.forward(params, batch["tokens"], cfg, stats=stats,
+                     remat_block=cm.wrap_block(remat_policy, T.apply_block))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return T.init_cache(cfg, batch, max_len)
+
+
+def model_prefill(params, batch, cfg: ModelConfig, max_len: int, stats=None):
+    return T.prefill(params, batch["tokens"], cfg, max_len, stats=stats)
+
+
+def model_decode(params, cache, token, pos, cfg: ModelConfig, stats=None,
+                 ffn_masks=None):
+    return T.decode_step(params, cache, token, pos, cfg, stats=stats,
+                         ffn_masks=ffn_masks)

@@ -1,0 +1,245 @@
+"""Whisper-style encoder-decoder family.
+
+The conv frontend is a STUB: input_specs provides precomputed frame
+embeddings (b, n_audio_frames, d_model). Encoder = bidirectional transformer
+over frames + sinusoidal positions; decoder = causal self-attention +
+cross-attention to the encoder output + FFN. Relufication applies to both
+stacks' FFNs (GELU -> ReLU) and stage-2 post-norm ReLU.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as T
+from repro.sharding import rules
+
+PyTree = Any
+
+
+def sinusoid(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+def init_dec_block(rng, cfg: ModelConfig, dtype) -> PyTree:
+    ks = jax.random.split(rng, 3)
+    return {
+        "ln1": cm.init_norm(cfg, cfg.d_model, dtype),
+        "attn": T.init_attn(ks[0], cfg, dtype),
+        "lnx": cm.init_norm(cfg, cfg.d_model, dtype),
+        "xattn": T.init_attn(ks[1], cfg, dtype),
+        "ln2": cm.init_norm(cfg, cfg.d_model, dtype),
+        "ffn": T.init_ffn(ks[2], cfg, dtype),
+    }
+
+
+def init_params(rng, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    vp = cm.padded_vocab(cfg.vocab_size)
+    ks = jax.random.split(rng, 5)
+    enc = jax.vmap(lambda k: T.init_block(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.n_encoder_layers))
+    dec = jax.vmap(lambda k: init_dec_block(k, cfg, dtype))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "embed": cm.embed_init(ks[2], (vp, cfg.d_model), dtype),
+        "pos_embed": cm.embed_init(ks[3], (cfg.max_seq_len, cfg.d_model), dtype),
+        "enc_layers": enc,
+        "enc_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+        "dec_layers": dec,
+        "final_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, *, stats, remat_policy="none"):
+    """frames: (b, n_frames, d) stub embeddings -> encoder output."""
+    b, nf, d = frames.shape
+    x = frames + jnp.asarray(sinusoid(nf, d), frames.dtype)
+    x = rules.constrain(x, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(nf), (b, nf))
+
+    base = T.apply_block
+
+    def enc_block(p, x, cfg_, *, positions, stats, return_kv=False):
+        return base(p, x, cfg_, positions=positions, stats=stats,
+                    causal=False)
+    block = cm.wrap_block(remat_policy, enc_block)
+
+    def body(x, pl_i):
+        return block(pl_i, x, cfg, positions=positions, stats=stats), None
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return cm.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _cross_kv(p, enc_out, cfg: ModelConfig):
+    """K/V from the encoder output with the cross-attn projections."""
+    g = T.attn_geometry(cfg)
+    b, se, d = enc_out.shape
+    k = jnp.einsum("bsd,dkh->bskh", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return k, v
+
+
+def _cross_attend(p, h, kx, vx, cfg: ModelConfig, *, stats):
+    """h: (b, s, d) decoder states; kx/vx: (b, se, kvp, hd)."""
+    g = T.attn_geometry(cfg)
+    b, s, d = h.shape
+    q = jnp.einsum("bsd,dqh->bsqh", h, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    qg = q.reshape(b, s, g.kvp, g.group, g.head_dim)
+    o = cm.flash_attention(qg, kx, vx, causal=False)
+    return T._attn_out(p, o.reshape(b, s, g.hp, g.head_dim), cfg)
+
+
+def apply_dec_block(p, x, cfg: ModelConfig, enc_out, *, positions, stats,
+                    return_kv=False):
+    h = T.post_norm(cm.apply_norm(p["ln1"], x, cfg), cfg)
+    if return_kv:
+        a, kv = T.apply_attn_full(p["attn"], h, cfg, positions=positions,
+                                  stats=stats, return_kv=True)
+    else:
+        a = T.apply_attn_full(p["attn"], h, cfg, positions=positions, stats=stats)
+    x = x + a
+    h = T.post_norm(cm.apply_norm(p["lnx"], x, cfg), cfg)
+    kx, vx = _cross_kv(p["xattn"], enc_out, cfg)
+    x = x + _cross_attend(p["xattn"], h, kx, vx, cfg, stats=stats)
+    h = T.post_norm(cm.apply_norm(p["ln2"], x, cfg), cfg)
+    b, s, d = h.shape
+    x = x + T.apply_ffn(p["ffn"], h.reshape(b * s, d), cfg,
+                        stats=stats).reshape(b, s, d)
+    return (x, kv) if return_kv else x
+
+
+def model_forward(params, batch, cfg: ModelConfig, *, stats=None,
+                  remat_policy="none"):
+    stats = stats or cm.StatsCollector(False)
+    params = cm.cast_params(params, cfg)
+    enc_out = encode(params, batch["frames"], cfg, stats=stats,
+                     remat_policy=remat_policy)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0) \
+        + jnp.take(params["pos_embed"], positions, axis=0)
+    x = rules.constrain(x.astype(enc_out.dtype), "dp", None, None)
+
+    def dec(p, x_, cfg_, *, positions, stats, return_kv=False):
+        return apply_dec_block(p, x_, cfg_, enc_out, positions=positions,
+                               stats=stats, return_kv=return_kv)
+    block = cm.wrap_block(remat_policy, dec)
+
+    def body(x, pl_i):
+        return block(pl_i, x, cfg, positions=positions, stats=stats), None
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    return T.logits_from(params, x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    g = T.attn_geometry(cfg)
+    L = cfg.n_layers
+    return {  # head-major KV layout (see models/common.decode_attention)
+        "k": jnp.zeros((L, batch, g.kvp, max_len, g.head_dim), dtype),
+        "v": jnp.zeros((L, batch, g.kvp, max_len, g.head_dim), dtype),
+        "xk": jnp.zeros((L, batch, g.kvp, cfg.n_audio_frames, g.head_dim), dtype),
+        "xv": jnp.zeros((L, batch, g.kvp, cfg.n_audio_frames, g.head_dim), dtype),
+    }
+
+
+def model_prefill(params, batch, cfg: ModelConfig, max_len: int, stats=None):
+    stats = stats or cm.StatsCollector(False)
+    params_c = cm.cast_params(params, cfg)
+    enc_out = encode(params_c, batch["frames"], cfg, stats=stats)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = (jnp.take(params_c["embed"], tokens, axis=0)
+         + jnp.take(params_c["pos_embed"], positions, axis=0)).astype(enc_out.dtype)
+
+    def body(x, pl_i):
+        kx, vx = _cross_kv(pl_i["xattn"], enc_out, cfg)
+        x, kv = apply_dec_block(pl_i, x, cfg, enc_out, positions=positions,
+                                stats=stats, return_kv=True)
+        return x, (kv[0], kv[1], kx, vx)
+    x, (k, v, xk, xv) = jax.lax.scan(body, x, params_c["dec_layers"])
+    x = cm.apply_norm(params_c["final_norm"], x, cfg)
+    logits = T.logits_from(params_c, x, cfg)
+    k = k.transpose(0, 1, 3, 2, 4)  # head-major
+    v = v.transpose(0, 1, 3, 2, 4)
+    xk = xk.transpose(0, 1, 3, 2, 4)
+    xv = xv.transpose(0, 1, 3, 2, 4)
+    pad = max_len - k.shape[3]
+    if pad > 0:
+        zeros = jnp.zeros(k.shape[:3] + (pad,) + k.shape[4:], k.dtype)
+        k = jnp.concatenate([k, zeros], axis=3)
+        v = jnp.concatenate([v, zeros], axis=3)
+    return logits[:, -1], {"k": k, "v": v, "xk": xk, "xv": xv}
+
+
+def apply_dec_block_decode(p, x, cfg, kc, vc, xk, xv, pos, *, stats, layer):
+    h = T.post_norm(cm.apply_norm(p["ln1"], x[:, None], cfg)[:, 0], cfg)
+    a, kc, vc = T.apply_attn_decode(p["attn"], h, cfg, kc, vc, pos,
+                                    stats=stats, layer=layer)
+    x = x + a
+    h = T.post_norm(cm.apply_norm(p["lnx"], x[:, None], cfg)[:, 0], cfg)
+    g = T.attn_geometry(cfg)
+    q = jnp.einsum("bd,dqh->bqh", h, p["xattn"]["wq"])
+    if cfg.qkv_bias:
+        q = q + p["xattn"]["bq"]
+    xk_l = jax.lax.dynamic_index_in_dim(xk, layer, 0, keepdims=False)
+    xv_l = jax.lax.dynamic_index_in_dim(xv, layer, 0, keepdims=False)
+    se = xk_l.shape[2]  # head-major (b, kvp, se, hd)
+    o = cm.decode_attention(q.reshape(-1, g.kvp, g.group, g.head_dim),
+                            xk_l, xv_l,
+                            jnp.full((x.shape[0],), se - 1, jnp.int32))
+    xo = T._attn_out(p["xattn"],
+                     o.reshape(o.shape[0], 1, g.hp, g.head_dim), cfg)[:, 0]
+    x = x + xo
+    h = T.post_norm(cm.apply_norm(p["ln2"], x[:, None], cfg)[:, 0], cfg)
+    x = x + T.apply_ffn(p["ffn"], h, cfg, stats=stats, decode=True)
+    return x, kc, vc
+
+
+def model_decode(params, cache, token, pos, cfg: ModelConfig, stats=None):
+    stats = stats or cm.StatsCollector(False)
+    params = cm.cast_params(params, cfg)
+    x = (jnp.take(params["embed"], token, axis=0)
+         + jnp.take(params["pos_embed"], pos, axis=0))
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+
+    if stats.active:
+        kc, vc = cache["k"], cache["v"]
+        for i in range(cfg.n_layers):
+            pl_i = jax.tree.map(lambda a: a[i], params["dec_layers"])
+            x, kc, vc = apply_dec_block_decode(
+                pl_i, x, cfg, kc, vc, cache["xk"], cache["xv"], pos,
+                stats=stats, layer=i)
+        new_cache = dict(cache, k=kc, v=vc)
+    else:
+        def body(carry, xs):
+            x, kc, vc = carry
+            pl_i, li = xs
+            x, kc, vc = apply_dec_block_decode(
+                pl_i, x, cfg, kc, vc, cache["xk"], cache["xv"], pos,
+                stats=stats, layer=li)
+            return (x, kc, vc), None
+        (x, kc, vc), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["dec_layers"], jnp.arange(cfg.n_layers)))
+        new_cache = dict(cache, k=kc, v=vc)
+
+    x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
+    return T.logits_from(params, x, cfg), new_cache

@@ -1,0 +1,375 @@
+"""Zamba-2 hybrid family: Mamba-2 (SSD) backbone + ONE shared attention+FFN
+block applied every `attn_every` layers (13 applications over 81 layers).
+
+Mamba-2 uses the SSD chunked algorithm (matmul form — MXU friendly):
+intra-chunk quadratic attention-like matmuls with decay masks, inter-chunk
+state recurrence via a cheap scan over chunks.
+
+Relufication: the shared attention block's FFN relufies exactly like dense
+(stages 1+2); the Mamba-2 gate (SiLU on z) relufies like falcon-mamba,
+sparsifying the out_proj input (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import activations as acts
+from repro.models import common as cm
+from repro.models import transformer as T
+from repro.sharding import rules
+
+PyTree = Any
+
+
+def init_mamba2(rng, cfg: ModelConfig, dtype) -> PyTree:
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    k = cfg.ssm_conv
+    ks = jax.random.split(rng, 3)
+    return {
+        "norm": cm.init_norm(cfg, d, dtype),
+        "ssm": {
+            # in_proj -> [z(di), x(di), B(st), C(st), dt(nh)]
+            "in_proj": cm.dense_init(ks[0], (d, 2 * di + 2 * st + nh), d, dtype),
+            "conv_w": cm.dense_init(ks[1], (k, di), k, dtype),
+            "conv_b": jnp.zeros((di,), dtype),
+            "A_log": jnp.zeros((nh,), dtype),  # A = -exp(A_log) = -1
+            "D": jnp.ones((nh,), dtype),
+            "dt_bias": jnp.full((nh,), -4.6, dtype),
+            "gnorm": jnp.ones((di,), dtype),  # gated RMSNorm before out_proj
+            "out_proj": cm.dense_init(ks[2], (di, d), di, dtype),
+        },
+    }
+
+
+def _split_in_proj(p, h_in, cfg: ModelConfig):
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    zxbcdt = h_in @ p["in_proj"]
+    return jnp.split(zxbcdt, [di, 2 * di, 2 * di + st, 2 * di + 2 * st], axis=-1)
+
+
+def _gated_out(p, y, z, cfg, act, stats):
+    """y, z: (..., di). Gated RMSNorm then (possibly sparse) out_proj."""
+    stats.add_preact("gate_pre", z)
+    g = y * act(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(jnp.square(gf), axis=-1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(var + 1e-6)).astype(y.dtype) * p["gnorm"]
+    stats.add_sparsity("down_in", g)
+    dens = cfg.sparsity.ffn_tile_density if cfg.sparsity.enabled else 1.0
+    flat = g.reshape(-1, g.shape[-1])
+    out = cm.maybe_sparse_matmul(flat, p["out_proj"], cfg,
+                                 dens if g.ndim == 2 else 1.0)
+    return out.reshape(g.shape[:-1] + (p["out_proj"].shape[-1],))
+
+
+def apply_mamba2_block(p, x, cfg: ModelConfig, *, positions=None, stats,
+                       return_kv=False):
+    """SSD chunked scan. x: (b, s, d)."""
+    assert not return_kv
+    b, s, d = x.shape
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    hd = cfg.ssm_head_dim
+    act = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+    Q = cm._largest_divisor_leq(s, cfg.ssm_chunk)
+    nc = s // Q
+
+    h_in = cm.apply_norm(p["norm"], x, cfg)
+    if cfg.post_norm_relu:
+        h_in = jax.nn.relu(h_in)
+    stats.add_sparsity("qkv_in", h_in)
+    z, xs, B, C, dt = _split_in_proj(p["ssm"], h_in, cfg)
+    xs = rules.constrain(xs, "dp", None, "model")
+    xs = act(jnp.pad(_causal_conv_seq(xs, p["ssm"]), ((0, 0), (0, 0), (0, 0))))
+    dt = jax.nn.softplus(dt + p["ssm"]["dt_bias"]).astype(jnp.float32)  # (b,s,nh)
+    A = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))  # (nh,)
+    la = dt * A  # (b, s, nh) log-decay per step
+
+    xh = xs.reshape(b, nc, Q, nh, hd)
+    lac = la.reshape(b, nc, Q, nh)
+    Bc = B.reshape(b, nc, Q, st).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, st).astype(jnp.float32)
+    cum = jnp.cumsum(lac, axis=2)  # (b, nc, Q, nh)
+
+    # intra-chunk: y[i] = sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) x_j dt_j
+    dtc = dt.reshape(b, nc, Q, nh)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (b,nc,Q,Q,nh)
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    w = scores[..., None] * decay * tri[None, None, :, :, None]
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w,
+                         dtc, xh.astype(jnp.float32))
+
+    # chunk states: S_c = sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    dec_out = jnp.exp(cum[:, :, -1:, :] - cum)  # (b, nc, Q, nh)
+    S = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, dec_out * dtc,
+                   xh.astype(jnp.float32))  # (b, nc, nh, st, hd)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b, nc, nh)
+
+    def chunk_scan(H, inp):
+        S_c, dec_c = inp
+        H_new = dec_c[:, :, None, None] * H + S_c
+        return H_new, H
+
+    S_t = S.transpose(1, 0, 2, 3, 4)
+    d_t = chunk_decay.transpose(1, 0, 2)
+    H_last, H_prefix = jax.lax.scan(
+        chunk_scan, jnp.zeros((b, nh, st, hd), jnp.float32), (S_t, d_t))
+    H_prefix = H_prefix.transpose(1, 0, 2, 3, 4)  # state BEFORE each chunk
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cum), H_prefix)
+    y = (y_intra + y_inter).astype(x.dtype).reshape(b, s, nh, hd)
+    y = y + p["ssm"]["D"][None, None, :, None] * xs.reshape(b, s, nh, hd)
+    y = y.reshape(b, s, di)
+    out = _gated_out(p["ssm"], y, z, cfg, act, stats)
+    return x + rules.constrain(out, "dp", None, None)
+
+
+def _causal_conv_seq(x, pssm):
+    k = pssm["conv_w"].shape[0]
+    out = x * pssm["conv_w"][k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * pssm["conv_w"][k - 1 - i]
+    return out + pssm["conv_b"]
+
+
+def apply_mamba2_decode(p, x, cfg: ModelConfig, ssm_state, conv_state, *,
+                        stats, layer):
+    """One-token SSD step. ssm_state: (L,b,nh,st,hd); conv_state: (L,b,k-1,di)."""
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    act = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+    h_in = cm.apply_norm(p["norm"], x[:, None], cfg)[:, 0]
+    if cfg.post_norm_relu:
+        h_in = jax.nn.relu(h_in)
+    z, xs, B, C, dt = _split_in_proj(p["ssm"], h_in, cfg)
+
+    conv_l = jax.lax.dynamic_index_in_dim(conv_state, layer, 0, keepdims=False)
+    win = jnp.concatenate([conv_l, xs[:, None]], axis=1)  # (b, k, di)
+    xs = act(jnp.einsum("bkd,kd->bd", win, p["ssm"]["conv_w"]) + p["ssm"]["conv_b"])
+    conv_state = jax.lax.dynamic_update_slice(
+        conv_state, win[None, :, 1:], (layer, 0, 0, 0))
+
+    dt = jax.nn.softplus(dt + p["ssm"]["dt_bias"]).astype(jnp.float32)  # (b, nh)
+    A = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * A)  # (b, nh)
+    xh = xs.reshape(-1, nh, hd).astype(jnp.float32)
+    h_l = jax.lax.dynamic_index_in_dim(ssm_state, layer, 0, keepdims=False)
+    h_new = dec[:, :, None, None] * h_l.astype(jnp.float32) \
+        + jnp.einsum("bn,bh,bhp->bhnp", B.astype(jnp.float32), dt, xh)
+    ssm_state = jax.lax.dynamic_update_slice(
+        ssm_state, h_new.astype(ssm_state.dtype)[None], (layer, 0, 0, 0, 0))
+
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), h_new).astype(x.dtype)
+    y = y + p["ssm"]["D"][None, :, None] * xs.reshape(-1, nh, hd)
+    out = _gated_out(p["ssm"], y.reshape(-1, di), z, cfg, act, stats)
+    return x + out, ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# hybrid assembly: segments of mamba layers + the shared attention block
+
+
+def _segments(cfg: ModelConfig) -> List[Tuple[int, int, bool]]:
+    """[(start, end, attn_after)]: mamba layers [start:end), then maybe attn."""
+    ae = cfg.attn_every or cfg.n_layers + 1
+    out = []
+    i = 0
+    while i < cfg.n_layers:
+        j = min(i + ae, cfg.n_layers)
+        out.append((i, j, j - i == ae))
+        i = j
+    return out
+
+
+def init_params(rng, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    vp = cm.padded_vocab(cfg.vocab_size)
+    ks = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: init_mamba2(k, cfg, dtype))(layer_keys)
+    return {"embed": cm.embed_init(ks[1], (vp, cfg.d_model), dtype),
+            "layers": layers,
+            "shared": T.init_block(ks[2], cfg, dtype),  # ONE shared attn+FFN
+            "final_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+            "unembed": cm.embed_init(ks[3], (vp, cfg.d_model), dtype)}
+
+
+def model_forward(params, batch, cfg: ModelConfig, *, stats=None,
+                  remat_policy="none"):
+    stats = stats or cm.StatsCollector(False)
+    params = cm.cast_params(params, cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = T.embed_tokens(params, tokens, cfg, positions)
+    x = rules.constrain(x, "dp", None, None)
+    mblock = cm.wrap_block(remat_policy, apply_mamba2_block)
+    ablock = cm.wrap_block(remat_policy, T.apply_block)
+
+    for (i0, i1, attn_after) in _segments(cfg):
+        seg = jax.tree.map(lambda a: a[i0:i1], params["layers"])
+
+        def body(x, pl_i):
+            return mblock(pl_i, x, cfg, positions=positions, stats=stats), None
+        x, _ = jax.lax.scan(body, x, seg)
+        if attn_after:
+            x = ablock(params["shared"], x, cfg, positions=positions, stats=stats)
+
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    return T.logits_from(params, x, cfg)
+
+
+def n_attn_applications(cfg: ModelConfig) -> int:
+    return sum(1 for (_, _, a) in _segments(cfg) if a)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    L, di, st, k = cfg.n_layers, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh, hd = cfg.n_ssm_heads, cfg.ssm_head_dim
+    g = T.attn_geometry(cfg)
+    na = n_attn_applications(cfg)
+    return {"ssm": jnp.zeros((L, batch, nh, st, hd), dtype),
+            "conv": jnp.zeros((L, batch, k - 1, di), dtype),
+            # head-major KV layout (see models/common.decode_attention)
+            "k": jnp.zeros((na, batch, g.kvp, max_len, g.head_dim), dtype),
+            "v": jnp.zeros((na, batch, g.kvp, max_len, g.head_dim), dtype)}
+
+
+def model_prefill(params, batch, cfg: ModelConfig, max_len: int, stats=None):
+    stats = stats or cm.StatsCollector(False)
+    params_c = cm.cast_params(params, cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = T.embed_tokens(params_c, tokens, cfg, positions)
+
+    ssm_states, conv_states, kvs = [], [], []
+    for (i0, i1, attn_after) in _segments(cfg):
+        seg = jax.tree.map(lambda a: a[i0:i1], params_c["layers"])
+
+        def body(x, pl_i):
+            x, (h_last, conv_tail) = _mamba2_with_state(pl_i, x, cfg, stats=stats)
+            return x, (h_last, conv_tail)
+        x, (hs, tails) = jax.lax.scan(body, x, seg)
+        ssm_states.append(hs)
+        conv_states.append(tails)
+        if attn_after:
+            x, kv = T.apply_block(params_c["shared"], x, cfg,
+                                  positions=positions, stats=stats,
+                                  return_kv=True)
+            kvs.append(kv)
+
+    x = cm.apply_norm(params_c["final_norm"], x, cfg)
+    logits = T.logits_from(params_c, x, cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    ssm_states = [jnp.concatenate(ssm_states)]
+    conv_states = [jnp.concatenate(conv_states)]
+    k = jnp.stack([kv[0] for kv in kvs]) if kvs else jnp.zeros((0,))
+    v = jnp.stack([kv[1] for kv in kvs]) if kvs else jnp.zeros((0,))
+    if kvs:
+        k = k.transpose(0, 1, 3, 2, 4)  # head-major
+        v = v.transpose(0, 1, 3, 2, 4)
+    pad = max_len - k.shape[3]
+    if pad > 0:
+        zeros = jnp.zeros(k.shape[:3] + (pad,) + k.shape[4:], k.dtype)
+        k = jnp.concatenate([k, zeros], axis=3)
+        v = jnp.concatenate([v, zeros], axis=3)
+    return logits[:, -1], {"ssm": ssm_states[0].astype(cdt),
+                           "conv": conv_states[0].astype(cdt),
+                           "k": k.astype(cdt), "v": v.astype(cdt)}
+
+
+def _mamba2_with_state(p, x, cfg, *, stats):
+    """Full-seq SSD + final state extraction (for prefill)."""
+    b, s, d = x.shape
+    k = cfg.ssm_conv
+    # final conv tail = last (k-1) pre-conv inputs
+    h_in = cm.apply_norm(p["norm"], x, cfg)
+    if cfg.post_norm_relu:
+        h_in = jax.nn.relu(h_in)
+    _, xs_raw, _, _, _ = _split_in_proj(p["ssm"], h_in, cfg)
+    conv_tail = xs_raw[:, -(k - 1):]
+    # rerun the chunked block for outputs + final state via the chunk scan
+    x_out, h_last = _mamba2_scan_with_last(p, x, cfg, stats)
+    return x_out, (h_last, conv_tail)
+
+
+def _mamba2_scan_with_last(p, x, cfg, stats):
+    """Same math as apply_mamba2_block but also returns the final SSD state."""
+    b, s, d = x.shape
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    act = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+    Q = cm._largest_divisor_leq(s, cfg.ssm_chunk)
+    nc = s // Q
+    h_in = cm.apply_norm(p["norm"], x, cfg)
+    if cfg.post_norm_relu:
+        h_in = jax.nn.relu(h_in)
+    z, xs, B, C, dt = _split_in_proj(p["ssm"], h_in, cfg)
+    xs = act(_causal_conv_seq(xs, p["ssm"]))
+    dt = jax.nn.softplus(dt + p["ssm"]["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))
+    la = dt * A
+
+    xh = xs.reshape(b, nc, Q, nh, hd)
+    lac = la.reshape(b, nc, Q, nh)
+    Bc = B.reshape(b, nc, Q, st).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, st).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, Q, nh)
+    cum = jnp.cumsum(lac, axis=2)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    w = scores[..., None] * decay * tri[None, None, :, :, None]
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w, dtc, xh.astype(jnp.float32))
+    dec_out = jnp.exp(cum[:, :, -1:, :] - cum)
+    S = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, dec_out * dtc, xh.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def chunk_scan(H, inp):
+        S_c, dec_c = inp
+        return dec_c[:, :, None, None] * H + S_c, H
+
+    H_last, H_prefix = jax.lax.scan(
+        chunk_scan, jnp.zeros((b, nh, st, hd), jnp.float32),
+        (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    H_prefix = H_prefix.transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cum), H_prefix)
+    y = (y_intra + y_inter).astype(x.dtype).reshape(b, s, nh, hd)
+    y = y + p["ssm"]["D"][None, None, :, None] * xs.reshape(b, s, nh, hd)
+    out = _gated_out(p["ssm"], y.reshape(b, s, di), z, cfg, act, stats)
+    return x + out, H_last
+
+
+def model_decode(params, cache, token, pos, cfg: ModelConfig, stats=None):
+    stats = stats or cm.StatsCollector(False)
+    params = cm.cast_params(params, cfg)
+    x = T.embed_tokens(params, token[:, None], cfg, pos[:, None])[:, 0]
+    ssm, conv = cache["ssm"], cache["conv"]
+    kc, vc = cache["k"], cache["v"]
+
+    attn_idx = 0
+    for (i0, i1, attn_after) in _segments(cfg):
+        seg = jax.tree.map(lambda a: a[i0:i1], params["layers"])
+
+        def body(carry, xs_):
+            x, ssm, conv = carry
+            pl_i, li = xs_
+            x, ssm, conv = apply_mamba2_decode(pl_i, x, cfg, ssm, conv,
+                                               stats=stats, layer=li)
+            return (x, ssm, conv), None
+        (x, ssm, conv), _ = jax.lax.scan(
+            body, (x, ssm, conv), (seg, jnp.arange(i0, i1)))
+        if attn_after:
+            x, kc, vc = T.apply_block_decode(params["shared"], x, cfg, kc, vc,
+                                             pos, stats=stats, layer=attn_idx)
+            attn_idx += 1
+
+    x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
+    new_cache = {"ssm": ssm, "conv": conv, "k": kc, "v": vc}
+    return T.logits_from(params, x, cfg), new_cache

@@ -1,0 +1,289 @@
+"""Mamba-1 family (falcon-mamba-7b) — attention-free selective SSM.
+
+Train/prefill uses jax.lax.associative_scan over the sequence (parallel
+prefix, O(log s) depth); decode is the O(1) recurrence with an SSM state +
+conv ring buffer carried in the cache.
+
+Relufication (DESIGN.md §5): mamba has no FFN, but the *gate* non-linearity
+(SiLU on z) plays the same role — swapping it for ReLU makes the out_proj
+input sparse, and the paper's row-skipping applies to out_proj exactly as it
+does to a down projection. Stage-2 post-norm ReLU applies before in_proj.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import activations as acts
+from repro.models import common as cm
+from repro.sharding import rules
+
+PyTree = Any
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def init_ssm(rng, cfg: ModelConfig, dtype) -> PyTree:
+    d, di, st, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dr = dt_rank(cfg)
+    ks = jax.random.split(rng, 5)
+    A = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": cm.dense_init(ks[0], (d, 2 * di), d, dtype),
+        "conv_w": cm.dense_init(ks[1], (k, di), k, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": cm.dense_init(ks[2], (di, dr + 2 * st), di, dtype),
+        "dt_proj": cm.dense_init(ks[3], (dr, di), dr, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": cm.dense_init(ks[4], (di, d), di, dtype),
+    }
+
+
+def init_block(rng, cfg: ModelConfig, dtype) -> PyTree:
+    return {"norm": cm.init_norm(cfg, cfg.d_model, dtype),
+            "ssm": init_ssm(rng, cfg, dtype)}
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via k shifted adds. x: (b, s, di); w: (k, di)."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[k - 1 - i]
+    return out + b
+
+
+def _ssm_inputs(p, h_in, cfg: ModelConfig, stats):
+    """Shared between scan and step: project + conv + gate activations."""
+    act = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+    dr, st = dt_rank(cfg), cfg.ssm_state
+    xz = h_in @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    return x1, z, act, dr, st
+
+
+def apply_block(p, x, cfg: ModelConfig, *, positions=None, stats,
+                return_kv=False):
+    """x: (b, s, d) -> (b, s, d). Full-sequence selective scan."""
+    assert not return_kv
+    b, s, d = x.shape
+    di, st = cfg.d_inner, cfg.ssm_state
+    h_in = cm.apply_norm(p["norm"], x, cfg)
+    if cfg.post_norm_relu:  # stage-2 relufication
+        h_in = jax.nn.relu(h_in)
+    stats.add_sparsity("qkv_in", h_in)
+    x1, z, act, dr, _ = _ssm_inputs(p["ssm"], h_in, cfg, stats)
+    x1 = rules.constrain(x1, "dp", None, "model")
+    x1 = act(_causal_conv(x1, p["ssm"]["conv_w"], p["ssm"]["conv_b"]))
+
+    proj = x1 @ p["ssm"]["x_proj"]  # (b, s, dr + 2 st)
+    dtr, B, C = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(dtr @ p["ssm"]["dt_proj"] + p["ssm"]["dt_bias"])
+    A = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))  # (di, st)
+
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)  # (b, s, di, st)
+    dBx = (dt * x1).astype(jnp.float32)[..., None] * B.astype(jnp.float32)[:, :, None, :]
+    dA = rules.constrain(dA, "dp", None, "model", None)
+    dBx = rules.constrain(dBx, "dp", None, "model", None)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs.astype(x1.dtype), C) \
+        + p["ssm"]["D"] * x1
+    g = act(z)
+    stats.add_preact("gate_pre", z)
+    y = y * g
+    stats.add_sparsity("down_in", y)
+    y2 = y.reshape(b * s, di)
+    out = cm.maybe_sparse_matmul(
+        y2, p["ssm"]["out_proj"], cfg,
+        1.0).reshape(b, s, d)
+    return x + rules.constrain(out, "dp", None, None)
+
+
+def apply_block_decode(p, x, cfg: ModelConfig, ssm_state, conv_state, pos, *,
+                       stats, layer=None):
+    """One-token step. ssm_state: (L, b, di, st); conv_state: (L, b, k-1, di)."""
+    b, d = x.shape
+    di, st, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    h_in = cm.apply_norm(p["norm"], x[:, None], cfg)[:, 0]
+    if cfg.post_norm_relu:
+        h_in = jax.nn.relu(h_in)
+    x1, z, act, dr, _ = _ssm_inputs(p["ssm"], h_in, cfg, stats)
+
+    conv_l = jax.lax.dynamic_index_in_dim(conv_state, layer, 0, keepdims=False)
+    win = jnp.concatenate([conv_l, x1[:, None]], axis=1)  # (b, k, di)
+    y1 = jnp.einsum("bkd,kd->bd", win, p["ssm"]["conv_w"]) + p["ssm"]["conv_b"]
+    x1 = act(y1)
+    conv_state = jax.lax.dynamic_update_slice(
+        conv_state, win[None, :, 1:], (layer, 0, 0, 0))
+
+    proj = x1 @ p["ssm"]["x_proj"]
+    dtr, B, C = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(dtr @ p["ssm"]["dt_proj"] + p["ssm"]["dt_bias"])
+    A = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))
+
+    h_l = jax.lax.dynamic_index_in_dim(ssm_state, layer, 0, keepdims=False)
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)  # (b, di, st)
+    dBx = (dt * x1).astype(jnp.float32)[..., None] * B.astype(jnp.float32)[:, None, :]
+    h_new = dA * h_l.astype(jnp.float32) + dBx
+    ssm_state = jax.lax.dynamic_update_slice(
+        ssm_state, h_new.astype(ssm_state.dtype)[None], (layer, 0, 0, 0))
+
+    y = jnp.einsum("bdn,bn->bd", h_new.astype(x1.dtype), C) + p["ssm"]["D"] * x1
+    stats.add_preact("gate_pre", z)
+    y = y * act(z)
+    stats.add_sparsity("down_in", y)
+    dens = cfg.sparsity.ffn_tile_density if cfg.sparsity.enabled else 1.0
+    out = cm.maybe_sparse_matmul(y, p["ssm"]["out_proj"], cfg, dens)
+    return x + out, ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# family interface
+
+
+def init_params(rng, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    vp = cm.padded_vocab(cfg.vocab_size)
+    ks = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: init_block(k, cfg, dtype))(layer_keys)
+    return {"embed": cm.embed_init(ks[1], (vp, cfg.d_model), dtype),
+            "layers": layers,
+            "final_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+            "unembed": cm.embed_init(ks[2], (vp, cfg.d_model), dtype)}
+
+
+def model_forward(params, batch, cfg: ModelConfig, *, stats=None,
+                  remat_policy="none"):
+    from repro.models import transformer as T
+    stats = stats or cm.StatsCollector(False)
+    params = cm.cast_params(params, cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = T.embed_tokens(params, tokens, cfg, positions)
+    x = rules.constrain(x, "dp", None, None)
+    block = cm.wrap_block(remat_policy, apply_block)
+
+    if stats.active:
+        for i in range(cfg.n_layers):
+            pl_i = jax.tree.map(lambda a: a[i], params["layers"])
+            sub = cm.StatsCollector(True)
+            x = block(pl_i, x, cfg, positions=positions, stats=sub)
+            for k_, v_ in sub.stats.items():
+                stats.stats[f"layer{i}/{k_}"] = v_
+    else:
+        def body(x, pl_i):
+            return block(pl_i, x, cfg, positions=positions, stats=stats), None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    return T.logits_from(params, x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    L, di, st, k = cfg.n_layers, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {"ssm": jnp.zeros((L, batch, di, st), dtype),
+            "conv": jnp.zeros((L, batch, k - 1, di), dtype)}
+
+
+def model_prefill(params, batch, cfg: ModelConfig, max_len: int, stats=None):
+    """Run the prompt through the scan and emit the final recurrent state.
+
+    For the dry-run cells, prefill of an SSM is the full forward (state
+    extraction uses the same scan); we recompute the final state per layer
+    with a cheap second pass over the last ssm_conv tokens for the conv
+    buffer and take the scan's final hidden state.
+    """
+    from repro.models import transformer as T
+    stats = stats or cm.StatsCollector(False)
+    params_c = cm.cast_params(params, cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = T.embed_tokens(params_c, tokens, cfg, positions)
+
+    def body(x, pl_i):
+        x2, (h_last, conv_last) = _apply_block_with_state(pl_i, x, cfg, stats=stats)
+        return x2, (h_last, conv_last)
+
+    x, (hs, convs) = jax.lax.scan(body, x, params_c["layers"])
+    x = cm.apply_norm(params_c["final_norm"], x, cfg)
+    logits = T.logits_from(params_c, x, cfg)
+    cache = {"ssm": hs.astype(jnp.dtype(cfg.compute_dtype)),
+             "conv": convs.astype(jnp.dtype(cfg.compute_dtype))}
+    return logits[:, -1], cache
+
+
+def _apply_block_with_state(p, x, cfg: ModelConfig, *, stats):
+    """apply_block + return (final ssm state, conv tail) for the cache."""
+    b, s, d = x.shape
+    di, st, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    h_in = cm.apply_norm(p["norm"], x, cfg)
+    if cfg.post_norm_relu:
+        h_in = jax.nn.relu(h_in)
+    x1, z, act, dr, _ = _ssm_inputs(p["ssm"], h_in, cfg, stats)
+    x1c = act(_causal_conv(x1, p["ssm"]["conv_w"], p["ssm"]["conv_b"]))
+    conv_tail = x1[:, -(k - 1):]  # pre-activation conv inputs
+
+    proj = x1c @ p["ssm"]["x_proj"]
+    dtr, B, C = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(dtr @ p["ssm"]["dt_proj"] + p["ssm"]["dt_bias"])
+    A = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)
+    dBx = (dt * x1c).astype(jnp.float32)[..., None] * B.astype(jnp.float32)[:, :, None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs.astype(x1c.dtype), C) + p["ssm"]["D"] * x1c
+    y = y * act(z)
+    out = (y.reshape(b * s, di) @ p["ssm"]["out_proj"]).reshape(b, s, d)
+    return x + out, (hs[:, -1], conv_tail)
+
+
+def model_decode(params, cache, token, pos, cfg: ModelConfig, stats=None):
+    from repro.models import transformer as T
+    stats = stats or cm.StatsCollector(False)
+    params = cm.cast_params(params, cfg)
+    x = T.embed_tokens(params, token[:, None], cfg, pos[:, None])[:, 0]
+
+    if stats.active:
+        ssm, conv = cache["ssm"], cache["conv"]
+        for i in range(cfg.n_layers):
+            pl_i = jax.tree.map(lambda a: a[i], params["layers"])
+            x, ssm, conv = apply_block_decode(pl_i, x, cfg, ssm, conv, pos,
+                                              stats=stats, layer=i)
+        new_cache = {"ssm": ssm, "conv": conv}
+    else:
+        def body(carry, xs):
+            x, ssm, conv = carry
+            pl_i, li = xs
+            x, ssm, conv = apply_block_decode(pl_i, x, cfg, ssm, conv, pos,
+                                              stats=stats, layer=li)
+            return (x, ssm, conv), None
+        (x, ssm, conv), _ = jax.lax.scan(
+            body, (x, cache["ssm"], cache["conv"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        new_cache = {"ssm": ssm, "conv": conv}
+
+    x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
+    return T.logits_from(params, x, cfg), new_cache

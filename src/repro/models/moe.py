@@ -1,0 +1,196 @@
+"""Top-k Mixture-of-Experts family (Mixtral 8x22B, Phi-3.5-MoE).
+
+Grouped one-hot dispatch (GSPMD-friendly Switch/GShard formulation): tokens
+are split into groups of ~cfg.moe_group_size so the dispatch einsum stays a
+few percent of expert compute; capacity = ceil(group·top_k·CF / E) with
+priority-ordered slot assignment (k=0 routes before k=1).
+
+Relufication (paper App. A): "MoE can be combined with relufication, having
+sparsity inside FFN of each expert" — cfg.activation applies inside every
+expert, and stage-2 post-norm ReLU sparsifies the router+expert input.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import activations as acts
+from repro.models import common as cm
+from repro.models import transformer as T
+from repro.sharding import rules
+
+PyTree = Any
+
+
+def init_moe(rng, cfg: ModelConfig, dtype) -> PyTree:
+    d, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 4)
+    p = {
+        "router": cm.dense_init(ks[0], (d, E), d, dtype),
+        "wu": cm.dense_init(ks[1], (E, d, F), d, dtype),
+        "wd": cm.dense_init(ks[2], (E, F, d), F, dtype),
+    }
+    if cfg.ffn_kind == "glu":
+        p["wg"] = cm.dense_init(ks[3], (E, d, F), d, dtype)
+    return p
+
+
+def apply_moe(p, x, cfg: ModelConfig, *, stats: cm.StatsCollector,
+              decode: bool = False):
+    """x: (tokens, d) -> (tokens, d). Top-k routing with capacity."""
+    t, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    act = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+
+    G = max(1, t // cfg.moe_group_size)
+    while t % G:
+        G -= 1
+    tg = t // G
+    cap = max(1, int(-(-tg * k * cfg.capacity_factor // E)))
+
+    xg = x.reshape(G, tg, d)
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]).astype(jnp.float32)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates_all, k)  # (G, tg, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)  # renormalize (mixtral)
+
+    # priority slot assignment: k=0 claims capacity first
+    dispatch = jnp.zeros((G, tg, E, cap), jnp.bool_)
+    combine = jnp.zeros((G, tg, E, cap), jnp.float32)
+    counts = jnp.zeros((G, E), jnp.int32)
+    for kk in range(k):
+        oh = jax.nn.one_hot(topi[..., kk], E, dtype=jnp.int32)  # (G, tg, E)
+        pos = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]  # slot index
+        ok = (pos < cap) & (oh > 0)
+        slot = jax.nn.one_hot(jnp.where(ok, pos, cap), cap + 1,
+                              dtype=jnp.float32)[..., :cap]  # (G, tg, E, cap)
+        sel = slot * oh[..., None]
+        dispatch = dispatch | (sel > 0)
+        combine = combine + sel * topv[..., kk][..., None, None]
+        counts = counts + jnp.sum(oh, axis=1)
+    stats.add("moe_drop_frac", 1.0 - jnp.sum(dispatch) / (G * tg * k))
+    stats.add("moe_load_cv", jnp.std(jnp.sum(combine, (1, 3)))
+              / (jnp.mean(jnp.sum(combine, (1, 3))) + 1e-9))
+
+    dd = dispatch.astype(x.dtype)
+    xe = rules.constrain(jnp.einsum("gtec,gtd->gecd", dd, xg),
+                         "dp", None, None, None)
+    if cfg.ffn_kind == "glu":
+        pre = jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+        stats.add_preact("moe_pre", pre)
+        h = act(pre) * jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    else:
+        pre = jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+        stats.add_preact("moe_pre", pre)
+        h = act(pre)
+    stats.add_sparsity("down_in", h)
+    h = rules.constrain(h, "dp", None, None, "model")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    # pin the output to token-parallel: GSPMD otherwise resolves the dp-axis
+    # collision (groups vs wd's d_model FSDP dim) by replicating the einsum
+    ye = rules.constrain(ye, "dp", None, None, None)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    return y.reshape(t, d)
+
+
+def init_block(rng, cfg: ModelConfig, dtype) -> PyTree:
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": cm.init_norm(cfg, cfg.d_model, dtype),
+        "attn": T.init_attn(ks[0], cfg, dtype),
+        "ln2": cm.init_norm(cfg, cfg.d_model, dtype),
+        "moe": init_moe(ks[1], cfg, dtype),
+    }
+
+
+def apply_block(p, x, cfg: ModelConfig, *, positions, stats, return_kv=False):
+    h = T.post_norm(cm.apply_norm(p["ln1"], x, cfg), cfg)
+    if return_kv:
+        a, kv = T.apply_attn_full(p["attn"], h, cfg, positions=positions,
+                                  stats=stats, return_kv=True)
+    else:
+        a = T.apply_attn_full(p["attn"], h, cfg, positions=positions, stats=stats)
+    x = x + a
+    h = T.post_norm(cm.apply_norm(p["ln2"], x, cfg), cfg)
+    b, s, d = h.shape
+    f = apply_moe(p["moe"], h.reshape(b * s, d), cfg, stats=stats).reshape(b, s, d)
+    x = x + f
+    return (x, kv) if return_kv else x
+
+
+def apply_block_decode(p, x, cfg, k_cache, v_cache, pos, *, stats, layer=None):
+    h = T.post_norm(cm.apply_norm(p["ln1"], x[:, None], cfg)[:, 0], cfg)
+    a, k_cache, v_cache = T.apply_attn_decode(
+        p["attn"], h, cfg, k_cache, v_cache, pos, stats=stats, layer=layer)
+    x = x + a
+    h = T.post_norm(cm.apply_norm(p["ln2"], x[:, None], cfg)[:, 0], cfg)
+    x = x + apply_moe(p["moe"], h, cfg, stats=stats, decode=True)
+    return x, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# family interface (reuses the dense scaffolding with our block fns)
+
+
+def init_params(rng, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    vp = cm.padded_vocab(cfg.vocab_size)
+    ks = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: init_block(k, cfg, dtype))(layer_keys)
+    p = {"embed": cm.embed_init(ks[1], (vp, cfg.d_model), dtype),
+         "layers": layers,
+         "final_norm": cm.init_norm(cfg, cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = cm.embed_init(ks[2], (vp, cfg.d_model), dtype)
+    if not cfg.use_rope:
+        p["pos_embed"] = cm.embed_init(ks[3], (cfg.max_seq_len, cfg.d_model), dtype)
+    return p
+
+
+def model_forward(params, batch, cfg: ModelConfig, *, stats=None,
+                  remat_policy="none"):
+    return T.forward(params, batch["tokens"], cfg, stats=stats,
+                     remat_block=cm.wrap_block(remat_policy, apply_block))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return T.init_cache(cfg, batch, max_len)
+
+
+def model_prefill(params, batch, cfg: ModelConfig, max_len: int, stats=None):
+    stats = stats or cm.StatsCollector(False)
+    logits, kv = T.forward(params, batch["tokens"], cfg, stats=stats,
+                           return_kv=True, remat_block=apply_block)
+    return logits[:, -1], T.finalize_prefill_cache(*kv, max_len)
+
+
+def model_decode(params, cache, token, pos, cfg: ModelConfig, stats=None):
+    stats = stats or cm.StatsCollector(False)
+    params = cm.cast_params(params, cfg)
+    x = T.embed_tokens(params, token[:, None], cfg, pos[:, None])[:, 0]
+
+    if stats.active:
+        kc, vc = cache["k"], cache["v"]
+        for i in range(cfg.n_layers):
+            pl_i = jax.tree.map(lambda a: a[i], params["layers"])
+            x, kc, vc = apply_block_decode(pl_i, x, cfg, kc, vc, pos,
+                                           stats=stats, layer=i)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        def body(carry, xs):
+            x, kc, vc = carry
+            pl_i, li = xs
+            x, kc, vc = apply_block_decode(pl_i, x, cfg, kc, vc, pos,
+                                           stats=stats, layer=li)
+            return (x, kc, vc), None
+        (x, kc, vc), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        new_cache = {"k": kc, "v": vc}
+
+    x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
+    return T.logits_from(params, x, cfg), new_cache

@@ -1,0 +1,54 @@
+"""Architecture-family registry.
+
+Uniform interface per family (duck-typed module):
+  init_params(rng, cfg) -> params
+  model_forward(params, batch, cfg, *, stats=None, remat_block=None)
+      -> logits aligned with batch["tokens"] (b, s, vocab_p)
+  init_cache(cfg, batch, max_len) -> cache pytree
+  model_prefill(params, batch, cfg, max_len, stats=None) -> (logits_b, cache)
+  model_decode(params, cache, token, pos, cfg, stats=None) -> (logits, cache)
+
+batch is a dict: {"tokens": (b, s) int32} plus optional modality-stub inputs
+("patches" for vlm, "frames" for encdec).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.configs.base import ModelConfig
+
+_FAMILIES: Dict[str, Any] = {}
+
+
+def register_family(name: str, module) -> None:
+    _FAMILIES[name] = module
+
+
+def get_family(cfg_or_name) -> Any:
+    name = cfg_or_name if isinstance(cfg_or_name, str) else cfg_or_name.family
+    if name not in _FAMILIES:
+        _load_builtin(name)
+    return _FAMILIES[name]
+
+
+def _load_builtin(name: str) -> None:
+    if name in ("dense",):
+        from repro.models import dense_family
+        register_family("dense", dense_family)
+    elif name == "vlm":
+        from repro.models import vlm
+        register_family("vlm", vlm)
+    elif name == "moe":
+        from repro.models import moe
+        register_family("moe", moe)
+    elif name == "mamba":
+        from repro.models import mamba
+        register_family("mamba", mamba)
+    elif name == "hybrid":
+        from repro.models import hybrid
+        register_family("hybrid", hybrid)
+    elif name == "encdec":
+        from repro.models import encdec
+        register_family("encdec", encdec)
+    else:
+        raise KeyError(f"unknown model family {name!r}")

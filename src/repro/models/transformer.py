@@ -1,0 +1,451 @@
+"""Dense decoder-only transformer family.
+
+Covers: OPT (layernorm, learned positions, ReLU-MLP), Llama/DeepSeek (rmsnorm,
+RoPE, SwiGLU), Falcon (layernorm, GELU-MLP), Qwen2 (QKV bias), Qwen3
+(qk-norm), StarCoder2 (GQA+GELU), and the InternLM2 backbone of InternVL2.
+
+Layers are stacked on a leading axis and iterated with lax.scan so the HLO is
+one layer body regardless of depth (95-layer deepseek compiles as fast as a
+2-layer toy). The attention / FFN builders here are reused by moe.py,
+hybrid.py and encdec.py.
+
+Relufication hooks (paper Sec. 4):
+  * stage 1 = cfg.activation == "relu" (or "shifted_relu")
+  * stage 2 = cfg.post_norm_relu: ReLU is applied to the output of each
+    pre-attention / pre-FFN norm, sparsifying QKV and up-projection inputs.
+Sparse decode (paper Sec. 4.2/5, DESIGN.md §3): tile-gathered matmuls with
+static capacities cfg.sparsity.{ffn_tile_density, input_tile_density}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import activations as acts
+from repro.models import common as cm
+from jax import ad_checkpoint
+from repro.sharding import rules
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# attention sub-module (shared by every family with attention)
+
+
+def attn_geometry(cfg: ModelConfig) -> cm.HeadGeometry:
+    return cm.HeadGeometry(cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
+
+
+def init_attn(rng, cfg: ModelConfig, dtype) -> PyTree:
+    g = attn_geometry(cfg)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    # init real heads, scatter into the padded per-group layout (zeros padded)
+    wq = g.scatter_q(cm.dense_init(ks[0], (d, cfg.n_heads, hd), d, dtype), axis=1)
+    if g.kvp == g.n_kv:
+        wk = cm.dense_init(ks[1], (d, g.kvp, hd), d, dtype)
+        wv = cm.dense_init(ks[2], (d, g.kvp, hd), d, dtype)
+    else:  # MHA padding: zero K/V for padded kv heads
+        wk = jnp.zeros((d, g.kvp, hd), dtype).at[:, : g.n_kv].set(
+            cm.dense_init(ks[1], (d, g.n_kv, hd), d, dtype))
+        wv = jnp.zeros((d, g.kvp, hd), dtype).at[:, : g.n_kv].set(
+            cm.dense_init(ks[2], (d, g.n_kv, hd), d, dtype))
+    wo = g.scatter_q(cm.dense_init(ks[3], (cfg.n_heads, hd, d), cfg.n_heads * hd, dtype),
+                     axis=0)
+    p = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((g.hp, hd), dtype)
+        p["bk"] = jnp.zeros((g.kvp, hd), dtype)
+        p["bv"] = jnp.zeros((g.kvp, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, *, stats: cm.StatsCollector,
+         input_density: float = 1.0):
+    """x: (b, s, d) -> q (b,s,kvp,g,hd), k/v (b,s,kvp,hd). RoPE applied."""
+    g = attn_geometry(cfg)
+    stats.add_sparsity("qkv_in", x)
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    wq = p["wq"].reshape(d, g.hp * g.head_dim)
+    wk = p["wk"].reshape(d, g.kvp * g.head_dim)
+    wv = p["wv"].reshape(d, g.kvp * g.head_dim)
+    dens = input_density if cfg.sparsity.enabled else 1.0
+    q = cm.maybe_sparse_matmul(x2, wq, cfg, dens).reshape(b, s, g.hp, g.head_dim)
+    k = cm.maybe_sparse_matmul(x2, wk, cfg, dens).reshape(b, s, g.kvp, g.head_dim)
+    v = cm.maybe_sparse_matmul(x2, wv, cfg, dens).reshape(b, s, g.kvp, g.head_dim)
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = cm.rms_norm_headdim(p["q_norm"], q)
+        k = cm.rms_norm_headdim(p["k_norm"], k)
+    if cfg.use_rope:
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v  # q flat (b, s, hp, hd); k/v (b, s, kvp, hd)
+
+
+def _attn_out(p, o, cfg: ModelConfig):
+    """o: (b, s, hp, hd) -> (b, s, d), padded head slots masked."""
+    g = attn_geometry(cfg)
+    b, s = o.shape[:2]
+    o = o * jnp.asarray(g.q_slot_mask(), o.dtype)[None, None, :, None]
+    return jnp.einsum("bshd,hde->bse", o, p["wo"])
+
+
+def apply_attn_full(
+    p, x, cfg: ModelConfig, *, positions, causal=True, stats: cm.StatsCollector,
+    return_kv=False, kv_override=None, q_offset: int = 0,
+):
+    """Full-sequence attention (train / prefill). Optionally returns K,V for
+    the cache, or attends to externally supplied K,V (cross-attention).
+
+    For GQA with kv < 16, K/V activations are replication-padded to 16 heads
+    (each kv head repeated 16/kv times — exactly GQA, since every q head
+    still sees a copy of its own kv head) so the attention einsums shard
+    16-way over the `model` axis. Weights and the cache stay unpadded.
+    """
+    g = attn_geometry(cfg)
+    b, s = x.shape[:2]
+    q, k, v = _qkv(p, x, cfg, positions, stats=stats)
+    # the copy stored into the prefill cache is SEQ-sharded over `model`
+    # (matching the decode cache layout) so the stacked (L, b, S, kvp, hd)
+    # buffer never materializes replicated on any chip
+    kv_for_cache = (rules.constrain(k, "dp", "model", None, None),
+                    rules.constrain(v, "dp", "model", None, None))
+    if kv_override is not None:
+        k, v = kv_override
+        causal = False
+    r = 1 if g.kvp % cm.TP == 0 else cm.TP // g.kvp
+    if r > 1:
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    kv_eff = g.kvp * r
+    g_eff = g.hp // kv_eff
+    qg = q.reshape(b, s, kv_eff, g_eff, g.head_dim)
+    qg = rules.constrain(qg, "dp", None, "model", None, None)
+    k = rules.constrain(k, "dp", None, "model", None)
+    v = rules.constrain(v, "dp", None, "model", None)
+    o = cm.flash_attention(qg, k, v, causal=causal, window=cfg.sliding_window,
+                           q_offset=q_offset)
+    out = _attn_out(p, o.reshape(b, s, g.hp, g.head_dim), cfg)
+    if return_kv:
+        return out, kv_for_cache
+    return out
+
+
+def apply_attn_decode(
+    p, x, cfg: ModelConfig, k_cache, v_cache, pos, *, stats: cm.StatsCollector,
+    cross: bool = False, layer=None,
+):
+    """One-token attention against a cache.
+
+    x: (b, d); pos: (b,) write position. When ``layer`` is given, k_cache /
+    v_cache are the FULL stacked (L, b, S, kvp, hd) buffers and only the
+    single-token slice for this layer is written (the whole stack is carried
+    through the layer scan so decode traffic is one cache read + an O(1)
+    write — NOT a full rewrite). Otherwise they are per-layer (b, S, kvp, hd).
+    cross=True skips the write (encoder K/V are static).
+    Returns (out (b, d), k_cache, v_cache).
+    """
+    g = attn_geometry(cfg)
+    q, k, v = _qkv(p, x[:, None, :], cfg, pos[:, None],
+                   stats=stats, input_density=cfg.sparsity.input_tile_density)
+    q = q.reshape(q.shape[0], 1, g.kvp, g.group, g.head_dim)
+    if not cross:
+        # uniform-position fast path: dynamic_update_slice is a single cheap
+        # in-place update (positions are equal across the batch in the
+        # dry-run serve step; the engine uses per-seq scatter instead).
+        # cache is head-major: write (b, kvp, 1, hd) at position pos.
+        kt = k.transpose(0, 2, 1, 3).astype(k_cache.dtype)  # (b, kvp, 1, hd)
+        vt = v.transpose(0, 2, 1, 3).astype(v_cache.dtype)
+        if layer is not None:
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, kt[None], (layer, 0, 0, pos[0], 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, vt[None], (layer, 0, 0, pos[0], 0))
+        else:
+            k_cache = jax.lax.dynamic_update_slice(k_cache, kt, (0, 0, pos[0], 0))
+            v_cache = jax.lax.dynamic_update_slice(v_cache, vt, (0, 0, pos[0], 0))
+    if layer is not None:
+        kl = jax.lax.dynamic_index_in_dim(k_cache, layer, 0, keepdims=False)
+        vl = jax.lax.dynamic_index_in_dim(v_cache, layer, 0, keepdims=False)
+    else:
+        kl, vl = k_cache, v_cache
+    o = cm.decode_attention(q[:, 0], kl, vl, pos, window=cfg.sliding_window)
+    out = _attn_out(p, o.reshape(o.shape[0], 1, g.hp, g.head_dim), cfg)[:, 0]
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN sub-module (the paper's main stage — sparsity lives here)
+
+
+def init_ffn(rng, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> PyTree:
+    d, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {"wu": cm.dense_init(ks[0], (d, F), d, dtype),
+         "wd": cm.dense_init(ks[1], (F, d), F, dtype)}
+    if cfg.ffn_kind == "glu":
+        p["wg"] = cm.dense_init(ks[2], (d, F), d, dtype)
+    return p
+
+
+def apply_ffn(p, x, cfg: ModelConfig, *, stats: cm.StatsCollector,
+              decode: bool = False, ffn_mask: Optional[jnp.ndarray] = None):
+    """x: (tokens, d) -> (tokens, d). ffn_mask (d_ff,) emulates γ-window
+    weight reuse (paper Fig. 7c): only previously-loaded rows participate."""
+    act = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+    stats.add_sparsity("up_in", x)
+    x = rules.constrain(x, "dp", None)
+    dens_in = cfg.sparsity.input_tile_density if (cfg.sparsity.enabled and decode) else 1.0
+    if cfg.ffn_kind == "glu":
+        pre = cm.maybe_sparse_matmul(x, p["wg"], cfg, dens_in)
+        stats.add_preact("ffn_pre", pre)
+        h = act(pre) * cm.maybe_sparse_matmul(x, p["wu"], cfg, dens_in)
+    else:
+        pre = cm.maybe_sparse_matmul(x, p["wu"], cfg, dens_in)
+        stats.add_preact("ffn_pre", pre)
+        h = act(pre)
+    if ffn_mask is not None:
+        h = h * ffn_mask.astype(h.dtype)
+    stats.add_sparsity("down_in", h)
+    if stats.active:  # unit-level activity for aggregated-sparsity tracking
+        stats.add("down_act", jnp.any(h != 0, axis=0))
+    h = rules.constrain(h, "dp", "model")
+    dens_ffn = cfg.sparsity.ffn_tile_density if (cfg.sparsity.enabled and decode) else 1.0
+    return rules.constrain(
+        cm.maybe_sparse_matmul(h, p["wd"], cfg, dens_ffn), "dp", None)
+
+
+def post_norm(x, cfg: ModelConfig):
+    """Relufication stage 2: ReLU after the normalization layer."""
+    return jax.nn.relu(x) if cfg.post_norm_relu else x
+
+
+# ---------------------------------------------------------------------------
+# dense decoder blocks
+
+
+def init_block(rng, cfg: ModelConfig, dtype) -> PyTree:
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": cm.init_norm(cfg, cfg.d_model, dtype),
+        "attn": init_attn(ks[0], cfg, dtype),
+        "ln2": cm.init_norm(cfg, cfg.d_model, dtype),
+        "ffn": init_ffn(ks[1], cfg, dtype),
+    }
+
+
+def apply_block(p, x, cfg: ModelConfig, *, positions, stats, return_kv=False,
+                causal=True):
+    h = post_norm(cm.apply_norm(p["ln1"], x, cfg), cfg)
+    if return_kv:
+        a, kv = apply_attn_full(p["attn"], h, cfg, positions=positions,
+                                stats=stats, return_kv=True, causal=causal)
+    else:
+        a = apply_attn_full(p["attn"], h, cfg, positions=positions,
+                            stats=stats, causal=causal)
+    a = ad_checkpoint.checkpoint_name(a, "attn_out")  # TP all-reduce output
+    x = x + a
+    h = post_norm(cm.apply_norm(p["ln2"], x, cfg), cfg)
+    b, s, d = h.shape
+    f = apply_ffn(p["ffn"], h.reshape(b * s, d), cfg, stats=stats).reshape(b, s, d)
+    f = ad_checkpoint.checkpoint_name(f, "ffn_out")  # TP all-reduce output
+    x = x + f
+    if cfg.sp_residuals:
+        x = rules.constrain(x, "dp", None, "model")
+    return (x, kv) if return_kv else x
+
+
+def apply_block_decode(p, x, cfg: ModelConfig, k_cache, v_cache, pos, *, stats,
+                       layer=None, ffn_mask=None):
+    h = post_norm(cm.apply_norm(p["ln1"], x[:, None], cfg)[:, 0], cfg)
+    a, k_cache, v_cache = apply_attn_decode(
+        p["attn"], h, cfg, k_cache, v_cache, pos, stats=stats, layer=layer)
+    x = x + a
+    h = post_norm(cm.apply_norm(p["ln2"], x[:, None], cfg)[:, 0], cfg)
+    f = apply_ffn(p["ffn"], h, cfg, stats=stats, decode=True, ffn_mask=ffn_mask)
+    x = x + f
+    return x, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# whole model
+
+
+def init_params(rng, cfg: ModelConfig) -> PyTree:
+    dtype = jnp.dtype(cfg.param_dtype)
+    vp = cm.padded_vocab(cfg.vocab_size)
+    ks = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: init_block(k, cfg, dtype))(layer_keys)
+    p = {
+        "embed": cm.embed_init(ks[1], (vp, cfg.d_model), dtype),
+        "layers": layers,
+        "final_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = cm.embed_init(ks[2], (vp, cfg.d_model), dtype)
+    if not cfg.use_rope:
+        p["pos_embed"] = cm.embed_init(ks[3], (cfg.max_seq_len, cfg.d_model), dtype)
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, positions):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    if not cfg.use_rope:
+        pe = jnp.take(params["pos_embed"], positions, axis=0)
+        x = x + pe.astype(x.dtype)
+    return x
+
+
+def logits_from(params, x, cfg: ModelConfig):
+    u = params.get("unembed", params["embed"])
+    out = jnp.einsum("...d,vd->...v", x, u.astype(x.dtype))
+    return out + cm.vocab_logit_mask(cfg.vocab_size, u.shape[0]).astype(out.dtype)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, stats: Optional[cm.StatsCollector] = None,
+            extra_embeds: Optional[jnp.ndarray] = None, return_kv: bool = False,
+            remat_block=None):
+    """Full-sequence forward. tokens: (b, s) -> logits (b, s_total, vocab_p).
+
+    extra_embeds (b, n, d): modality-frontend stubs (vision patches / audio
+    frames) prepended to the token embeddings (internvl2).
+    """
+    stats = stats or cm.StatsCollector(False)
+    params = cm.cast_params(params, cfg)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed_tokens(params, tokens, cfg, positions)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    x = rules.constrain(x, "dp", None, None)
+    block = remat_block or apply_block
+
+    if stats.active:  # unrolled so per-layer stats stay distinguishable
+        kvs = []
+        layers = params["layers"]
+        for i in range(cfg.n_layers):
+            pl_i = jax.tree.map(lambda a: a[i], layers)
+            sub = cm.StatsCollector(True)
+            if return_kv:
+                x, kv = block(pl_i, x, cfg, positions=positions, stats=sub,
+                              return_kv=True)
+                kvs.append(kv)
+            else:
+                x = block(pl_i, x, cfg, positions=positions, stats=sub)
+            for k_, v_ in sub.stats.items():
+                stats.stats[f"layer{i}/{k_}"] = v_
+        kv_stack = (jax.tree.map(lambda *a: jnp.stack(a), *kvs) if kvs else None)
+    else:
+        def body(x, pl_i):
+            if return_kv:
+                x, kv = block(pl_i, x, cfg, positions=positions, stats=stats,
+                              return_kv=True)
+                return x, kv
+            return block(pl_i, x, cfg, positions=positions, stats=stats), None
+        x, kv_stack = jax.lax.scan(body, x, params["layers"])
+
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    if return_kv:
+        # prefill: only the last position's logits are needed -> avoid the
+        # (b, s, vocab_p) buffer entirely
+        logits = logits_from(params, x[:, -1:], cfg)
+        return logits, kv_stack
+    return logits_from(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# serving entry points
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> PyTree:
+    g = attn_geometry(cfg)
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    # head-major layout: decode einsums read it without transposing
+    shape = (cfg.n_layers, batch, g.kvp, max_len, g.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def finalize_prefill_cache(k, v, max_len: int):
+    """(L, b, s, kvp, hd) scan output -> head-major padded cache dict."""
+    k = k.transpose(0, 1, 3, 2, 4)  # -> head-major (L, b, kvp, s, hd)
+    v = v.transpose(0, 1, 3, 2, 4)
+    pad = max_len - k.shape[3]
+    if pad > 0:
+        zeros = jnp.zeros(k.shape[:3] + (pad,) + k.shape[4:], k.dtype)
+        k = jnp.concatenate([k, zeros], axis=3)
+        v = jnp.concatenate([v, zeros], axis=3)
+    return {"k": k, "v": v}
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int,
+            stats: Optional[cm.StatsCollector] = None):
+    """Run the full prompt, return (last-token logits, cache at max_len)."""
+    logits, kv = forward(params, tokens, cfg, stats=stats, return_kv=True)
+    # logits are last-position only (b, 1, V)
+    return logits[:, -1], finalize_prefill_cache(*kv, max_len)
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig,
+                stats: Optional[cm.StatsCollector] = None,
+                ffn_masks: Optional[jnp.ndarray] = None):
+    """One decode step. token: (b,) int32; pos: (b,) write position.
+
+    ffn_masks (L, d_ff): γ-window weight-reuse masks (paper Fig. 7c).
+    Returns (logits (b, vocab_p), new cache). The cache S axis may be sharded
+    (long-context flash-decode, DESIGN.md §3).
+    """
+    stats = stats or cm.StatsCollector(False)
+    params = cm.cast_params(params, cfg)
+    b = token.shape[0]
+    x = embed_tokens(params, token[:, None], cfg, pos[:, None])[:, 0]
+
+    if stats.active:
+        kc, vc = cache["k"], cache["v"]
+        for i in range(cfg.n_layers):
+            pl_i = jax.tree.map(lambda a: a[i], params["layers"])
+            sub = cm.StatsCollector(True)
+            x, kc, vc = apply_block_decode(
+                pl_i, x, cfg, kc, vc, pos, stats=sub, layer=i,
+                ffn_mask=None if ffn_masks is None else ffn_masks[i])
+            for k_, v_ in sub.stats.items():
+                stats.stats[f"layer{i}/{k_}"] = v_
+        new_cache = {"k": kc, "v": vc}
+    else:
+        # the FULL stacked cache rides in the scan carry: per step each layer
+        # reads its slice for attention and writes one token in place (no
+        # per-layer full-slice rewrites through scan ys).
+        def body(carry, xs):
+            x, kc, vc = carry
+            if ffn_masks is None:
+                pl_i, li = xs
+                fm = None
+            else:
+                pl_i, li, fm = xs
+            x, kc, vc = apply_block_decode(pl_i, x, cfg, kc, vc, pos,
+                                           stats=stats, layer=li, ffn_mask=fm)
+            return (x, kc, vc), None
+        xs = ((params["layers"], jnp.arange(cfg.n_layers)) if ffn_masks is None
+              else (params["layers"], jnp.arange(cfg.n_layers), ffn_masks))
+        (x, kc, vc), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]), xs)
+        new_cache = {"k": kc, "v": vc}
+
+    x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
+    logits = logits_from(params, x, cfg)
+    return logits, new_cache

@@ -1,0 +1,41 @@
+"""InternVL2 family: InternLM2-style backbone + STUB ViT frontend.
+
+The assignment specifies the transformer backbone only; `input_specs()`
+provides precomputed patch embeddings (b, n_vision_tokens, d_model) which are
+prepended to the token embeddings. Relufication applies to the backbone FFNs
+exactly as for the dense family.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as T
+
+
+def init_params(rng, cfg: ModelConfig):
+    return T.init_params(rng, cfg)
+
+
+def model_forward(params, batch, cfg: ModelConfig, *, stats=None,
+                  remat_policy="none"):
+    logits = T.forward(params, batch["tokens"], cfg, stats=stats,
+                       extra_embeds=batch["patches"],
+                       remat_block=cm.wrap_block(remat_policy, T.apply_block))
+    return logits[:, batch["patches"].shape[1]:]  # align with tokens
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return T.init_cache(cfg, batch, max_len)
+
+
+def model_prefill(params, batch, cfg: ModelConfig, max_len: int, stats=None):
+    """Prompt = vision patches ++ tokens; cache covers both."""
+    logits, kv = T.forward(params, batch["tokens"], cfg, stats=stats,
+                           extra_embeds=batch["patches"], return_kv=True)
+    return logits[:, -1], T.finalize_prefill_cache(*kv, max_len)
+
+
+def model_decode(params, cache, token, pos, cfg: ModelConfig, stats=None):
+    return T.decode_step(params, cache, token, pos, cfg, stats=stats)

@@ -1,0 +1,57 @@
+"""Gradient compression for the data-parallel reduction: int8 quantization
+with error feedback (EF-SGD style). The wire format is int8 (4x fewer bytes
+than f32 grads); the quantization error is carried in an error-feedback
+buffer so convergence is preserved (tested in tests/test_compression.py).
+
+Used by the shard_map DDP step (train/ddp.py) — with pjit+GSPMD the grad
+psum is fused into the backward pass and cannot be intercepted, so the
+compressed path is an explicit-collective variant.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_ef_state(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum_mean(grads: PyTree, ef: PyTree, axis_name: str):
+    """All-reduce-mean of grads with int8 wire + error feedback.
+
+    Inside shard_map over `axis_name`. Implementation: quantize (g + ef) to
+    int8, all_gather the int8 payload (8-bit wire), sum + dequantize locally;
+    the residual goes back into the EF buffer.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(gf)
+        new_e = gf - dequantize_int8(q, scale)
+        qs = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+        ss = jax.lax.all_gather(scale, axis_name)
+        n = qs.shape[0]
+        total = jnp.sum(qs.astype(jnp.float32)
+                        * ss.reshape((n,) + (1,) * g.ndim), axis=0)
+        return (total / n).astype(g.dtype), new_e
+
+    flat = jax.tree.map(one, grads, ef)
+    g_out = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    e_out = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return g_out, e_out

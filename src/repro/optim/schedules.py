@@ -1,0 +1,22 @@
+"""LR schedules (pure fns of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def learning_rate(step: jnp.ndarray, tc: TrainConfig) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(1, tc.warmup_steps))
+    if tc.schedule == "constant":
+        post = 1.0
+    elif tc.schedule == "linear":
+        frac = jnp.clip((s - tc.warmup_steps)
+                        / max(1, tc.total_steps - tc.warmup_steps), 0.0, 1.0)
+        post = 1.0 - 0.9 * frac
+    else:  # cosine
+        frac = jnp.clip((s - tc.warmup_steps)
+                        / max(1, tc.total_steps - tc.warmup_steps), 0.0, 1.0)
+        post = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * frac))
+    return tc.learning_rate * warm * post

@@ -1,0 +1,234 @@
+"""Logical-axis sharding rules (MaxText-style, shape/name driven).
+
+Instead of hand-maintaining one PartitionSpec pytree per (family × mode), we
+derive the spec of every parameter from its *path name* and *shape*, with an
+automatic divisibility guard: a mesh axis is only assigned when the dimension
+size divides the axis size (the probe showed jit rejects uneven shardings).
+Because every padded dimension (vocab→2048·k, q-heads→16·k, d_ff, d_model,
+d_inner) is mesh-divisible by construction, the guard only "fires" where we
+*want* replication (e.g. GQA kv-heads of size 2/4/8).
+
+Modes:
+  train   — DP over ("pod","data") batch, FSDP over "data" on a weight axis,
+            TP over "model" (ffn / heads / vocab): ZeRO-3-style layouts.
+  serve   — weights TP-only over "model" (resident, no per-step all-gather);
+            MoE expert weights additionally sharded over "data" (they would
+            not fit HBM otherwise); KV cache: batch over DP, seq over "model"
+            (flash-decode, DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (regex on '/'-joined param path) -> logical axes for the trailing dims.
+# Leading stacked-layer dims are detected by ndim surplus and mapped to None.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"pos_embed$", ("seq_weights", "embed")),
+    (r"(embed|unembed)$", ("vocab", "embed")),
+    (r"attn.*/(wq)$", ("embed", "heads", "head_dim")),
+    (r"attn.*/(wk|wv)$", ("embed_kv", "kv_heads", "head_dim")),
+    (r"attn.*/wo$", ("heads", "head_dim", "embed")),
+    (r"attn.*/(bq)$", ("heads", "head_dim")),
+    (r"attn.*/(bk|bv)$", ("kv_heads", "head_dim")),
+    (r"(q_norm|k_norm)$", ("head_dim",)),
+    (r"ffn/(wu|wg)$", ("embed", "ffn")),
+    (r"ffn/wd$", ("ffn", "embed")),
+    (r"moe/router$", ("embed", "experts")),
+    (r"moe/(wu|wg)$", ("experts", "embed_heavy", "ffn")),
+    (r"moe/wd$", ("experts", "ffn", "embed_heavy")),
+    # mamba
+    (r"ssm/in_proj$", ("embed", "inner_all")),
+    (r"ssm/out_proj$", ("inner", "embed")),
+    (r"ssm/conv_w$", ("conv_k", "inner")),
+    (r"ssm/(conv_b|A_log|D|dt_bias|gate_b)$", ("inner_vec",)),
+    (r"ssm/(x_proj|dt_proj_w|B_proj|C_proj|dt_proj)$", ("inner_or_embed", "proj_out")),
+    (r"ssm/norm/scale$", ("inner_vec",)),
+    # norms / scalars: replicated
+    (r"(ln\d*|norm\d*|final_norm|pre_norm|post_norm|input_norm)(/|$)", ()),
+    (r"(scale|bias)$", ()),
+)
+
+
+def _logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, path):
+            lead = ndim - len(axes)
+            assert lead >= 0, (path, ndim, axes)
+            return (None,) * lead + tuple(axes)
+    return (None,) * ndim  # unknown -> replicated (safe default)
+
+
+# logical axis -> mesh axis, per mode. "embed" is the FSDP axis in training.
+_MESH_MAP = {
+    "train": {
+        "vocab": "model", "embed": "data", "embed_kv": "data",
+        "embed_heavy": "dp",  # resolves to ("pod","data") on the 2-pod mesh
+        "heads": "model", "kv_heads": "model", "head_dim": None,
+        "ffn": "model", "experts": None, "seq_weights": None,
+        "inner": "model", "inner_all": "model", "inner_vec": "model",
+        "inner_or_embed": None, "proj_out": None, "conv_k": None,
+    },
+    "serve": {
+        "vocab": "model", "embed": None, "embed_kv": "model",
+        "embed_heavy": "dp",
+        "heads": "model", "kv_heads": "model", "head_dim": None,
+        "ffn": "model", "experts": None, "seq_weights": None,
+        "inner": "model", "inner_all": "model", "inner_vec": "model",
+        "inner_or_embed": None, "proj_out": None, "conv_k": None,
+    },
+}
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return dim % size == 0 and dim >= size
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh, mode: str) -> P:
+    axes = _logical_axes_for(path, len(shape))
+    mm = _MESH_MAP[mode]
+    # assign trailing dims first: for MHA the (padded) kv-head dim takes
+    # "model"; for GQA (kv < 16) it falls through and the embed dim takes it
+    # instead (keeps K/V projection weights sharded at serve time)
+    out, used = [None] * len(shape), set()
+    for i in reversed(range(len(shape))):
+        ax = axes[i]
+        mesh_ax = mm.get(ax) if ax else None
+        if mesh_ax == "dp":  # dynamic: all data-parallel axes of this mesh
+            mesh_ax = dp_axes(mesh)
+        flat = (mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,))
+        if mesh_ax is not None and not (set(flat) & used)                 and _fits(shape[i], mesh, mesh_ax):
+            out[i] = mesh_ax
+            used.update(flat)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def params_shardings(params_shape: PyTree, mesh: Mesh, mode: str) -> PyTree:
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    def f(path, leaf):
+        return NamedSharding(mesh, param_pspec(_path_str(path), leaf.shape, mesh, mode))
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# activation / input shardings
+
+
+def batch_pspec(batch_size: int, mesh: Mesh, extra_dims: int = 1) -> P:
+    dp = dp_axes(mesh)
+    if _fits(batch_size, mesh, dp):
+        return P(dp, *([None] * extra_dims))
+    if _fits(batch_size, mesh, "data"):
+        return P("data", *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def cache_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """KV cache, head-major (L, b, kvp, S, hd): batch over DP, seq over
+    model (flash-decode partial softmax)."""
+    L, b, kvp, S, hd = shape
+    dp = dp_axes(mesh)
+    baxis = dp if _fits(b, mesh, dp) else ("data" if _fits(b, mesh, "data") else None)
+    saxis = "model" if _fits(S, mesh, "model") else None
+    return P(None, baxis, None, saxis, None)
+
+
+def ssm_cache_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """SSM state (L, b, inner, state) / conv state (L, b, k, inner)."""
+    dp = dp_axes(mesh)
+    out = [None]
+    b = shape[1]
+    out.append(dp if _fits(b, mesh, dp) else ("data" if _fits(b, mesh, "data") else None))
+    for dim in shape[2:]:
+        out.append("model" if ("model" not in out and _fits(dim, mesh, "model")
+                               and dim >= 1024) else None)
+    return P(*out)
+
+
+def logits_pspec(batch_size: int, mesh: Mesh, with_seq: bool) -> P:
+    bp = batch_pspec(batch_size, mesh, extra_dims=0)
+    baxis = bp[0] if len(bp) else None
+    if with_seq:
+        return P(baxis, None, "model")
+    return P(baxis, "model")
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding context: model / loss code calls constrain() with
+# logical axes; a no-op unless a mesh is installed (dry-run / launcher).
+
+_ENV = {"mesh": None}
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _ENV["mesh"] = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ENV["mesh"]
+
+
+def constrain_params_tree(tree: PyTree, mode: str = "train") -> PyTree:
+    """Constrain a params-structured tree (e.g. grads, grad accumulators) to
+    the parameter shardings — keeps GSPMD on the ZeRO reduce-scatter path
+    instead of materializing replicated f32 gradients."""
+    mesh = _ENV["mesh"]
+    if mesh is None:
+        return tree
+
+    def f(path, leaf):
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, param_pspec(_path_str(path), leaf.shape,
+                                                  mesh, mode)))
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def constrain(x, *logical):
+    """logical: 'dp' (batch), 'model', 'data', or None per dim."""
+    mesh = _ENV["mesh"]
+    if mesh is None:
+        return x
+    axes = []
+    for dim, ax in zip(x.shape, logical):
+        if ax == "dp":
+            dp = dp_axes(mesh)
+            axes.append(dp if _fits(dim, mesh, dp) else
+                        ("data" if _fits(dim, mesh, "data") else None))
+        elif ax in ("model", "data"):
+            axes.append(ax if (_fits(dim, mesh, ax)
+                               and ax not in axes) else None)
+        else:
+            axes.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*axes)))

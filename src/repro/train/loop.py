@@ -1,0 +1,128 @@
+"""Fault-tolerant training loop.
+
+* auto-resume from the latest checkpoint (params + optimizer + data-iterator
+  state survive restarts);
+* SIGTERM/SIGINT → checkpoint-and-exit (preemption safe);
+* non-finite steps skipped inside the jitted step (train/step.py);
+* straggler watchdog: per-step wall-time EMA; steps slower than
+  `straggler_factor ×` EMA are logged/counted (on a real cluster this feeds
+  the controller's host-health signal — same hook);
+* periodic eval on held-out synthetic data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import DataConfig, IteratorState, PackedIterator, eval_batches
+from repro.models import registry
+from repro.optim import adamw
+from repro.train.step import lm_loss, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps: int
+    losses: List[float]
+    eval_losses: List[float]
+    skipped_steps: int
+    straggler_steps: int
+    resumed_from: Optional[int]
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, dc: DataConfig,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 eval_every: int = 50, straggler_factor: float = 3.0,
+                 log: Callable[[str], None] = print):
+        self.cfg, self.tc, self.dc = cfg, tc, dc
+        self.fam = registry.get_family(cfg)
+        self.step_fn = jax.jit(make_train_step(cfg, tc))
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.eval_every = eval_every
+        self.straggler_factor = straggler_factor
+        self.log = log
+        self._stop = False
+        self._eval = eval_batches(dc, 2)
+
+    def _install_signals(self):
+        def handler(signum, frame):
+            self.log(f"[trainer] signal {signum}: checkpoint-and-exit")
+            self._stop = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+            signal.signal(signal.SIGINT, handler)
+        except ValueError:
+            pass  # not in main thread (tests)
+
+    def eval_loss(self, params) -> float:
+        losses = [float(lm_loss(params, {k: jnp.asarray(v) for k, v in b.items()},
+                                self.cfg)[0]) for b in self._eval]
+        return float(np.mean(losses))
+
+    def run(self, n_steps: int, params=None, opt_state=None) -> TrainerReport:
+        self._install_signals()
+        cfg, tc, dc = self.cfg, self.tc, self.dc
+
+        resumed_from = None
+        start_step = 0
+        it_state = None
+        if params is None:
+            params = self.fam.init_params(jax.random.PRNGKey(tc.seed), cfg)
+        if opt_state is None:
+            opt_state = adamw.init_opt_state(params)
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            (params, opt_state), extras = self.ckpt.restore((params, opt_state))
+            start_step = int(extras["step"])
+            resumed_from = start_step
+            it_state = IteratorState.from_dict(extras["data"])
+            self.log(f"[trainer] resumed from step {start_step}")
+
+        it = PackedIterator(dc, it_state)
+        losses: List[float] = []
+        evals: List[float] = []
+        skipped = 0
+        stragglers = 0
+        ema = None
+
+        step = start_step
+        while step < n_steps and not self._stop:
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            t0 = time.time()
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            if dt > self.straggler_factor * ema and step > start_step + 2:
+                stragglers += 1
+                self.log(f"[trainer] straggler step {step}: {dt:.2f}s vs ema {ema:.2f}s")
+            if float(metrics["step_ok"]) == 0.0:
+                skipped += 1
+                self.log(f"[trainer] non-finite step {step} skipped")
+            losses.append(loss)
+            step += 1
+            if self.ckpt and (step % self.ckpt_every == 0 or self._stop):
+                self.ckpt.save(step, (params, opt_state),
+                               extras={"step": step, "data": it.state().to_dict()})
+            if step % self.eval_every == 0:
+                ev = self.eval_loss(params)
+                evals.append(ev)
+                self.log(f"[trainer] step {step} loss {loss:.4f} eval {ev:.4f}")
+
+        if self.ckpt:
+            self.ckpt.save(step, (params, opt_state), block=True,
+                           extras={"step": step, "data": it.state().to_dict()})
+        self.params, self.opt_state = params, opt_state
+        return TrainerReport(steps=step - start_step, losses=losses,
+                             eval_losses=evals, skipped_steps=skipped,
+                             straggler_steps=stragglers,
+                             resumed_from=resumed_from)

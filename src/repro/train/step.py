@@ -1,0 +1,112 @@
+"""Training step: LM loss, remat policies, microbatched grad accumulation,
+global-norm clipping, AdamW, non-finite-step skipping.
+
+The step is a single pjit-able function; batch layout is (num_microbatches ×
+per-mb-batch × seq) with per-mb batch kept >= the DP degree so every
+microbatch still shards over data (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import registry
+from repro.models import transformer as T
+from repro.optim import adamw, schedules
+from repro.sharding import rules
+
+PyTree = Any
+
+
+def lm_loss(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            *, remat_policy: str = "none",
+            stats=None) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy on batch["tokens"]; modality stubs pass through."""
+    family = registry.get_family(cfg)
+    logits = family.model_forward(params, batch, cfg, stats=stats,
+                                  remat_policy=remat_policy)
+    logits = rules.constrain(logits, "dp", None, "model")
+    tokens = batch["tokens"]
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1]
+    # vocab-sharding-friendly cross entropy: reductions over the (sharded)
+    # vocab axis lower to cheap (b, s) all-reduces; the target logit is a
+    # masked select, not a cross-shard gather.
+    m = jnp.max(lg, axis=-1)
+    shifted = (lg - m[..., None]).astype(jnp.float32)
+    lse = m.astype(jnp.float32) + jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    vocab_iota = jnp.arange(lg.shape[-1], dtype=tgt.dtype)
+    tl = jnp.sum(jnp.where(vocab_iota == tgt[..., None], lg, 0)
+                 .astype(jnp.float32), axis=-1)
+    nll = lse - tl
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        mask = mask[:, 1:].astype(jnp.float32)
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        loss = jnp.mean(nll)
+    aux = {"loss": loss}
+    if stats is not None and stats.active:
+        aux.update(stats.stats)
+    return loss, aux
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch["tokens"]: (global_batch, seq). Internally reshaped into
+    tc.num_microbatches grad-accumulation slices.
+    """
+
+    def loss_fn(params, mb):
+        return lm_loss(params, mb, cfg, remat_policy=tc.remat_policy)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: adamw.OptState, batch):
+        nmb = tc.num_microbatches
+
+        if nmb <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            grads = rules.constrain_params_tree(grads)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % nmb == 0, (b, nmb)
+                return x.reshape((nmb, b // nmb) + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g = rules.constrain_params_tree(g)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (rules.constrain_params_tree(g_acc), l_acc + l), None
+
+            g0 = rules.constrain_params_tree(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (g_sum, l_sum), _ = jax.lax.scan(accum, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / nmb, g_sum)
+            loss = l_sum / nmb
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, tc.grad_clip)
+        lr = schedules.learning_rate(opt_state.step, tc)
+        new_params, new_opt = adamw.adamw_update(grads, opt_state, params, lr, tc)
+
+        if tc.skip_nonfinite:
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            new_params = jax.tree.map(
+                lambda new, old: jnp.where(ok, new, old), new_params, params)
+            new_opt = jax.tree.map(
+                lambda new, old: jnp.where(ok, new, old), new_opt, opt_state)
+        else:
+            ok = jnp.array(True)
+
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "step_ok": ok.astype(jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,72 @@
+"""Unit tests for the trip-count-aware HLO cost model (launch/hlo_cost.py)."""
+import textwrap
+
+from repro.launch.hlo_cost import CostModel, _split_op_line, parse_module
+
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+    }
+
+    %cond (p2: (s32[], f32[8,16])) -> pred[] {
+      %p2 = (s32[], f32[8,16]) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %lim = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i2, %lim), direction=LT
+    }
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (x0: f32[8,16]) -> f32[8,16] {
+      %x0 = f32[8,16]{1,0} parameter(0)
+      %c0 = s32[] constant(0)
+      %init = (s32[], f32[8,16]) tuple(%c0, %x0)
+      %while.1 = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%while.1), index=1
+    }
+    """)
+
+
+def test_split_op_line_tuple_type():
+    got = _split_op_line(
+        "  %w = (s32[], bf16[2,3]{1,0}, /*index=2*/f32[4]{0}) while(%init), "
+        "condition=%c, body=%b")
+    assert got is not None
+    name, typestr, opcode, rest = got
+    assert name == "w" and opcode == "while"
+
+
+def test_parse_module_computations():
+    comps = parse_module(HLO)
+    assert {"body", "cond", "add", "main"} <= set(comps)
+    assert "dot.1" in comps["body"].ops
+
+
+def test_trip_count_multiplication():
+    cm = CostModel(HLO)
+    # dot flops = 2*8*16*16 = 4096, x5 loop trips
+    assert cm.flops == 2 * 8 * 16 * 16 * 5
+    # all-reduce wire: 8*16*4B * 2 (ring) * 5 trips
+    assert cm.wire == 8 * 16 * 4 * 2 * 5
+    assert cm.coll_counts["all-reduce"] == 5
+
+
+def test_bytes_positive_and_loop_scaled():
+    cm = CostModel(HLO)
+    assert cm.bytes > 0
+    # the dot reads x (512B) + w (1KB) + writes out (512B), x5
+    assert cm.bytes >= (512 + 1024 + 512) * 5

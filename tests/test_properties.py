@@ -1,0 +1,204 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import activations as acts
+from repro.core import spec_theory
+from repro.models import common as cm
+from repro.sharding import rules
+
+
+# ---------------------------------------------------------------------------
+# activations (paper Sec. 3: the β-gated family interpolates SiLU -> ReLU)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-5, 5))
+def test_beta_family_limits(x):
+    x = jnp.float32(x)
+    silu = acts.get("silu")(x)
+    b1 = acts.get("beta=1")(x)
+    np.testing.assert_allclose(float(silu), float(b1), rtol=1e-5, atol=1e-6)
+    big = acts.get("beta=200")(x)
+    relu = acts.get("relu")(x)
+    assert abs(float(big) - float(relu)) < 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.0, 3.0), st.integers(0, 1000))
+def test_shifted_relu_sparsity_monotone(shift, seed):
+    """Larger shift -> more zeros (paper Sec. 5.3)."""
+    x = jnp.asarray(np.random.RandomState(seed).randn(256), jnp.float32)
+    s0 = float(acts.sparsity_of(acts.shifted_relu(x, 0.0)))
+    s1 = float(acts.sparsity_of(acts.shifted_relu(x, shift)))
+    assert s1 >= s0 - 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 100))
+def test_relu_sparsity_definition(seed):
+    x = jnp.asarray(np.random.RandomState(seed).randn(512), jnp.float32)
+    y = acts.get("relu")(x)
+    assert float(acts.sparsity_of(y)) == pytest.approx(
+        float(jnp.mean((x <= 0).astype(jnp.float32))), abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attention: chunked online-softmax == naive attention
+
+
+def _naive_attention(q, k, v, causal, window=0):
+    b, s, kvp, g, d = q.shape
+    qf = q.astype(jnp.float32) / np.sqrt(d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= j > i - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, -1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", w, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 50), st.sampled_from([(16, 8), (32, 8), (24, 12)]),
+       st.booleans(), st.sampled_from([0, 8]))
+def test_flash_attention_matches_naive(seed, sq, causal, window):
+    s, chunk = sq
+    rng = np.random.RandomState(seed)
+    b, kvp, g, d = 2, 2, 2, 8
+    q = jnp.asarray(rng.randn(b, s, kvp, g, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, kvp, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, kvp, d), jnp.float32)
+    got = cm.flash_attention(q, k, v, causal=causal, window=window,
+                             q_chunk=chunk, kv_chunk=chunk)
+    want = _naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_matches_naive():
+    rng = np.random.RandomState(0)
+    b, S, kvp, g, d = 2, 16, 2, 2, 8
+    q = jnp.asarray(rng.randn(b, kvp, g, d), jnp.float32)
+    # head-major cache layout (b, kvp, S, d)
+    kc = jnp.asarray(rng.randn(b, kvp, S, d), jnp.float32)
+    vc = jnp.asarray(rng.randn(b, kvp, S, d), jnp.float32)
+    pos = jnp.asarray([7, 12], jnp.int32)
+    got = cm.decode_attention(q, kc, vc, pos)
+    # manual masked softmax reference
+    qf = q.astype(jnp.float32) / np.sqrt(d)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qf, kc)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, -1)
+    want = jnp.einsum("bhgs,bhsd->bhgd", w, vc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# tile selection / gathered matmul (the paper's mechanism)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([0.25, 0.5, 1.0]))
+def test_gathered_matmul_exact_when_capacity_sufficient(seed, density):
+    """If the true number of active tiles <= capacity, sparse == dense."""
+    rng = np.random.RandomState(seed)
+    T, F, D, tile = 4, 512, 64, 128
+    n_tiles = F // tile
+    k_active = max(1, int(density * n_tiles))
+    x = np.zeros((T, F), np.float32)
+    active = rng.choice(n_tiles, k_active, replace=False)
+    for t_ in active:
+        x[:, t_ * tile:(t_ + 1) * tile] = rng.randn(T, tile)
+    xj = jnp.asarray(x)
+    w = jnp.asarray(rng.randn(F, D) / np.sqrt(F), jnp.float32)
+    sc = cm.tile_scores(xj, tile)
+    idx, mask = cm.select_active_tiles(sc, density)
+    y = cm.gathered_matmul(xj, w, idx, mask, tile)
+    dense = x @ np.asarray(w)
+    np.testing.assert_allclose(np.asarray(y), dense, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 100))
+def test_select_active_tiles_static_shape(seed):
+    """Capacity is static regardless of the input (XLA requirement)."""
+    rng = np.random.RandomState(seed)
+    sc1 = jnp.asarray(np.abs(rng.randn(8)), jnp.float32)
+    sc2 = jnp.asarray(np.zeros(8), jnp.float32)
+    i1, m1 = cm.select_active_tiles(sc1, 0.5)
+    i2, m2 = cm.select_active_tiles(sc2, 0.5)
+    assert i1.shape == i2.shape == (4,)
+    assert float(m2.sum()) == 0.0  # nothing truly active
+
+
+# ---------------------------------------------------------------------------
+# sharding rules invariants
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from(["layers/attn/wq", "layers/attn/wk", "layers/ffn/wu",
+                        "layers/ffn/wd", "embed", "layers/moe/wu",
+                        "layers/ssm/in_proj", "layers/ssm/out_proj"]),
+       st.sampled_from(["train", "serve"]))
+def test_param_pspec_invariants(path, mode):
+    mesh = None
+    import jax as _jax
+    mesh = _jax.sharding.Mesh(
+        np.array(_jax.devices() * 256).reshape(16, 16)[:16, :16],
+        ("data", "model"))
+    shapes = {
+        "layers/attn/wq": (4, 2560, 32, 128),
+        "layers/attn/wk": (4, 2560, 8, 128),
+        "layers/ffn/wu": (4, 2560, 9728),
+        "layers/ffn/wd": (4, 9728, 2560),
+        "embed": (153600, 2560),
+        "layers/moe/wu": (4, 8, 6144, 16384),
+        "layers/ssm/in_proj": (4, 4096, 16384),
+        "layers/ssm/out_proj": (4, 8192, 4096),
+    }
+    shape = shapes[path]
+    spec = rules.param_pspec(path, shape, mesh, mode)
+    named = [a for a in spec if a is not None]
+    assert len(named) == len(set(named))  # no axis used twice
+    for dim, ax in zip(shape, spec):
+        if ax is not None:
+            size = mesh.shape[ax] if isinstance(ax, str) else \
+                int(np.prod([mesh.shape[a] for a in ax]))
+            assert dim % size == 0  # always divisible
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding theory (paper App. C)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64), st.floats(0.01, 0.5), st.floats(0.0, 0.99))
+def test_thm1_speedup_geq_one(gamma, c, s_agg):
+    assert spec_theory.thm1_speedup(gamma, c, s_agg) >= 1.0 - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.01, 0.3), st.floats(0.5, 0.95))
+def test_sparse_optimal_gamma_not_larger(c, alpha):
+    """Paper Fig. 10a: the sparse optimum γ* is <= the standard one."""
+    g_std, _ = spec_theory.optimal_gamma(c, alpha)
+    g_sparse, _ = spec_theory.optimal_gamma(
+        c, alpha, lambda g: 0.3 + 0.3 * (0.97 ** g))
+    assert g_sparse <= g_std
+
+
+def test_thm2_matches_paper_case():
+    """Paper App. C: alpha=.8, c=.02 -> standard optimum γ=12, sparse γ~10."""
+    g_std, _ = spec_theory.optimal_gamma(0.02, 0.8)
+    assert 10 <= g_std <= 14

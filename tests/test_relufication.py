@@ -1,0 +1,71 @@
+"""Relufication surgery + serving-config tests (paper Sec. 4 / 5.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import relufication as rf
+from repro.core.sparsity import measure_site_sparsity
+from repro.models import registry
+
+
+def test_surgery_is_config_only():
+    cfg = get_config("tiny")
+    c1 = rf.relufy_stage1(cfg)
+    c2 = rf.relufy_stage2(cfg)
+    assert c1.activation == "relu" and not c1.post_norm_relu
+    assert c2.activation == "relu" and c2.post_norm_relu
+    # weights pass through unchanged: same init works under both configs
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    for c in (cfg, c1, c2):
+        logits = fam.model_forward(params, batch, c)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_stage2_sparsifies_qkv_input():
+    cfg = rf.relufy_stage2(get_config("tiny"))
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    sp2 = measure_site_sparsity(params, batch, cfg)
+    sp1 = measure_site_sparsity(params, batch, rf.relufy_stage1(cfg).replace(
+        post_norm_relu=False))
+    # post-norm ReLU must create qkv-input sparsity; stage 1 has none
+    assert sp2["mean/qkv"] > 0.2
+    assert sp1["mean/qkv"] < 0.01
+
+
+def test_calibrate_shift_hits_target():
+    """The calibrated b should push sparsity toward the target (Sec. 5.3)."""
+    cfg = rf.relufy_stage1(get_config("tiny"))
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab_size)}
+    b = rf.calibrate_shift(params, batch, cfg, target_sparsity=0.9)
+    assert b > 0
+    shifted = rf.shifted_relufy(cfg, b)
+    sp = measure_site_sparsity(params, batch, shifted)
+    base = measure_site_sparsity(params, batch, cfg)
+    assert sp["mean/down"] > base["mean/down"] + 0.1
+    assert sp["mean/down"] > 0.6  # near the 0.9 target (glu product dilutes)
+
+
+def test_enable_sparse_serving_roundtrip():
+    cfg = rf.enable_sparse_serving(get_config("tiny"), 0.25, 0.75,
+                                   reuse_window=8)
+    assert cfg.sparsity.enabled
+    assert cfg.sparsity.ffn_tile_density == 0.25
+    assert cfg.sparsity.reuse_window == 8
+    # JSON round-trip keeps the sparsity config (deployable descriptor)
+    cfg2 = type(cfg).from_json(cfg.to_json())
+    assert cfg2.sparsity == cfg.sparsity
+
+
+def test_norm_ppf_sane():
+    assert abs(rf._norm_ppf(0.5)) < 1e-6
+    assert abs(rf._norm_ppf(0.975) - 1.96) < 0.01
+    assert abs(rf._norm_ppf(0.025) + 1.96) < 0.01
