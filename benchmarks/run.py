@@ -24,11 +24,25 @@ MODULES = [
     "benchmarks.fig9_flops_latency",
     "benchmarks.fig10_optimal_gamma",
     "benchmarks.appE_scaling",
+    "benchmarks.serving_throughput",
+]
+
+# training-free modules that exercise the kernel + serving hot paths; the CI
+# benchmark-smoke job runs these (BENCH_SMOKE=1 shrinks workloads further)
+SMOKE_MODULES = [
+    "benchmarks.fig9_flops_latency",
+    "benchmarks.fig10_optimal_gamma",
+    "benchmarks.serving_throughput",
 ]
 
 
 def run_module(mod_name: str) -> None:
     import importlib
+    # script invocation puts benchmarks/ (not the repo root) on sys.path;
+    # make `import benchmarks.*` work either way
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
     mod = importlib.import_module(mod_name)
     for r in mod.run():
         print(r, flush=True)
@@ -36,14 +50,20 @@ def run_module(mod_name: str) -> None:
 
 def main() -> None:
     os.makedirs("experiments", exist_ok=True)
-    if len(sys.argv) > 1 and sys.argv[1] != "--all":
-        run_module(sys.argv[1])
+    smoke = "--smoke" in sys.argv
+    args = [a for a in sys.argv[1:] if a not in ("--smoke", "--all")]
+    if args:
+        if smoke:
+            os.environ["BENCH_SMOKE"] = "1"  # before the module import
+        run_module(args[0])
         return
     print("name,us_per_call,derived", flush=True)
     failures = 0
     env = dict(os.environ)
     env.setdefault("PYTHONPATH", "src")
-    for mod_name in MODULES:
+    if smoke:
+        env["BENCH_SMOKE"] = "1"
+    for mod_name in (SMOKE_MODULES if smoke else MODULES):
         t0 = time.time()
         r = subprocess.run([sys.executable, "-m", "benchmarks.run", mod_name],
                            capture_output=True, text=True, env=env)

@@ -1,0 +1,129 @@
+"""Serving throughput: continuous batching vs the seed single-batch loop.
+
+A mixed-length multi-request workload (the ROADMAP's heavy-traffic shape) is
+served two ways:
+
+* legacy ``ServeEngine.generate`` — the seed path: one request at a time
+  (its contiguous cache pads every sequence to max_len and cannot mix
+  prompt lengths in a batch);
+* ``ContinuousBatchingEngine`` — requests share slots + the paged KV pool,
+  admitted/retired mid-decode, at several request-arrival rates.
+
+Reports aggregate tokens/sec, the CB speedup, and the down-projection
+weight-I/O saved by γ-window reuse (paper Fig. 7c). Model quality is
+irrelevant to throughput, so params are random — no training, which keeps
+this runnable in the CI benchmark-smoke job (BENCH_SMOKE=1 shrinks the
+workload).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.serving import ContinuousBatchingEngine, ServeEngine
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+
+def _workload(cfg, n_requests):
+    rng = np.random.RandomState(0)
+    lengths = rng.randint(6, 30, n_requests)
+    max_news = rng.randint(12, 28 if not SMOKE else 16, n_requests)
+    prompts = [rng.randint(0, cfg.vocab_size, s).astype(np.int32)
+               for s in lengths]
+    return prompts, [int(m) for m in max_news]
+
+
+def _run_legacy(cfg, params, prompts, max_news, max_len):
+    eng = ServeEngine(cfg, params, max_len=max_len)
+    def serve():
+        n = 0
+        for p, m in zip(prompts, max_news):
+            r = eng.generate({"tokens": jnp.asarray(p[None], jnp.int32)}, m)
+            n += r.tokens.shape[1]
+        return n
+    serve()  # warm (compile)
+    t0 = time.time()
+    n = serve()
+    return n / (time.time() - t0)
+
+
+def _run_cb(cfg, params, prompts, max_news, *, arrival_every, gamma=0,
+            n_slots=4):
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
+                                   block_size=16, max_blocks_per_seq=4)
+    def serve():
+        pending = list(zip(prompts, max_news))
+        next_arrival = eng.t  # engine step counter keeps running across runs
+        uids = []
+        while pending or eng.scheduler.has_work():
+            while pending and eng.t >= next_arrival:
+                p, m = pending.pop(0)
+                uids.append(eng.submit(p, m, reuse_window=gamma))
+                next_arrival = eng.t + arrival_every
+            if not eng.step():
+                if not pending:
+                    break
+                # idle gap before the next arrival: fast-forward the clock
+                # instead of spinning (step() no longer advances eng.t)
+                next_arrival = eng.t
+        eng.scheduler.retire_finished(eng.t)
+        res = eng.scheduler.results
+        return sum(len(res[u].tokens) for u in uids)
+    serve()  # warm (compile; the jit caches live on the engine instance)
+    eng.scheduler.results.clear()
+    t0 = time.time()
+    n = serve()
+    dt = time.time() - t0
+    return n / dt, eng.weight_io_saved(), eng.tile_activity_rate()
+
+
+def run():
+    cfg = get_config("tiny-relu")
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    n_requests = 4 if SMOKE else 8
+    prompts, max_news = _workload(cfg, n_requests)
+    max_len = int(max(len(p) + m for p, m in zip(prompts, max_news))) + 2
+
+    tps_legacy = _run_legacy(cfg, params, prompts, max_news, max_len)
+    rows, full = [], {"n_requests": n_requests,
+                      "legacy_tokens_per_s": tps_legacy}
+    rows.append(f"serving/legacy_sequential,{1e6 / tps_legacy:.0f},"
+                f"toks_per_s={tps_legacy:.1f}")
+
+    rates = [0, 2] if SMOKE else [0, 2, 6]
+    for rate in rates:
+        tps, _, _ = _run_cb(cfg, params, prompts, max_news,
+                            arrival_every=rate)
+        full[f"cb_rate{rate}_tokens_per_s"] = tps
+        full[f"cb_rate{rate}_speedup"] = tps / tps_legacy
+        rows.append(f"serving/cb_rate{rate},{1e6 / tps:.0f},"
+                    f"toks_per_s={tps:.1f};speedup={tps / tps_legacy:.2f}x")
+
+    # γ-window reuse: same workload, masked decode between refreshes
+    tps_g, io_saved, tiles = _run_cb(cfg, params, prompts, max_news,
+                                     arrival_every=0, gamma=4)
+    full["cb_gamma4_tokens_per_s"] = tps_g
+    full["cb_gamma4_io_saved"] = io_saved
+    full["cb_gamma4_tile_activity"] = tiles
+    rows.append(f"serving/cb_gamma4,{1e6 / tps_g:.0f},"
+                f"toks_per_s={tps_g:.1f};io_saved={io_saved:.3f};"
+                f"tile_activity={tiles:.3f}")
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_serving.json", "w") as f:
+        json.dump(full, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -14,6 +14,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+TILE = 128  # lane-width tile the activity scores are reduced over
+
+
+def tile_activity(h: jnp.ndarray, tile: int = TILE) -> jnp.ndarray:
+    """Per-token tile-activity scores — the kernel's s_ref definition as a
+    plain-XLA function. h: (T, F) -> (T, F // tile). Shared by the serving
+    decode step (which carries scores through the batch dimension) and the
+    fused kernels below (validated equal in tests/test_kernels.py)."""
+    T, F = h.shape
+    return jnp.max(jnp.abs(h).reshape(T, F // tile, tile), axis=-1)
+
+
 def _make_kernel(shift: float):
     def kernel(x_ref, w_ref, h_ref, s_ref):
         h = jax.lax.dot_general(
@@ -22,8 +34,19 @@ def _make_kernel(shift: float):
         h = jnp.maximum(h - shift, 0.0)
         h_ref[...] = h
         T, Fb = h.shape
-        s_ref[...] = jnp.max(jnp.abs(h).reshape(T, Fb // 128, 128),
+        s_ref[...] = jnp.max(jnp.abs(h).reshape(T, Fb // TILE, TILE),
                              axis=(0, 2))[None, :]
+    return kernel
+
+
+def _make_kernel_tokens(shift: float):
+    def kernel(x_ref, w_ref, h_ref, s_ref):
+        h = jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        h = jnp.maximum(h - shift, 0.0)
+        h_ref[...] = h
+        s_ref[...] = tile_activity(h)
     return kernel
 
 
@@ -55,3 +78,37 @@ def fused_up_relu(x, wu, shift: float = 0.0, *, block_f: int = 512,
         interpret=interpret,
     )(x, wu)
     return h, scores[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("shift", "block_f", "interpret"))
+def fused_up_relu_tokens(x, wu, shift: float = 0.0, *, block_f: int = 512,
+                         interpret: bool = True):
+    """Per-token variant for continuous-batching serving: every request in
+    the batch keeps its OWN activity scores (the batch-union reduction of
+    ``fused_up_relu`` would couple co-scheduled requests).
+
+    x: (T, d), wu: (d, F) -> (h (T, F) f32, scores (T, F/128) f32)."""
+    T, d = x.shape
+    F = wu.shape[1]
+    block_f = min(block_f, F)
+    assert F % block_f == 0 and block_f % TILE == 0
+    grid = (F // block_f,)
+    h, scores = pl.pallas_call(
+        _make_kernel_tokens(shift),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, block_f), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((T, block_f), lambda i: (0, i)),
+            pl.BlockSpec((T, block_f // TILE), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, F), jnp.float32),
+            jax.ShapeDtypeStruct((T, F // TILE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, wu)
+    return h, scores

@@ -4,6 +4,7 @@ the paper's sparse-inference config (relufied weights, tile capacities).
   python -m repro.launch.serve --arch deepseek-67b --shape decode_32k \
       --sparse-density 0.25 [--multi-pod]
   python -m repro.launch.serve --arch qwen3-4b --smoke --tokens 32   # CPU
+  python -m repro.launch.serve --arch qwen3-4b --smoke --continuous  # CB path
 """
 from __future__ import annotations
 
@@ -19,8 +20,14 @@ def main() -> None:
     ap.add_argument("--reuse-window", type=int, default=0)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="smoke the continuous-batching paged-cache engine "
+                         "(dense family only)")
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args()
+    if args.continuous and not args.smoke:
+        ap.error("--continuous requires --smoke (the pod-mesh launcher "
+                 "lowers the legacy decode cell)")
 
     import jax
     import jax.numpy as jnp
@@ -35,6 +42,29 @@ def main() -> None:
         cfg = relufication.enable_sparse_serving(
             cfg, args.sparse_density, min(1.0, args.sparse_density * 3),
             reuse_window=args.reuse_window)
+
+    if args.smoke and args.continuous:
+        import numpy as np
+        from repro.serving import ContinuousBatchingEngine
+        fam = registry.get_family(cfg)
+        params = fam.init_params(jax.random.PRNGKey(0), cfg)
+        lengths = (8, 13, 21)
+        max_bps = -(-(max(lengths) + args.tokens) // 16)  # fit any request
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=16,
+                                       max_blocks_per_seq=max_bps,
+                                       track_sparsity=True)
+        rng = np.random.RandomState(1)
+        uids = [eng.submit(rng.randint(0, cfg.vocab_size, s), args.tokens,
+                           reuse_window=args.reuse_window)
+                for s in lengths]
+        res = eng.run()
+        aggs = [eng.trackers[u].aggregated_sparsity() for u in uids]
+        print(f"continuous batching served {len(uids)} requests "
+              f"({sum(len(res[u].tokens) for u in uids)} tokens); "
+              f"per-request aggregated FFN sparsity "
+              f"{', '.join(f'{a:.3f}' for a in aggs)}; "
+              f"weight I/O saved {eng.weight_io_saved():.1%}")
+        return
 
     if args.smoke:
         from repro.serving.engine import ServeEngine

@@ -281,6 +281,73 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# paged (block-table) KV cache — continuous-batching serving
+#
+# A shared pool of fixed-size blocks (L, n_blocks, kvp, block_size, hd) holds
+# the K/V of every in-flight request; each request owns an ordered list of
+# block ids (its "block table" row). Sequences of different lengths coexist
+# without padding the pool to max_len: a request only holds the blocks its
+# current length needs, and retirement returns them to the allocator.
+# Block 0 is reserved as a scratch block: idle batch slots and block-table
+# padding point at it, so writes from inactive slots land harmlessly there.
+
+SCRATCH_BLOCK = 0
+
+
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=None) -> PyTree:
+    """Block pool, head-major within a block (decode reads it untransposed)."""
+    g = HeadGeometry(cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    shape = (cfg.n_layers, n_blocks, g.kvp, block_size, g.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_gather(pages_l: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Assemble per-request contiguous K or V views from the pool.
+
+    pages_l: (n_blocks, kvp, bs, hd) one layer's pool; table: (b, nb) block
+    ids in sequence order. Returns (b, kvp, nb*bs, hd) — the head-major
+    layout decode_attention consumes. Positions past a request's length hold
+    stale/scratch data and must be masked by `pos` (decode_attention does).
+    """
+    b, nb = table.shape
+    _, kvp, bs, hd = pages_l.shape
+    gath = pages_l[table]  # (b, nb, kvp, bs, hd)
+    return gath.transpose(0, 2, 1, 3, 4).reshape(b, kvp, nb * bs, hd)
+
+
+def paged_write_token(pages: jnp.ndarray, layer, table: jnp.ndarray,
+                      pos: jnp.ndarray, val: jnp.ndarray,
+                      block_size: int) -> jnp.ndarray:
+    """Scatter one token's K or V per request through the block table.
+
+    pages: (L, n_blocks, kvp, bs, hd); layer: scalar (may be traced);
+    table: (b, nb); pos: (b,) absolute write position; val: (b, kvp, hd).
+    A true scatter — no full-layer rewrite rides the decode loop.
+    """
+    b = pos.shape[0]
+    blk = jnp.take_along_axis(table, (pos // block_size)[:, None], axis=1)[:, 0]
+    off = pos % block_size
+    return pages.at[layer, blk, :, off, :].set(val.astype(pages.dtype))
+
+
+def paged_write_prefill(pages: jnp.ndarray, kv: jnp.ndarray,
+                        blocks: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Write a whole prompt's K or V into freshly allocated blocks.
+
+    pages: (L, n_blocks, kvp, bs, hd); kv: (L, s, kvp, hd) from prefill;
+    blocks: (nb,) with nb*bs >= s (tail zero-padded inside the last block).
+    """
+    L, s, kvp, hd = kv.shape
+    nb = blocks.shape[0]
+    pad = nb * block_size - s
+    kv = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tiles = kv.reshape(L, nb, block_size, kvp, hd).transpose(0, 1, 3, 2, 4)
+    return pages.at[:, blocks].set(tiles.astype(pages.dtype))
+
+
+# ---------------------------------------------------------------------------
 # the paper's mechanism: tile-level activation sparsity (DESIGN.md §3)
 
 

@@ -28,3 +28,21 @@ def model_decode(params, cache, token, pos, cfg: ModelConfig, stats=None,
                  ffn_masks=None):
     return T.decode_step(params, cache, token, pos, cfg, stats=stats,
                          ffn_masks=ffn_masks)
+
+
+# -- continuous-batching (paged-cache) serving interface --------------------
+
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int):
+    return cm.init_paged_cache(cfg, n_blocks, block_size)
+
+
+def model_prefill_paged(params, batch, cfg: ModelConfig, pages, blocks,
+                        block_size: int, true_len=None):
+    return T.prefill_paged(params, batch["tokens"], cfg, pages, blocks,
+                           block_size=block_size, true_len=true_len)
+
+
+def model_decode_paged(params, pages, table, token, pos, cfg: ModelConfig,
+                       ffn_masks, refresh, block_size: int):
+    return T.decode_step_paged(params, pages, table, token, pos, cfg,
+                               ffn_masks, refresh, block_size=block_size)

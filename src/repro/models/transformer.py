@@ -317,11 +317,15 @@ def logits_from(params, x, cfg: ModelConfig):
 
 def forward(params, tokens, cfg: ModelConfig, *, stats: Optional[cm.StatsCollector] = None,
             extra_embeds: Optional[jnp.ndarray] = None, return_kv: bool = False,
-            remat_block=None):
+            remat_block=None, last_index=None):
     """Full-sequence forward. tokens: (b, s) -> logits (b, s_total, vocab_p).
 
     extra_embeds (b, n, d): modality-frontend stubs (vision patches / audio
     frames) prepended to the token embeddings (internvl2).
+
+    last_index: optional TRACED scalar — with return_kv, take the prefill
+    logits from this position instead of s-1 (tokens beyond it are padding;
+    causality keeps the earlier positions exact).
     """
     stats = stats or cm.StatsCollector(False)
     params = cm.cast_params(params, cfg)
@@ -364,7 +368,9 @@ def forward(params, tokens, cfg: ModelConfig, *, stats: Optional[cm.StatsCollect
     if return_kv:
         # prefill: only the last position's logits are needed -> avoid the
         # (b, s, vocab_p) buffer entirely
-        logits = logits_from(params, x[:, -1:], cfg)
+        xl = (x[:, -1:] if last_index is None
+              else jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1))
+        logits = logits_from(params, xl, cfg)
         return logits, kv_stack
     return logits_from(params, x, cfg)
 
@@ -449,3 +455,137 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig,
     x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
     logits = logits_from(params, x, cfg)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching serving: paged cache + per-request γ-window masks
+#
+# Unlike decode_step above (uniform positions, contiguous per-batch cache),
+# these entry points serve a *slot* batch whose requests were admitted at
+# different times: every slot has its own write position, its own block-table
+# row into the shared page pool, and its own γ-window FFN mask + refresh
+# phase. Everything is computed in-graph — one trace, no host round-trips.
+
+
+def _ffn_tile(cfg: ModelConfig) -> int:
+    F = cfg.d_ff
+    ts = cfg.sparsity.tile_size
+    return ts if F % ts == 0 else cm.pick_group_tile(F, 1)
+
+
+def apply_attn_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
+                            pos, *, layer, block_size: int,
+                            stats: cm.StatsCollector):
+    """One-token attention against the paged pool. x: (b, d); pos: (b,)
+    per-slot write positions (NOT uniform); table: (b, nb) block ids.
+    Returns (out (b, d), k_pages, v_pages)."""
+    g = attn_geometry(cfg)
+    q, k, v = _qkv(p, x[:, None, :], cfg, pos[:, None],
+                   stats=stats, input_density=cfg.sparsity.input_tile_density)
+    q = q.reshape(q.shape[0], g.kvp, g.group, g.head_dim)
+    k_pages = cm.paged_write_token(k_pages, layer, table, pos, k[:, 0],
+                                   block_size)
+    v_pages = cm.paged_write_token(v_pages, layer, table, pos, v[:, 0],
+                                   block_size)
+    kl = jax.lax.dynamic_index_in_dim(k_pages, layer, 0, keepdims=False)
+    vl = jax.lax.dynamic_index_in_dim(v_pages, layer, 0, keepdims=False)
+    kg = cm.paged_gather(kl, table)
+    vg = cm.paged_gather(vl, table)
+    o = cm.decode_attention(q, kg, vg, pos, window=cfg.sliding_window)
+    out = _attn_out(p, o.reshape(o.shape[0], 1, g.hp, g.head_dim), cfg)[:, 0]
+    return out, k_pages, v_pages
+
+
+def apply_ffn_reuse(p, x, cfg: ModelConfig, *, mask, refresh):
+    """Decode FFN with per-request γ-window weight reuse (paper Fig. 7c),
+    batched over slots. x: (b, d); mask: (b, F) bool — the rows loaded in
+    each request's current window; refresh: (b,) bool — slots starting a new
+    window this step (they run dense and record fresh activity).
+
+    Returns (out (b, d), act (b, F) bool this step's post-mask activity,
+    scores (b, F//tile) per-request tile-activity, density (b,) fraction of
+    down-proj rows read — the weight-I/O metric)."""
+    from repro.kernels.fused_ffn import tile_activity
+
+    act_fn = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+    dens_in = (cfg.sparsity.input_tile_density if cfg.sparsity.enabled
+               else 1.0)
+    if cfg.ffn_kind == "glu":
+        pre = cm.maybe_sparse_matmul(x, p["wg"], cfg, dens_in)
+        h = act_fn(pre) * cm.maybe_sparse_matmul(x, p["wu"], cfg, dens_in)
+    else:
+        h = act_fn(cm.maybe_sparse_matmul(x, p["wu"], cfg, dens_in))
+    eff = mask | refresh[:, None]  # refresh ⇒ all rows participate
+    h = h * eff.astype(h.dtype)
+    act = h != 0
+    scores = tile_activity(h, _ffn_tile(cfg))
+    density = jnp.mean(eff.astype(jnp.float32), axis=-1)
+    dens_ffn = (cfg.sparsity.ffn_tile_density if cfg.sparsity.enabled
+                else 1.0)
+    out = cm.maybe_sparse_matmul(h, p["wd"], cfg, dens_ffn)
+    return out, act, scores, density
+
+
+def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
+                             pos, *, layer, block_size: int, mask, refresh):
+    stats = cm.StatsCollector(False)
+    h = post_norm(cm.apply_norm(p["ln1"], x[:, None], cfg)[:, 0], cfg)
+    a, k_pages, v_pages = apply_attn_decode_paged(
+        p["attn"], h, cfg, k_pages, v_pages, table, pos, layer=layer,
+        block_size=block_size, stats=stats)
+    x = x + a
+    h = post_norm(cm.apply_norm(p["ln2"], x[:, None], cfg)[:, 0], cfg)
+    f, act, scores, density = apply_ffn_reuse(p["ffn"], h, cfg, mask=mask,
+                                              refresh=refresh)
+    x = x + f
+    return x, k_pages, v_pages, act, scores, density
+
+
+def decode_step_paged(params, pages, table, token, pos, cfg: ModelConfig,
+                      ffn_masks, refresh, *, block_size: int):
+    """One continuous-batching decode step over the shared page pool.
+
+    token/pos/refresh: (b,) per slot; table: (b, nb); ffn_masks: (L, b, F)
+    bool γ-window masks. Idle slots point at the scratch block and are
+    simply ignored by the caller. Returns (logits (b, vocab_p), pages,
+    new_masks (L, b, F), aux) where aux = (act (L, b, F), scores
+    (L, b, F//tile), density (L, b))."""
+    params = cm.cast_params(params, cfg)
+    x = embed_tokens(params, token[:, None], cfg, pos[:, None])[:, 0]
+
+    def body(carry, xs):
+        x, kp, vp = carry
+        pl_i, li, fm = xs
+        x, kp, vp, act, scores, density = apply_block_decode_paged(
+            pl_i, x, cfg, kp, vp, table, pos, layer=li,
+            block_size=block_size, mask=fm, refresh=refresh)
+        return (x, kp, vp), (act, scores, density)
+
+    xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks)
+    (x, kp, vp), (act, scores, density) = jax.lax.scan(
+        body, (x, pages["k"], pages["v"]), xs)
+    new_masks = jnp.where(refresh[None, :, None], act, ffn_masks)
+
+    x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
+    logits = logits_from(params, x, cfg)
+    return logits, {"k": kp, "v": vp}, new_masks, (act, scores, density)
+
+
+def prefill_paged(params, tokens, cfg: ModelConfig, pages, blocks,
+                  *, block_size: int, true_len=None):
+    """Prefill one request's prompt into freshly allocated pool blocks.
+
+    tokens: (1, s); blocks: (nb,) with nb*block_size >= s. Returns
+    (last-token logits (1, vocab_p), pages).
+
+    true_len (traced scalar): real prompt length when `tokens` is
+    zero-padded to a block multiple — the engine pads so compiles are keyed
+    on block count (<= max_blocks_per_seq shapes), not raw prompt length.
+    K/V written for pad positions is masked by `pos` until decode overwrites
+    it in place."""
+    li = None if true_len is None else true_len - 1
+    logits, kv = forward(params, tokens, cfg, return_kv=True, last_index=li)
+    k, v = kv  # (L, 1, s, kvp, hd)
+    kp = cm.paged_write_prefill(pages["k"], k[:, 0], blocks, block_size)
+    vp = cm.paged_write_prefill(pages["v"], v[:, 0], blocks, block_size)
+    return logits[:, -1], {"k": kp, "v": vp}

@@ -1,0 +1,8 @@
+"""Serving stack: continuous-batching engine over a paged KV cache, the
+legacy single-batch engine, scheduler, and speculative decoding."""
+from repro.serving.engine import (  # noqa: F401
+    ContinuousBatchingEngine, GenerationResult, ServeEngine,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    BlockAllocator, Request, RequestQueue, RequestResult, Scheduler,
+)

@@ -1,15 +1,26 @@
-"""Serving engine: batched prefill + decode with the paper's sparse-inference
-features — tile-gathered sparse FFN, aggregated-sparsity tracking (Sec. 5.1),
-and γ-window weight reuse (Fig. 7c).
+"""Serving engines for the paper's sparse-inference machinery.
 
-Works with any registered family; sparsity tracking / reuse use the dense
-family's instrumented decode (the paper's OPT/Llama/Falcon experiments are
-dense models).
+Two tiers:
+
+* ``ContinuousBatchingEngine`` — the production path. Requests are admitted
+  and retired mid-decode by a scheduler (serving/scheduler.py); K/V lives in
+  a paged block pool shared across the batch (models/common.py) so
+  mixed-length sequences coexist without padding to max_len; a SINGLE jitted
+  decode step serves every slot, carrying per-request γ-window FFN masks
+  (paper Fig. 7c) and per-request tile-activity scores (kernels/fused_ffn)
+  through the batch dimension. One trace, no host round-trips in the loop —
+  the only per-step host traffic is the (B,) next-token / logprob fetch the
+  scheduler needs.
+
+* ``ServeEngine`` — the legacy single-batch path (fixed max_len contiguous
+  cache, per-token python loop), kept as the compatibility surface for
+  ``generate()``/``score()`` callers (tests, launch/serve.py) and for the
+  instrumented sparsity-measurement runs that want batch-union masks.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +30,7 @@ from repro.configs.base import ModelConfig
 from repro.core.sparsity import AggregatedTracker
 from repro.models import common as cm
 from repro.models import registry
+from repro.serving.scheduler import Request, RequestResult, Scheduler
 
 
 @dataclasses.dataclass
@@ -28,6 +40,176 @@ class GenerationResult:
     site_sparsity: Dict[str, float]
     aggregated: Optional[AggregatedTracker]
     steps: int
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+
+
+class ContinuousBatchingEngine:
+    """Continuous-batching sparse serving over a paged KV cache.
+
+    Parameters
+    ----------
+    n_slots: max concurrently decoding requests (the jitted batch width).
+    block_size: tokens per KV block.
+    n_blocks: shared pool size (block 0 is scratch). Defaults to full
+        residency (every slot can hold max_blocks_per_seq blocks).
+    max_blocks_per_seq: static block-table width; bounds prompt+generation
+        length to max_blocks_per_seq * block_size tokens.
+    track_sparsity: keep a per-request AggregatedTracker (paper Sec. 5.1)
+        fed from the in-graph FFN activity (costs one extra host fetch per
+        step).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 block_size: int = 16, max_blocks_per_seq: int = 8,
+                 n_blocks: Optional[int] = None,
+                 track_sparsity: bool = False):
+        fam = registry.get_family(cfg)
+        if not hasattr(fam, "model_decode_paged"):
+            raise ValueError(
+                f"family {cfg.family!r} has no paged-cache serving support")
+        if not cfg.d_ff:
+            raise ValueError("continuous batching requires an FFN (d_ff > 0)")
+        if n_blocks is None:
+            n_blocks = 1 + n_slots * max_blocks_per_seq
+        if n_blocks - 1 < max_blocks_per_seq:
+            raise ValueError("pool smaller than one request's worst case")
+        self.cfg = cfg
+        self.params = params
+        self.fam = fam
+        self.block_size = block_size
+        self.track = track_sparsity
+        self.scheduler = Scheduler(n_slots, n_blocks, block_size,
+                                   max_blocks_per_seq)
+        self.pages = fam.init_paged_cache(cfg, n_blocks, block_size)
+        self.masks = jnp.zeros((cfg.n_layers, n_slots, cfg.d_ff), bool)
+        self.trackers: Dict[int, AggregatedTracker] = {}
+        self.t = 0  # engine step counter
+        self._uid = 0
+        # weight-I/O accounting: sums over (active slot, step) of the fraction
+        # of down-proj rows actually read (refresh steps count as 1.0) and of
+        # the fraction of active d_ff tiles (kernels/fused_ffn granularity)
+        self._dens_sum = 0.0
+        self._tiles_sum = 0.0
+        self._dens_n = 0
+
+        vocab = cfg.vocab_size
+
+        def greedy(logits):
+            """(b, vocab_p) -> greedy next token + its logprob, both (b,)."""
+            lv = logits[:, :vocab].astype(jnp.float32)
+            nxt = jnp.argmax(lv, axis=-1).astype(jnp.int32)
+            lp = jnp.take_along_axis(jax.nn.log_softmax(lv, axis=-1),
+                                     nxt[:, None], 1)[:, 0]
+            return nxt, lp
+
+        def decode(params, pages, table, token, pos, masks, refresh):
+            logits, pages, new_masks, (act, scores, density) = \
+                fam.model_decode_paged(params, pages, table, token, pos, cfg,
+                                       masks, refresh, block_size)
+            nxt, lp = greedy(logits)
+            # per-request fraction of active d_ff tiles this step — the
+            # granularity the tile-gathered kernels load weights at
+            tiles = jnp.mean((scores > 0).astype(jnp.float32), axis=(0, 2))
+            return nxt, lp, pages, new_masks, tiles, jnp.mean(density, 0), act
+
+        def prefill(params, tokens, pages, blocks, true_len):
+            last, pages = fam.model_prefill_paged(params, {"tokens": tokens},
+                                                  cfg, pages, blocks,
+                                                  block_size,
+                                                  true_len=true_len)
+            nxt, lp = greedy(last)
+            return nxt[0], lp[0], pages
+
+        # donate the page pool + masks: decode/prefill update them in place
+        # instead of copying the whole pool every token
+        self._decode = jax.jit(decode, donate_argnums=(1, 5))
+        # prompts are padded to block multiples, so prefill compiles at most
+        # max_blocks_per_seq distinct shapes (admission-path latency bound)
+        self._prefill = jax.jit(prefill, donate_argnums=(2,))
+
+    # -- request API --------------------------------------------------------
+    def submit(self, prompt, max_new: int, reuse_window: int = 0) -> int:
+        """Enqueue a request; returns its uid. Admission happens inside
+        step() when a slot and enough KV blocks are free."""
+        self._uid += 1
+        req = Request(uid=self._uid,
+                      tokens=np.asarray(prompt, np.int32).reshape(-1),
+                      max_new=max_new, reuse_window=reuse_window)
+        self.scheduler.submit(req)
+        return self._uid
+
+    def step(self) -> bool:
+        """Retire finished requests, admit queued ones, decode one token for
+        every active slot. Returns False when nothing decoded."""
+        sched = self.scheduler
+        sched.retire_finished(self.t)
+        for _, slot in sched.admit(self.t):
+            s = slot.request.prompt_len
+            nb_eff = -(-s // self.block_size)  # blocks the prompt occupies
+            toks = np.zeros((1, nb_eff * self.block_size), np.int32)
+            toks[0, :s] = slot.request.tokens
+            nxt, lp, self.pages = self._prefill(
+                self.params, jnp.asarray(toks), self.pages,
+                jnp.asarray(slot.blocks[:nb_eff], jnp.int32),
+                jnp.asarray(s, jnp.int32))
+            sched.seed(slot, int(nxt), float(lp))
+            if self.track:
+                self.trackers[slot.request.uid] = AggregatedTracker(
+                    self.cfg.n_layers, self.cfg.d_ff)
+        active = sched.active_indices()
+        if not active:
+            return False
+        tokens, pos, table, refresh = sched.batch_arrays()
+        nxt, lp, self.pages, self.masks, tiles, dens, act = self._decode(
+            self.params, self.pages, jnp.asarray(table),
+            jnp.asarray(tokens), jnp.asarray(pos), self.masks,
+            jnp.asarray(refresh))
+        dens_np, tiles_np = np.asarray(dens), np.asarray(tiles)
+        for i in active:
+            self._dens_sum += float(dens_np[i])
+            self._tiles_sum += float(tiles_np[i])
+            self._dens_n += 1
+        if self.track:
+            act_np = np.asarray(act)  # (L, B, F)
+            for i in active:
+                uid = sched.slots[i].request.uid
+                self.trackers[uid].update(act_np[:, i, :])
+        sched.record(np.asarray(nxt), np.asarray(lp))
+        self.t += 1
+        return True
+
+    def run(self, max_steps: int = 1_000_000) -> Dict[int, RequestResult]:
+        """Drive step() until every submitted request has finished."""
+        for _ in range(max_steps):
+            progressed = self.step()
+            if not self.scheduler.has_work():
+                break
+            if not progressed and len(self.scheduler.queue) == 0:
+                break
+        self.scheduler.retire_finished(self.t)
+        return dict(self.scheduler.results)
+
+    # -- metrics ------------------------------------------------------------
+    def weight_io_saved(self) -> float:
+        """Fraction of down-projection weight reads skipped by γ-window
+        reuse, averaged over (active slot, step). 0.0 for dense serving."""
+        if not self._dens_n:
+            return 0.0
+        return 1.0 - self._dens_sum / self._dens_n
+
+    def tile_activity_rate(self) -> float:
+        """Mean fraction of d_ff tiles with any live activation, per (active
+        slot, step) — what a tile-gathered down-projection would load."""
+        if not self._dens_n:
+            return 1.0
+        return self._tiles_sum / self._dens_n
+
+
+# ---------------------------------------------------------------------------
+# legacy single-batch path (compatibility: generate()/score() callers)
 
 
 class ServeEngine:

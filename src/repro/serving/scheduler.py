@@ -1,0 +1,216 @@
+"""Continuous-batching scheduler: request queue, block allocator, and slot
+bookkeeping for the paged KV cache (models/common.py).
+
+Pure host-side logic — no jax — so admission/retirement policy is unit-
+testable without a model. The engine (serving/engine.py) owns the device
+state (page pool, γ-window masks) and calls into this scheduler every step:
+
+  1. retire slots whose requests finished, returning their blocks;
+  2. admit queued requests into free slots while blocks last (strict FIFO);
+  3. build the fixed-shape slot batch the jitted decode step consumes.
+
+A request is admitted only if its *entire* lifetime block need fits now
+(ceil((prompt + max_new) / block_size)), so decode never stalls mid-flight
+on allocation failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.models.common import SCRATCH_BLOCK
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray  # (s,) int32 prompt
+    max_new: int
+    # γ-window weight reuse (paper Fig. 7c): refresh the FFN mask every γ
+    # decoded tokens; 0 = dense (refresh every step, mask never binds).
+    reuse_window: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclasses.dataclass
+class RequestResult:
+    uid: int
+    tokens: np.ndarray  # (max_new,) int32
+    logprobs: np.ndarray  # (max_new,) f32
+    prompt_len: int
+    admitted_step: int
+    finished_step: int
+
+
+class RequestQueue:
+    """FIFO admission queue. Head-of-line blocking is deliberate: a large
+    request is never starved by small ones slipping past it."""
+
+    def __init__(self):
+        self._q: deque = deque()
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def peek(self) -> Optional[Request]:
+        return self._q[0] if self._q else None
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class BlockAllocator:
+    """Free-list over the shared page pool. Block 0 (SCRATCH_BLOCK) is never
+    handed out — idle slots and table padding point at it."""
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks - 1, SCRATCH_BLOCK, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            assert b != SCRATCH_BLOCK
+            self._free.append(b)
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Request
+    blocks: List[int]
+    admitted_step: int
+    age: int = 0  # decoded tokens since admission (drives the γ phase)
+    out: List[int] = dataclasses.field(default_factory=list)
+    lps: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.request.max_new
+
+    @property
+    def next_pos(self) -> int:
+        """Write position of the current token (prompt occupies 0..s-1)."""
+        return self.request.prompt_len + self.age
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, n_blocks: int, block_size: int,
+                 max_blocks_per_seq: int):
+        self.n_slots = n_slots
+        self.block_size = block_size
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.allocator = BlockAllocator(n_blocks)
+        self.queue = RequestQueue()
+        self.slots: List[Optional[_Slot]] = [None] * n_slots
+        self.results: Dict[int, RequestResult] = {}
+
+    # -- lifecycle ----------------------------------------------------------
+    def blocks_needed(self, req: Request) -> int:
+        return -(-(req.prompt_len + req.max_new) // self.block_size)
+
+    def submit(self, req: Request) -> None:
+        # reject malformed requests here, before any slot/block state exists:
+        # a prefill failure mid-admission would leave a zombie slot behind
+        if req.prompt_len == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new < 1:
+            raise ValueError(f"request {req.uid}: max_new must be >= 1")
+        need = self.blocks_needed(req)
+        if need > self.max_blocks_per_seq:
+            raise ValueError(
+                f"request {req.uid}: needs {need} blocks > "
+                f"max_blocks_per_seq={self.max_blocks_per_seq}")
+        self.queue.push(req)
+
+    def retire_finished(self, step: int) -> List[int]:
+        """Free the blocks of finished slots; returns retired request uids."""
+        retired = []
+        for i, slot in enumerate(self.slots):
+            if slot is not None and slot.done:
+                self.allocator.free(slot.blocks)
+                self.results[slot.request.uid] = RequestResult(
+                    uid=slot.request.uid,
+                    tokens=np.asarray(slot.out, np.int32),
+                    logprobs=np.asarray(slot.lps, np.float32),
+                    prompt_len=slot.request.prompt_len,
+                    admitted_step=slot.admitted_step,
+                    finished_step=step,
+                )
+                retired.append(slot.request.uid)
+                self.slots[i] = None
+        return retired
+
+    def admit(self, step: int) -> List[Tuple[int, _Slot]]:
+        """Fill free slots from the queue while blocks last (strict FIFO).
+        Returns (slot_index, slot) pairs needing prefill."""
+        admitted = []
+        for i in range(self.n_slots):
+            if self.slots[i] is not None:
+                continue
+            req = self.queue.peek()
+            if req is None:
+                break
+            blocks = self.allocator.alloc(self.blocks_needed(req))
+            if blocks is None:
+                break  # head of line doesn't fit yet — wait for retirements
+            self.queue.pop()
+            slot = _Slot(request=req, blocks=blocks, admitted_step=step)
+            self.slots[i] = slot
+            admitted.append((i, slot))
+        return admitted
+
+    def seed(self, slot: _Slot, token: int, logprob: float) -> None:
+        """Record the first generated token (from the prefill logits)."""
+        slot.out.append(int(token))
+        slot.lps.append(float(logprob))
+
+    # -- batch assembly -----------------------------------------------------
+    def active_indices(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and not s.done]
+
+    def has_work(self) -> bool:
+        return bool(self.active_indices()) or len(self.queue) > 0 or any(
+            s is not None for s in self.slots)
+
+    def batch_arrays(self):
+        """Fixed-shape arrays for the jitted step. Idle slots point at the
+        scratch block / position 0; their outputs are ignored."""
+        B, nb = self.n_slots, self.max_blocks_per_seq
+        tokens = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        table = np.full((B, nb), SCRATCH_BLOCK, np.int32)
+        refresh = np.ones((B,), bool)  # idle slots refresh (mask unused)
+        for i in self.active_indices():
+            s = self.slots[i]
+            tokens[i] = s.out[-1]
+            pos[i] = s.next_pos
+            table[i, : len(s.blocks)] = s.blocks
+            gamma = s.request.reuse_window
+            refresh[i] = gamma <= 1 or (s.age % gamma == 0)
+        return tokens, pos, table, refresh
+
+    def record(self, next_tokens: np.ndarray, logprobs: np.ndarray) -> None:
+        """Append the step's outputs to every active slot."""
+        for i in self.active_indices():
+            s = self.slots[i]
+            s.age += 1
+            s.out.append(int(next_tokens[i]))
+            s.lps.append(float(logprobs[i]))

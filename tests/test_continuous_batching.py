@@ -1,0 +1,236 @@
+"""Continuous-batching engine tests: mid-decode admission exactness, paged
+block lifecycle, per-request γ-window masks under batching, and the paged
+cache primitives themselves."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import common as cm
+from repro.models import registry
+from repro.serving import ContinuousBatchingEngine, ServeEngine
+from repro.serving.scheduler import BlockAllocator, Request, Scheduler
+
+
+def _setup(name="tiny-relu"):
+    cfg = get_config(name)
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=1):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, s).astype(np.int32)
+            for s in lengths]
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("max_blocks_per_seq", 6)
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+def _solo(cfg, params, prompt, max_new, reuse_window=0, **kw):
+    eng = _engine(cfg, params, **kw)
+    uid = eng.submit(prompt, max_new, reuse_window=reuse_window)
+    return eng.run()[uid].tokens
+
+
+# ---------------------------------------------------------------------------
+# paged cache primitives
+
+
+def test_paged_roundtrip_matches_contiguous():
+    """Writing token-by-token through a shuffled block table and gathering
+    reproduces the contiguous head-major cache exactly."""
+    rng = np.random.RandomState(0)
+    N, kvp, bs, hd, S = 7, 2, 4, 8, 12
+    pages = jnp.zeros((1, N, kvp, bs, hd))
+    table = jnp.asarray([[5, 2, 6]], jnp.int32)  # out-of-order blocks
+    ref = rng.randn(S, kvp, hd).astype(np.float32)
+    for t in range(S):
+        pages = cm.paged_write_token(pages, 0, table,
+                                     jnp.asarray([t], jnp.int32),
+                                     jnp.asarray(ref[t][None]), bs)
+    got = cm.paged_gather(pages[0], table)  # (1, kvp, 3*bs, hd)
+    np.testing.assert_allclose(np.asarray(got[0, :, :S]),
+                               ref.transpose(1, 0, 2), rtol=0, atol=0)
+
+
+def test_paged_prefill_write_matches_token_writes():
+    rng = np.random.RandomState(1)
+    L, N, kvp, bs, hd, s = 2, 5, 2, 4, 3, 6
+    kv = jnp.asarray(rng.randn(L, s, kvp, hd), jnp.float32)
+    blocks = jnp.asarray([3, 1], jnp.int32)
+    pages = cm.paged_write_prefill(jnp.zeros((L, N, kvp, bs, hd)), kv,
+                                   blocks, bs)
+    got = cm.paged_gather(pages[1], blocks[None])
+    np.testing.assert_allclose(np.asarray(got[0, :, :s]),
+                               np.asarray(kv[1]).transpose(1, 0, 2))
+    # pad region inside the last block is zero
+    assert float(jnp.abs(got[0, :, s:]).sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler / allocator lifecycle
+
+
+def test_allocator_reserves_scratch_and_recycles():
+    al = BlockAllocator(5)
+    assert al.available == 4  # block 0 reserved
+    got = al.alloc(4)
+    assert got is not None and cm.SCRATCH_BLOCK not in got
+    assert al.alloc(1) is None
+    al.free(got)
+    assert al.available == 4
+
+
+def test_scheduler_fifo_waits_for_blocks():
+    sched = Scheduler(n_slots=2, n_blocks=5, block_size=4,
+                      max_blocks_per_seq=4)
+    big = Request(uid=1, tokens=np.zeros(8, np.int32), max_new=8)   # 4 blocks
+    small = Request(uid=2, tokens=np.zeros(2, np.int32), max_new=2)  # 1 block
+    sched.submit(big)
+    sched.submit(small)
+    admitted = sched.admit(step=0)
+    # big takes all 4 free blocks; small must NOT jump the queue into slot 1
+    assert [s.request.uid for _, s in admitted] == [1]
+    assert len(sched.queue) == 1 and sched.allocator.available == 0
+    # retiring big frees its blocks and lets small in
+    sched.slots[0].out = [0] * 8
+    sched.retire_finished(step=3)
+    assert sched.allocator.available == 4
+    assert [s.request.uid for _, s in sched.admit(step=3)] == [2]
+
+
+def test_engine_frees_all_blocks_and_reuses_pool():
+    """6 requests through a pool that only fits ~2 concurrently: retirement
+    must recycle blocks or the later requests could never be admitted."""
+    cfg, params = _setup()
+    eng = _engine(cfg, params, n_slots=2, n_blocks=9)  # 8 usable blocks
+    prompts = _prompts(cfg, [6, 10, 14, 5, 9, 12])
+    uids = [eng.submit(p, max_new=6) for p in prompts]
+    res = eng.run()
+    assert sorted(res) == sorted(uids)
+    assert all(res[u].tokens.shape == (6,) for u in uids)
+    assert eng.scheduler.allocator.available == 8  # everything returned
+
+
+# ---------------------------------------------------------------------------
+# exactness: continuous batching == solo decoding
+
+
+def test_mid_decode_admission_matches_solo():
+    """A request admitted while another is mid-decode produces exactly the
+    tokens it would produce alone."""
+    cfg, params = _setup()
+    p1, p2 = _prompts(cfg, [9, 14])
+
+    eng = _engine(cfg, params)
+    u1 = eng.submit(p1, max_new=12)
+    for _ in range(5):  # r1 decodes alone for 5 steps
+        eng.step()
+    u2 = eng.submit(p2, max_new=8)  # joins mid-flight
+    res = eng.run()
+
+    np.testing.assert_array_equal(res[u1].tokens, _solo(cfg, params, p1, 12))
+    np.testing.assert_array_equal(res[u2].tokens, _solo(cfg, params, p2, 8))
+    assert res[u2].admitted_step > res[u1].admitted_step
+
+
+def test_queued_overflow_matches_solo_and_legacy():
+    """More requests than slots: queueing + slot reuse keeps every stream
+    exact, and agrees with the legacy single-batch engine."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, [8, 12, 16, 10])
+    eng = _engine(cfg, params, n_slots=2)
+    uids = [eng.submit(p, max_new=7) for p in prompts]
+    res = eng.run()
+    legacy = ServeEngine(cfg, params, max_len=64)
+    for uid, p in zip(uids, prompts):
+        np.testing.assert_array_equal(res[uid].tokens,
+                                      _solo(cfg, params, p, 7))
+        leg = legacy.generate({"tokens": jnp.asarray(p[None], jnp.int32)},
+                              max_new=7)
+        np.testing.assert_array_equal(res[uid].tokens, leg.tokens[0])
+        np.testing.assert_allclose(res[uid].logprobs, leg.logprobs[0],
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# γ-window weight reuse under batching
+
+
+def test_gamma_masks_stay_per_request():
+    """Co-scheduled requests with different γ each behave exactly as they
+    would alone — the batched masks must not leak across slots."""
+    cfg, params = _setup()
+    p1, p2 = _prompts(cfg, [10, 13], seed=3)
+    eng = _engine(cfg, params)
+    u1 = eng.submit(p1, max_new=9, reuse_window=3)  # masked windows
+    u2 = eng.submit(p2, max_new=9)                  # dense neighbour
+    res = eng.run()
+    np.testing.assert_array_equal(
+        res[u1].tokens, _solo(cfg, params, p1, 9, reuse_window=3))
+    np.testing.assert_array_equal(res[u2].tokens, _solo(cfg, params, p2, 9))
+    assert eng.weight_io_saved() > 0.0  # γ actually skipped weight reads
+
+
+def test_gamma_window_phase_follows_admission():
+    """The γ refresh phase is anchored to each request's own age, not the
+    engine's global step: staggered admission must not change outputs."""
+    cfg, params = _setup()
+    p1, p2 = _prompts(cfg, [8, 8], seed=4)
+    eng = _engine(cfg, params)
+    u1 = eng.submit(p1, max_new=10, reuse_window=4)
+    eng.step()
+    eng.step()  # u2 arrives at a different global phase
+    u2 = eng.submit(p2, max_new=10, reuse_window=4)
+    res = eng.run()
+    np.testing.assert_array_equal(
+        res[u2].tokens, _solo(cfg, params, p2, 10, reuse_window=4))
+    np.testing.assert_array_equal(
+        res[u1].tokens, _solo(cfg, params, p1, 10, reuse_window=4))
+
+
+def test_gamma_one_equals_dense():
+    """γ=1 refreshes every step, so the mask never binds."""
+    cfg, params = _setup()
+    (p,) = _prompts(cfg, [11], seed=5)
+    t_dense = _solo(cfg, params, p, 8)
+    t_g1 = _solo(cfg, params, p, 8, reuse_window=1)
+    np.testing.assert_array_equal(t_dense, t_g1)
+
+
+def test_legacy_gamma_agreement():
+    """CB γ-window decode agrees with the legacy engine's Fig. 7c path for a
+    single request (both refresh at age % γ == 0)."""
+    cfg, params = _setup()
+    (p,) = _prompts(cfg, [12], seed=6)
+    cb = _solo(cfg, params, p, 10, reuse_window=3)
+    leg = ServeEngine(cfg, params, max_len=64).generate(
+        {"tokens": jnp.asarray(p[None], jnp.int32)}, max_new=10,
+        reuse_window=3)
+    np.testing.assert_array_equal(cb, leg.tokens[0])
+
+
+# ---------------------------------------------------------------------------
+# sparsity tracking through the batched path
+
+
+def test_tracked_aggregated_sparsity_per_request():
+    cfg, params = _setup()
+    p1, p2 = _prompts(cfg, [8, 12], seed=7)
+    eng = _engine(cfg, params, track_sparsity=True)
+    u1 = eng.submit(p1, max_new=6)
+    u2 = eng.submit(p2, max_new=6)
+    eng.run()
+    for uid in (u1, u2):
+        tr = eng.trackers[uid]
+        # first token comes from prefill; the remaining 5 from decode steps
+        assert len(tr.curve) == 5
+        # aggregated sparsity is non-increasing (paper Sec. 5.1)
+        assert all(b <= a + 1e-9 for a, b in zip(tr.curve, tr.curve[1:]))
+        assert 0.0 <= tr.aggregated_sparsity() <= 1.0

@@ -5,7 +5,14 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
+
+# these tests build explicit-axis-type meshes, an API newer than the jax
+# this environment may pin; skip (not fail) where it's absent
+pytestmark = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="requires jax.sharding.AxisType (jax >= 0.6)")
 
 
 def _run(src: str, devices: int = 8, timeout: int = 560) -> str:

@@ -7,7 +7,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
-from repro.kernels.fused_ffn import fused_up_relu
+from repro.kernels.fused_ffn import (fused_up_relu, fused_up_relu_tokens,
+                                     tile_activity)
 from repro.kernels.sparse_matmul import sparse_matmul
 
 
@@ -19,6 +20,7 @@ def _mk(T, F, D, dtype, seed=0, sparsity=0.7):
     return jnp.asarray(x, dtype), jnp.asarray(w, dtype)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("T,F,D,tile,block_d", [
     (8, 512, 256, 128, 128),
     (16, 1024, 512, 128, 256),
@@ -55,6 +57,7 @@ def test_sparse_matmul_padding_masked():
     np.testing.assert_allclose(np.asarray(got4), dense, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("T,d,F,block_f", [
     (8, 256, 512, 256), (4, 128, 1024, 512), (16, 64, 256, 128),
 ])
@@ -71,6 +74,26 @@ def test_fused_up_relu(T, d, F, block_f, shift):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_fused_up_relu_tokens_per_request_scores():
+    """The per-token variant (continuous-batching serving) agrees with the
+    shared XLA score definition AND reduces to the batch-union kernel."""
+    rng = np.random.RandomState(3)
+    T, d, F = 4, 128, 512
+    x = jnp.asarray(rng.randn(T, d), jnp.float32)
+    wu = jnp.asarray(rng.randn(d, F) / np.sqrt(d), jnp.float32)
+    h, scores = fused_up_relu_tokens(x, wu, 0.0, block_f=256)
+    assert scores.shape == (T, F // 128)
+    np.testing.assert_allclose(np.asarray(scores),
+                               np.asarray(tile_activity(h)),
+                               rtol=1e-6, atol=1e-6)
+    h_u, scores_u = fused_up_relu(x, wu, 0.0, block_f=256)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_u),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(scores).max(0), np.asarray(scores_u),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.slow
 def test_sparse_ffn_pipeline_matches_xla():
     """Pallas pipeline == XLA gather fallback == the dry-run's lowered path."""
     rng = np.random.RandomState(0)
@@ -97,6 +120,7 @@ def test_density_one_is_dense():
     np.testing.assert_allclose(np.asarray(y), dense, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(
     T=st.sampled_from([1, 4, 8]),
