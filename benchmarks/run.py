@@ -28,10 +28,13 @@ MODULES = [
 ]
 
 # training-free modules that exercise the kernel + serving hot paths; the CI
-# benchmark-smoke job runs these (BENCH_SMOKE=1 shrinks workloads further)
+# benchmark-smoke job runs these (BENCH_SMOKE=1 shrinks workloads further and
+# makes fig7_spec_decode use random-init tiny models, so the engine's
+# speculative path is exercised on every push)
 SMOKE_MODULES = [
     "benchmarks.fig9_flops_latency",
     "benchmarks.fig10_optimal_gamma",
+    "benchmarks.fig7_spec_decode",
     "benchmarks.serving_throughput",
 ]
 

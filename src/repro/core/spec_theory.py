@@ -21,7 +21,10 @@ def thm1_speedup(gamma: int, c: float, s_agg: float) -> float:
 
 
 def thm2_speedup(gamma: int, c: float, s_agg: float, alpha: float) -> float:
-    expected_tokens = (1.0 - alpha ** (gamma + 1)) / (1.0 - alpha)
+    if alpha >= 1.0:  # limit of the geometric series: every draft accepted
+        expected_tokens = gamma + 1.0
+    else:
+        expected_tokens = (1.0 - alpha ** (gamma + 1)) / (1.0 - alpha)
     return expected_tokens / (c * gamma + (1.0 - s_agg))
 
 

@@ -26,6 +26,17 @@ def tile_activity(h: jnp.ndarray, tile: int = TILE) -> jnp.ndarray:
     return jnp.max(jnp.abs(h).reshape(T, F // tile, tile), axis=-1)
 
 
+def window_tile_activity(h: jnp.ndarray, tile: int = TILE) -> jnp.ndarray:
+    """Window-union tile-activity scores: per-slot max |h| over the window
+    tokens AND the tile lanes. h: (B, W, F) -> (B, F // tile).
+
+    The union is exactly what the sparse speculative verification loads
+    (paper Sec. 5.2): a down-projection tile is read ONCE per γ-window if
+    any window token activates it. W = 1 recovers ``tile_activity``."""
+    B, W, F = h.shape
+    return jnp.max(jnp.abs(h).reshape(B, W, F // tile, tile), axis=(1, 3))
+
+
 def _make_kernel(shift: float):
     def kernel(x_ref, w_ref, h_ref, s_ref):
         h = jax.lax.dot_general(
@@ -36,6 +47,19 @@ def _make_kernel(shift: float):
         T, Fb = h.shape
         s_ref[...] = jnp.max(jnp.abs(h).reshape(T, Fb // TILE, TILE),
                              axis=(0, 2))[None, :]
+    return kernel
+
+
+def _make_kernel_window(shift: float, w: int):
+    def kernel(x_ref, w_ref, h_ref, s_ref):
+        h = jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        h = jnp.maximum(h - shift, 0.0)
+        h_ref[...] = h
+        bw, Fb = h.shape  # rows are (slot, window-token) pairs
+        s_ref[...] = jnp.max(jnp.abs(h).reshape(bw // w, w, Fb // TILE, TILE),
+                             axis=(1, 3))
     return kernel
 
 
@@ -112,3 +136,40 @@ def fused_up_relu_tokens(x, wu, shift: float = 0.0, *, block_f: int = 512,
         interpret=interpret,
     )(x, wu)
     return h, scores
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("shift", "block_f", "interpret"))
+def fused_up_relu_window(x, wu, shift: float = 0.0, *, block_f: int = 512,
+                         interpret: bool = True):
+    """γ-window variant for speculative verification: all W window tokens of
+    every slot pass through the up-projection once, and the activity scores
+    come back ALREADY unioned over each slot's window — the selection input
+    for the window's sparse down-projection (paper Sec. 5.2) with no second
+    pass over h.
+
+    x: (B, W, d), wu: (d, F) -> (h (B, W, F) f32, scores (B, F/128) f32);
+    scores match ``window_tile_activity(h)`` (validated in tests)."""
+    B, W, d = x.shape
+    F = wu.shape[1]
+    block_f = min(block_f, F)
+    assert F % block_f == 0 and block_f % TILE == 0
+    grid = (F // block_f,)
+    h, scores = pl.pallas_call(
+        _make_kernel_window(shift, W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B * W, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, block_f), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B * W, block_f), lambda i: (0, i)),
+            pl.BlockSpec((B, block_f // TILE), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * W, F), jnp.float32),
+            jax.ShapeDtypeStruct((B, F // TILE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.reshape(B * W, d), wu)
+    return h.reshape(B, W, F), scores

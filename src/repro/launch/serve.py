@@ -5,6 +5,7 @@ the paper's sparse-inference config (relufied weights, tile capacities).
       --sparse-density 0.25 [--multi-pod]
   python -m repro.launch.serve --arch qwen3-4b --smoke --tokens 32   # CPU
   python -m repro.launch.serve --arch qwen3-4b --smoke --continuous  # CB path
+  python -m repro.launch.serve --arch qwen3-4b --smoke --speculative # spec
 """
 from __future__ import annotations
 
@@ -23,8 +24,17 @@ def main() -> None:
     ap.add_argument("--continuous", action="store_true",
                     help="smoke the continuous-batching paged-cache engine "
                          "(dense family only)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="smoke the engine's speculative mode: a 1-layer "
+                         "draft proposes γ tokens per slot, the target "
+                         "verifies each window in one forward (implies "
+                         "--continuous)")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="draft length γ for --speculative")
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args()
+    if args.speculative:
+        args.continuous = True
     if args.continuous and not args.smoke:
         ap.error("--continuous requires --smoke (the pod-mesh launcher "
                  "lowers the legacy decode cell)")
@@ -46,13 +56,21 @@ def main() -> None:
     if args.smoke and args.continuous:
         import numpy as np
         from repro.serving import ContinuousBatchingEngine
+        from repro.serving.spec_decode import spec_metrics
         fam = registry.get_family(cfg)
         params = fam.init_params(jax.random.PRNGKey(0), cfg)
         lengths = (8, 13, 21)
         max_bps = -(-(max(lengths) + args.tokens) // 16)  # fit any request
+        spec_kw = {}
+        if args.speculative:
+            dcfg = cfg.replace(name=f"{cfg.name}-draft", n_layers=1)
+            spec_kw = dict(draft_cfg=dcfg,
+                           draft_params=fam.init_params(
+                               jax.random.PRNGKey(2), dcfg),
+                           gamma=args.gamma)
         eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=16,
                                        max_blocks_per_seq=max_bps,
-                                       track_sparsity=True)
+                                       track_sparsity=True, **spec_kw)
         rng = np.random.RandomState(1)
         uids = [eng.submit(rng.randint(0, cfg.vocab_size, s), args.tokens,
                            reuse_window=args.reuse_window)
@@ -64,6 +82,16 @@ def main() -> None:
               f"per-request aggregated FFN sparsity "
               f"{', '.join(f'{a:.3f}' for a in aggs)}; "
               f"weight I/O saved {eng.weight_io_saved():.1%}")
+        if args.speculative:
+            ms = [spec_metrics(res[u], gamma=args.gamma, c=0.1,
+                               s_agg=eng.s_agg_window()) for u in uids]
+            print(f"speculative gamma={args.gamma}: "
+                  f"alpha={np.mean([m.accept_rate for m in ms]):.3f}; "
+                  f"target-call reduction "
+                  f"{np.mean([m.target_call_reduction for m in ms]):.2f}x; "
+                  f"window s_agg={eng.s_agg_window():.3f}; "
+                  f"Thm1 sparse-verify speedup "
+                  f"{np.mean([m.thm1_speedup for m in ms]):.3f}x")
         return
 
     if args.smoke:

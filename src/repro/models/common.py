@@ -246,6 +246,44 @@ def flash_attention(
     return jnp.concatenate(outs, axis=1).astype(q.dtype)
 
 
+def window_attention(
+    q: jnp.ndarray,  # (b, W, kvp, g, d) a W-token window per sequence
+    k_cache: jnp.ndarray,  # (b, kvp, S, d) HEAD-MAJOR layout
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,  # (b, W) absolute position of each window token
+    window: int = 0,
+) -> jnp.ndarray:
+    """Grouped attention for a W-token window over a (possibly seq-sharded)
+    cache, causal WITHIN the window: query i attends to cache positions
+    <= pos[:, i] (each window token's K/V is already written at its own
+    position, so the window verifies in one pass — the speculative-decoding
+    target forward). W == 1 is exactly single-token decode attention.
+
+    The cache is head-major (b, kvp, S, d): both einsums consume it with
+    (b, h) as batch dims and contract d / S directly — no transposed copies
+    of the cache are ever materialized (this layout change removed ~2/3 of
+    decode cache traffic, EXPERIMENTS.md §Perf).
+
+    softmax reductions over the cache S axis are GSPMD-partitionable, so when
+    the cache is sharded on S over the `model` axis this lowers to the
+    flash-decode pattern (local partial max/sum + all-reduce) automatically.
+    """
+    b, W, kvp, g, d = q.shape
+    S = k_cache.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    qs = (q * jnp.asarray(scale, q.dtype)).astype(k_cache.dtype)
+    logits = jnp.einsum("bqhgd,bhsd->bhgqs", qs, k_cache,
+                        preferred_element_type=jnp.float32)
+    valid = jnp.arange(S)[None, None, :] <= pos[:, :, None]  # (b, W, S)
+    if window:
+        valid &= jnp.arange(S)[None, None, :] > pos[:, :, None] - window
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqs,bhsd->bqhgd", w.astype(k_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
 def decode_attention(
     q: jnp.ndarray,  # (b, kvp, g, d) one new token per sequence
     k_cache: jnp.ndarray,  # (b, kvp, S, d) HEAD-MAJOR layout
@@ -253,31 +291,9 @@ def decode_attention(
     pos: jnp.ndarray,  # (b,) index of the current (just-written) token
     window: int = 0,
 ) -> jnp.ndarray:
-    """Single-step grouped attention over a (possibly seq-sharded) cache.
-
-    The cache is head-major (b, kvp, S, d): both decode einsums consume it
-    with (b, h) as batch dims and contract d / S directly — no transposed
-    copies of the cache are ever materialized (this layout change removed
-    ~2/3 of decode cache traffic, EXPERIMENTS.md §Perf).
-
-    softmax reductions over the cache S axis are GSPMD-partitionable, so when
-    the cache is sharded on S over the `model` axis this lowers to the
-    flash-decode pattern (local partial max/sum + all-reduce) automatically.
-    """
-    b, kvp, g, d = q.shape
-    S = k_cache.shape[2]
-    scale = 1.0 / math.sqrt(d)
-    qs = (q * jnp.asarray(scale, q.dtype)).astype(k_cache.dtype)
-    logits = jnp.einsum("bhgd,bhsd->bhgs", qs, k_cache,
-                        preferred_element_type=jnp.float32)
-    valid = jnp.arange(S)[None, :] <= pos[:, None]
-    if window:
-        valid &= jnp.arange(S)[None, :] > pos[:, None] - window
-    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
-    w = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhgs,bhsd->bhgd", w.astype(k_cache.dtype), v_cache,
-                     preferred_element_type=jnp.float32)
-    return out.astype(q.dtype)
+    """Single-step grouped attention — ``window_attention`` at W = 1."""
+    return window_attention(q[:, None], k_cache, v_cache, pos[:, None],
+                            window)[:, 0]
 
 
 # ---------------------------------------------------------------------------
@@ -317,19 +333,34 @@ def paged_gather(pages_l: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     return gath.transpose(0, 2, 1, 3, 4).reshape(b, kvp, nb * bs, hd)
 
 
+def paged_write_window(pages: jnp.ndarray, layer, table: jnp.ndarray,
+                       pos: jnp.ndarray, val: jnp.ndarray, block_size: int,
+                       enable: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Scatter a W-token window's K or V per request through the block table.
+
+    pages: (L, n_blocks, kvp, bs, hd); layer: scalar (may be traced);
+    table: (b, nb); pos: (b, W) absolute write positions; val: (b, W, kvp,
+    hd); enable: (b, W) bool — window tokens past a slot's valid window
+    length (and every token of an idle slot) are routed to the scratch
+    block, so a speculative write can NEVER land outside the blocks a
+    request owns. A true scatter — no full-layer rewrite rides the loop.
+    """
+    nb = table.shape[1]
+    blk = jnp.take_along_axis(table, jnp.clip(pos // block_size, 0, nb - 1),
+                              axis=1)  # (b, W)
+    if enable is not None:
+        blk = jnp.where(enable, blk, SCRATCH_BLOCK)
+    off = pos % block_size
+    return pages.at[layer, blk, :, off, :].set(val.astype(pages.dtype))
+
+
 def paged_write_token(pages: jnp.ndarray, layer, table: jnp.ndarray,
                       pos: jnp.ndarray, val: jnp.ndarray,
                       block_size: int) -> jnp.ndarray:
-    """Scatter one token's K or V per request through the block table.
-
-    pages: (L, n_blocks, kvp, bs, hd); layer: scalar (may be traced);
-    table: (b, nb); pos: (b,) absolute write position; val: (b, kvp, hd).
-    A true scatter — no full-layer rewrite rides the decode loop.
-    """
-    b = pos.shape[0]
-    blk = jnp.take_along_axis(table, (pos // block_size)[:, None], axis=1)[:, 0]
-    off = pos % block_size
-    return pages.at[layer, blk, :, off, :].set(val.astype(pages.dtype))
+    """Scatter one token's K or V per request — ``paged_write_window`` at
+    W = 1. pos: (b,); val: (b, kvp, hd)."""
+    return paged_write_window(pages, layer, table, pos[:, None],
+                              val[:, None], block_size)
 
 
 def paged_write_prefill(pages: jnp.ndarray, kv: jnp.ndarray,

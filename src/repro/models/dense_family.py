@@ -46,3 +46,17 @@ def model_decode_paged(params, pages, table, token, pos, cfg: ModelConfig,
                        ffn_masks, refresh, block_size: int):
     return T.decode_step_paged(params, pages, table, token, pos, cfg,
                                ffn_masks, refresh, block_size=block_size)
+
+
+def model_verify_window_paged(params, pages, table, tokens, pos0, wlen,
+                              cfg: ModelConfig, ffn_masks, refresh,
+                              block_size: int):
+    return T.verify_window_paged(params, pages, table, tokens, pos0, wlen,
+                                 cfg, ffn_masks, refresh,
+                                 block_size=block_size)
+
+
+def model_draft_gamma_paged(params, pages, table, token, pos0, wlen,
+                            cfg: ModelConfig, gamma: int, block_size: int):
+    return T.draft_gamma_paged(params, pages, table, token, pos0, wlen, cfg,
+                               gamma=gamma, block_size=block_size)

@@ -464,7 +464,10 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig,
 # these entry points serve a *slot* batch whose requests were admitted at
 # different times: every slot has its own write position, its own block-table
 # row into the shared page pool, and its own γ-window FFN mask + refresh
-# phase. Everything is computed in-graph — one trace, no host round-trips.
+# phase. The whole stack is written for a W-token WINDOW per slot — W = γ+1
+# is the speculative-verification target forward (all window tokens in ONE
+# pass, causal within the window), W = 1 is the plain decode step. Everything
+# is computed in-graph — one trace, no host round-trips.
 
 
 def _ffn_tile(cfg: ModelConfig) -> int:
@@ -473,14 +476,151 @@ def _ffn_tile(cfg: ModelConfig) -> int:
     return ts if F % ts == 0 else cm.pick_group_tile(F, 1)
 
 
-def apply_attn_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
-                            pos, *, layer, block_size: int,
+def apply_attn_window_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
+                            pos, valid, *, layer, block_size: int,
                             stats: cm.StatsCollector):
-    """One-token attention against the paged pool. x: (b, d); pos: (b,)
-    per-slot write positions (NOT uniform); table: (b, nb) block ids.
-    Returns (out (b, d), k_pages, v_pages)."""
+    """W-token windowed attention against the paged pool. x: (b, W, d);
+    pos: (b, W) per-slot write positions (NOT uniform); valid: (b, W) real
+    window tokens — K/V of invalid ones is routed to the scratch block;
+    table: (b, nb) block ids. Causal within the window: token i attends to
+    cache positions <= pos[:, i]. Returns (out (b, W, d), k_pages, v_pages).
+    """
     g = attn_geometry(cfg)
-    q, k, v = _qkv(p, x[:, None, :], cfg, pos[:, None],
+    b, W, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, pos, stats=stats,
+                   input_density=cfg.sparsity.input_tile_density)
+    q = q.reshape(b, W, g.kvp, g.group, g.head_dim)
+    k_pages = cm.paged_write_window(k_pages, layer, table, pos, k,
+                                    block_size, valid)
+    v_pages = cm.paged_write_window(v_pages, layer, table, pos, v,
+                                    block_size, valid)
+    kl = jax.lax.dynamic_index_in_dim(k_pages, layer, 0, keepdims=False)
+    vl = jax.lax.dynamic_index_in_dim(v_pages, layer, 0, keepdims=False)
+    kg = cm.paged_gather(kl, table)
+    vg = cm.paged_gather(vl, table)
+    o = cm.window_attention(q, kg, vg, pos, window=cfg.sliding_window)
+    out = _attn_out(p, o.reshape(b, W, g.hp, g.head_dim), cfg)
+    return out, k_pages, v_pages
+
+
+def apply_ffn_window(p, x, cfg: ModelConfig, *, mask, refresh, valid):
+    """Decode FFN over a W-token window with per-request γ-window weight
+    reuse, batched over slots. x: (b, W, d); mask: (b, F) bool — the rows
+    loaded in each request's current window; refresh: (b,) bool — slots
+    starting a new window this step (they run dense and record fresh
+    activity); valid: (b, W) bool — real window tokens (idle slots and
+    window padding are excluded from activity/scores).
+
+    Returns (out (b, W, d),
+             act (b, F) union activity over the window's valid tokens,
+             scores (b, F//tile) window-union tile activity,
+             density (b,) fraction of down-proj rows READ (refresh ⇒ 1.0)
+                 — the Fig. 7c γ-reuse weight-I/O metric,
+             union_density (b,) fraction of rows in the window's activity
+                 union = 1 − s_agg(W) — the Sec. 5.2 sparse-verification
+                 I/O metric)."""
+    from repro.kernels.fused_ffn import window_tile_activity
+
+    act_fn = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+    b, W, d = x.shape
+    x2 = x.reshape(b * W, d)
+    dens_in = (cfg.sparsity.input_tile_density if cfg.sparsity.enabled
+               else 1.0)
+    if cfg.ffn_kind == "glu":
+        pre = cm.maybe_sparse_matmul(x2, p["wg"], cfg, dens_in)
+        h = act_fn(pre) * cm.maybe_sparse_matmul(x2, p["wu"], cfg, dens_in)
+    else:
+        h = act_fn(cm.maybe_sparse_matmul(x2, p["wu"], cfg, dens_in))
+    h = h.reshape(b, W, h.shape[-1])
+    eff = mask | refresh[:, None]  # refresh ⇒ all rows participate
+    h = h * eff[:, None, :].astype(h.dtype)
+    hv = h * valid[:, :, None].astype(h.dtype)
+    act = jnp.any(hv != 0, axis=1)  # (b, F) union over the window
+    scores = window_tile_activity(hv, _ffn_tile(cfg))
+    density = jnp.mean(eff.astype(jnp.float32), axis=-1)
+    union_density = jnp.mean(act.astype(jnp.float32), axis=-1)
+    dens_ffn = (cfg.sparsity.ffn_tile_density if cfg.sparsity.enabled
+                else 1.0)
+    out = cm.maybe_sparse_matmul(h.reshape(b * W, -1), p["wd"], cfg, dens_ffn)
+    return out.reshape(b, W, d), act, scores, density, union_density
+
+
+def apply_block_window_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
+                             pos, valid, *, layer, block_size: int, mask,
+                             refresh):
+    stats = cm.StatsCollector(False)
+    h = post_norm(cm.apply_norm(p["ln1"], x, cfg), cfg)
+    a, k_pages, v_pages = apply_attn_window_paged(
+        p["attn"], h, cfg, k_pages, v_pages, table, pos, valid, layer=layer,
+        block_size=block_size, stats=stats)
+    x = x + a
+    h = post_norm(cm.apply_norm(p["ln2"], x, cfg), cfg)
+    f, act, scores, density, udens = apply_ffn_window(
+        p["ffn"], h, cfg, mask=mask, refresh=refresh, valid=valid)
+    x = x + f
+    return x, k_pages, v_pages, act, scores, density, udens
+
+
+def verify_window_paged(params, pages, table, tokens, pos0, wlen,
+                        cfg: ModelConfig, ffn_masks, refresh, *,
+                        block_size: int):
+    """Run a W-token window per slot in ONE forward over the shared page
+    pool — the speculative-verification target step (paper Sec. 5.2): every
+    window token's K/V is written at its own position, attention is causal
+    within the window, and the FFN activity comes back as the window's
+    aggregated (union) mask. W == 1 is exactly the plain continuous-batching
+    decode step (see ``decode_step_paged``).
+
+    tokens: (b, W) = [current token, draft proposals...]; pos0: (b,) write
+    position of tokens[:, 0]; wlen: (b,) valid window length per slot —
+    tokens at index >= wlen (and every token of an idle slot, wlen == 0)
+    write to the scratch block and are excluded from activity, so no
+    speculative write can land outside a request's blocks; table: (b, nb);
+    ffn_masks: (L, b, F) bool γ-window masks; refresh: (b,).
+
+    Returns (logits (b, W, vocab_p), pages, new_masks (L, b, F), aux) with
+    aux = (act (L, b, F) window-union FFN activity, scores (L, b, F//tile)
+    window-union tile activity, density (L, b) fraction of rows read,
+    union_density (L, b) = 1 − s_agg of each slot's window)."""
+    params = cm.cast_params(params, cfg)
+    b, W = tokens.shape
+    pos = pos0[:, None] + jnp.arange(W, dtype=pos0.dtype)[None, :]
+    valid = jnp.arange(W)[None, :] < wlen[:, None]
+    x = embed_tokens(params, tokens, cfg, pos)
+
+    def body(carry, xs):
+        x, kp, vp = carry
+        pl_i, li, fm = xs
+        x, kp, vp, act, scores, density, udens = apply_block_window_paged(
+            pl_i, x, cfg, kp, vp, table, pos, valid, layer=li,
+            block_size=block_size, mask=fm, refresh=refresh)
+        return (x, kp, vp), (act, scores, density, udens)
+
+    xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks)
+    (x, kp, vp), (act, scores, density, udens) = jax.lax.scan(
+        body, (x, pages["k"], pages["v"]), xs)
+    new_masks = jnp.where(refresh[None, :, None], act, ffn_masks)
+
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from(params, x, cfg)
+    return logits, {"k": kp, "v": vp}, new_masks, (act, scores, density,
+                                                   udens)
+
+
+def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
+                             pos, *, layer, block_size: int, mask, refresh):
+    """Single-token specialization of ``apply_block_window_paged``.
+
+    Mathematically the W = 1 case, but kept as its own lowering: the decode
+    step is the latency-critical path (it should carry no window machinery),
+    and its bf16 rounding placement is FROZEN — re-deriving it from the
+    window code changes where XLA rounds, which changes greedy outputs of
+    bf16 models across engines (exactness tests pin the current numerics).
+    """
+    stats = cm.StatsCollector(False)
+    h = post_norm(cm.apply_norm(p["ln1"], x[:, None], cfg)[:, 0], cfg)
+    g = attn_geometry(cfg)
+    q, k, v = _qkv(p["attn"], h[:, None, :], cfg, pos[:, None],
                    stats=stats, input_density=cfg.sparsity.input_tile_density)
     q = q.reshape(q.shape[0], g.kvp, g.group, g.head_dim)
     k_pages = cm.paged_write_token(k_pages, layer, table, pos, k[:, 0],
@@ -492,58 +632,38 @@ def apply_attn_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
     kg = cm.paged_gather(kl, table)
     vg = cm.paged_gather(vl, table)
     o = cm.decode_attention(q, kg, vg, pos, window=cfg.sliding_window)
-    out = _attn_out(p, o.reshape(o.shape[0], 1, g.hp, g.head_dim), cfg)[:, 0]
-    return out, k_pages, v_pages
+    a = _attn_out(p["attn"], o.reshape(o.shape[0], 1, g.hp, g.head_dim),
+                  cfg)[:, 0]
+    x = x + a
 
-
-def apply_ffn_reuse(p, x, cfg: ModelConfig, *, mask, refresh):
-    """Decode FFN with per-request γ-window weight reuse (paper Fig. 7c),
-    batched over slots. x: (b, d); mask: (b, F) bool — the rows loaded in
-    each request's current window; refresh: (b,) bool — slots starting a new
-    window this step (they run dense and record fresh activity).
-
-    Returns (out (b, d), act (b, F) bool this step's post-mask activity,
-    scores (b, F//tile) per-request tile-activity, density (b,) fraction of
-    down-proj rows read — the weight-I/O metric)."""
     from repro.kernels.fused_ffn import tile_activity
-
+    h = post_norm(cm.apply_norm(p["ln2"], x[:, None], cfg)[:, 0], cfg)
     act_fn = acts.get(cfg.activation, shift=cfg.sparsity.shift)
     dens_in = (cfg.sparsity.input_tile_density if cfg.sparsity.enabled
                else 1.0)
+    pf = p["ffn"]
     if cfg.ffn_kind == "glu":
-        pre = cm.maybe_sparse_matmul(x, p["wg"], cfg, dens_in)
-        h = act_fn(pre) * cm.maybe_sparse_matmul(x, p["wu"], cfg, dens_in)
+        pre = cm.maybe_sparse_matmul(h, pf["wg"], cfg, dens_in)
+        hh = act_fn(pre) * cm.maybe_sparse_matmul(h, pf["wu"], cfg, dens_in)
     else:
-        h = act_fn(cm.maybe_sparse_matmul(x, p["wu"], cfg, dens_in))
+        hh = act_fn(cm.maybe_sparse_matmul(h, pf["wu"], cfg, dens_in))
     eff = mask | refresh[:, None]  # refresh ⇒ all rows participate
-    h = h * eff.astype(h.dtype)
-    act = h != 0
-    scores = tile_activity(h, _ffn_tile(cfg))
+    hh = hh * eff.astype(hh.dtype)
+    act = hh != 0
+    scores = tile_activity(hh, _ffn_tile(cfg))
     density = jnp.mean(eff.astype(jnp.float32), axis=-1)
     dens_ffn = (cfg.sparsity.ffn_tile_density if cfg.sparsity.enabled
                 else 1.0)
-    out = cm.maybe_sparse_matmul(h, p["wd"], cfg, dens_ffn)
-    return out, act, scores, density
-
-
-def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
-                             pos, *, layer, block_size: int, mask, refresh):
-    stats = cm.StatsCollector(False)
-    h = post_norm(cm.apply_norm(p["ln1"], x[:, None], cfg)[:, 0], cfg)
-    a, k_pages, v_pages = apply_attn_decode_paged(
-        p["attn"], h, cfg, k_pages, v_pages, table, pos, layer=layer,
-        block_size=block_size, stats=stats)
-    x = x + a
-    h = post_norm(cm.apply_norm(p["ln2"], x[:, None], cfg)[:, 0], cfg)
-    f, act, scores, density = apply_ffn_reuse(p["ffn"], h, cfg, mask=mask,
-                                              refresh=refresh)
+    f = cm.maybe_sparse_matmul(hh, pf["wd"], cfg, dens_ffn)
     x = x + f
     return x, k_pages, v_pages, act, scores, density
 
 
 def decode_step_paged(params, pages, table, token, pos, cfg: ModelConfig,
                       ffn_masks, refresh, *, block_size: int):
-    """One continuous-batching decode step over the shared page pool.
+    """One continuous-batching decode step over the shared page pool — the
+    W = 1 case of ``verify_window_paged``, specialized (see
+    ``apply_block_decode_paged`` for why it is not a wrapper).
 
     token/pos/refresh: (b,) per slot; table: (b, nb); ffn_masks: (L, b, F)
     bool γ-window masks. Idle slots point at the scratch block and are
@@ -569,6 +689,40 @@ def decode_step_paged(params, pages, table, token, pos, cfg: ModelConfig,
     x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
     logits = logits_from(params, x, cfg)
     return logits, {"k": kp, "v": vp}, new_masks, (act, scores, density)
+
+
+def draft_gamma_paged(params, pages, table, token, pos0, wlen,
+                      cfg: ModelConfig, *, gamma: int, block_size: int):
+    """Draft γ greedy tokens per slot in one jitted scan over the paged pool
+    — the proposer half of speculative decoding, batched across slots with
+    NO host round-trips.
+
+    token: (b,) each slot's current (verified) token; pos0: (b,) its write
+    position; wlen: (b,) the slot's verification window length W_s — draft
+    step g writes position pos0+g only while g < W_s (out-of-window and
+    idle-slot writes go to the scratch block). The scan runs γ+1 steps so
+    the final proposal's own K/V is already in the draft cache when every
+    draft is accepted (no hole to back-fill next round); the extra step's
+    logits are discarded.
+
+    Returns (proposals (b, γ), pages)."""
+    b = token.shape[0]
+    masks = jnp.zeros((cfg.n_layers, b, cfg.d_ff), bool)
+    refresh = jnp.ones((b,), bool)
+
+    def step(carry, g):
+        tok, pages = carry
+        wl = (g < wlen).astype(wlen.dtype)  # 0/1: write-enable as W_s
+        logits, pages, _, _ = verify_window_paged(
+            params, pages, table, tok[:, None], pos0 + g, wl, cfg,
+            masks, refresh, block_size=block_size)
+        nxt = jnp.argmax(logits[:, 0, : cfg.vocab_size],
+                         -1).astype(jnp.int32)
+        return (nxt, pages), nxt
+
+    (_, pages), props = jax.lax.scan(
+        step, (token, pages), jnp.arange(gamma + 1, dtype=wlen.dtype))
+    return props[:gamma].T, pages
 
 
 def prefill_paged(params, tokens, cfg: ModelConfig, pages, blocks,

@@ -1,8 +1,10 @@
-"""Serving stack: continuous-batching engine over a paged KV cache, the
-legacy single-batch engine, scheduler, and speculative decoding."""
+"""Serving stack: continuous-batching engine over a paged KV cache (with a
+first-class speculative-decoding mode), the legacy single-batch engine,
+scheduler, and speculative-decoding metrics."""
 from repro.serving.engine import (  # noqa: F401
     ContinuousBatchingEngine, GenerationResult, ServeEngine,
 )
 from repro.serving.scheduler import (  # noqa: F401
     BlockAllocator, Request, RequestQueue, RequestResult, Scheduler,
 )
+from repro.serving.spec_decode import SpecResult, spec_metrics  # noqa: F401

@@ -60,12 +60,25 @@ class ContinuousBatchingEngine:
     track_sparsity: keep a per-request AggregatedTracker (paper Sec. 5.1)
         fed from the in-graph FFN activity (costs one extra host fetch per
         step).
+    draft_cfg / draft_params: enable SPECULATIVE mode (paper Sec. 5.2): the
+        draft proposes γ tokens per slot (one jitted scan, no host
+        round-trips), the target verifies every slot's γ+1-token window in
+        ONE jitted forward (causal within the window), and the scheduler
+        keeps the longest accepted prefix + the target's correction — so
+        greedy output is exactly the autoregressive stream. The verify
+        forward's FFN activity comes back unioned per window: its density is
+        1 − s_agg(γ), the sparse-verification weight I/O of Thm 1. Requests'
+        ``reuse_window`` is ignored in this mode (the verify window IS the
+        γ-window; every window refreshes its own union mask).
+    gamma: draft length γ per verify window (speculative mode only).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  block_size: int = 16, max_blocks_per_seq: int = 8,
                  n_blocks: Optional[int] = None,
-                 track_sparsity: bool = False):
+                 track_sparsity: bool = False,
+                 draft_cfg: Optional[ModelConfig] = None,
+                 draft_params=None, gamma: int = 4):
         fam = registry.get_family(cfg)
         if not hasattr(fam, "model_decode_paged"):
             raise ValueError(
@@ -88,9 +101,11 @@ class ContinuousBatchingEngine:
         self.trackers: Dict[int, AggregatedTracker] = {}
         self.t = 0  # engine step counter
         self._uid = 0
-        # weight-I/O accounting: sums over (active slot, step) of the fraction
-        # of down-proj rows actually read (refresh steps count as 1.0) and of
-        # the fraction of active d_ff tiles (kernels/fused_ffn granularity)
+        # weight-I/O accounting, per (active slot, step): autoregressive mode
+        # sums the fraction of down-proj rows actually read under γ-reuse
+        # (refresh steps count 1.0); speculative mode sums the window's
+        # UNION-active fraction = 1 − s_agg (the Sec. 5.2 verification I/O).
+        # _tiles_sum tracks active d_ff tiles (kernels/fused_ffn granularity).
         self._dens_sum = 0.0
         self._tiles_sum = 0.0
         self._dens_n = 0
@@ -98,11 +113,11 @@ class ContinuousBatchingEngine:
         vocab = cfg.vocab_size
 
         def greedy(logits):
-            """(b, vocab_p) -> greedy next token + its logprob, both (b,)."""
-            lv = logits[:, :vocab].astype(jnp.float32)
+            """(..., vocab_p) -> greedy next token + its logprob."""
+            lv = logits[..., :vocab].astype(jnp.float32)
             nxt = jnp.argmax(lv, axis=-1).astype(jnp.int32)
             lp = jnp.take_along_axis(jax.nn.log_softmax(lv, axis=-1),
-                                     nxt[:, None], 1)[:, 0]
+                                     nxt[..., None], -1)[..., 0]
             return nxt, lp
 
         def decode(params, pages, table, token, pos, masks, refresh):
@@ -130,6 +145,53 @@ class ContinuousBatchingEngine:
         # max_blocks_per_seq distinct shapes (admission-path latency bound)
         self._prefill = jax.jit(prefill, donate_argnums=(2,))
 
+        # -- speculative mode ------------------------------------------------
+        self.spec = draft_cfg is not None
+        self.gamma = gamma
+        if self.spec:
+            if gamma < 1:
+                raise ValueError("speculative mode needs gamma >= 1")
+            if draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError("draft and target must share a vocabulary")
+            dfam = registry.get_family(draft_cfg)
+            if not hasattr(dfam, "model_draft_gamma_paged"):
+                raise ValueError(f"family {draft_cfg.family!r} cannot draft "
+                                 "over a paged cache")
+            self.draft_cfg = draft_cfg
+            self.draft_params = draft_params
+            self.dfam = dfam
+            # the draft shares the slots' block TABLES but has its own pool
+            # (its layer count / head geometry differ from the target's)
+            self.draft_pages = dfam.init_paged_cache(draft_cfg, n_blocks,
+                                                     block_size)
+
+            def draft(dparams, dpages, table, token, pos0, wlen):
+                return dfam.model_draft_gamma_paged(
+                    dparams, dpages, table, token, pos0, wlen, draft_cfg,
+                    gamma, block_size)
+
+            def verify(params, pages, table, window, pos0, wlen, masks):
+                refresh = jnp.ones((n_slots,), bool)
+                logits, pages, new_masks, (act, scores, density, udens) = \
+                    fam.model_verify_window_paged(
+                        params, pages, table, window, pos0, wlen, cfg,
+                        masks, refresh, block_size)
+                nxt, lp = greedy(logits)  # both (b, W)
+                tiles = jnp.mean((scores > 0).astype(jnp.float32),
+                                 axis=(0, 2))
+                return (nxt, lp, pages, new_masks, tiles,
+                        jnp.mean(udens, 0), act)
+
+            def prefill_draft(dparams, tokens, dpages, blocks, true_len):
+                _, dpages = dfam.model_prefill_paged(
+                    dparams, {"tokens": tokens}, draft_cfg, dpages, blocks,
+                    block_size, true_len=true_len)
+                return dpages
+
+            self._draft = jax.jit(draft, donate_argnums=(1,))
+            self._verify = jax.jit(verify, donate_argnums=(1, 6))
+            self._prefill_draft = jax.jit(prefill_draft, donate_argnums=(2,))
+
     # -- request API --------------------------------------------------------
     def submit(self, prompt, max_new: int, reuse_window: int = 0) -> int:
         """Enqueue a request; returns its uid. Admission happens inside
@@ -141,9 +203,9 @@ class ContinuousBatchingEngine:
         self.scheduler.submit(req)
         return self._uid
 
-    def step(self) -> bool:
-        """Retire finished requests, admit queued ones, decode one token for
-        every active slot. Returns False when nothing decoded."""
+    def _admit(self) -> None:
+        """Retire finished requests and prefill newly admitted ones (into
+        the draft's page pool too, in speculative mode)."""
         sched = self.scheduler
         sched.retire_finished(self.t)
         for _, slot in sched.admit(self.t):
@@ -151,14 +213,40 @@ class ContinuousBatchingEngine:
             nb_eff = -(-s // self.block_size)  # blocks the prompt occupies
             toks = np.zeros((1, nb_eff * self.block_size), np.int32)
             toks[0, :s] = slot.request.tokens
-            nxt, lp, self.pages = self._prefill(
-                self.params, jnp.asarray(toks), self.pages,
-                jnp.asarray(slot.blocks[:nb_eff], jnp.int32),
-                jnp.asarray(s, jnp.int32))
+            jt = jnp.asarray(toks)
+            blocks = jnp.asarray(slot.blocks[:nb_eff], jnp.int32)
+            true_len = jnp.asarray(s, jnp.int32)
+            nxt, lp, self.pages = self._prefill(self.params, jt, self.pages,
+                                                blocks, true_len)
+            if self.spec:
+                self.draft_pages = self._prefill_draft(
+                    self.draft_params, jt, self.draft_pages, blocks, true_len)
             sched.seed(slot, int(nxt), float(lp))
             if self.track:
                 self.trackers[slot.request.uid] = AggregatedTracker(
                     self.cfg.n_layers, self.cfg.d_ff)
+
+    def _account(self, active, dens_np, tiles_np, act) -> None:
+        """Per-(active slot, step) weight-I/O + sparsity-tracker updates."""
+        for i in active:
+            self._dens_sum += float(dens_np[i])
+            self._tiles_sum += float(tiles_np[i])
+            self._dens_n += 1
+        if self.track:
+            act_np = np.asarray(act)  # (L, B, F)
+            for i in active:
+                uid = self.scheduler.slots[i].request.uid
+                self.trackers[uid].update(act_np[:, i, :])
+
+    def step(self) -> bool:
+        """Retire finished requests, admit queued ones, then advance every
+        active slot: one decoded token each (autoregressive mode) or one
+        drafted-and-verified γ-window each (speculative mode). Returns False
+        when nothing decoded."""
+        if self.spec:
+            return self._step_spec()
+        sched = self.scheduler
+        self._admit()
         active = sched.active_indices()
         if not active:
             return False
@@ -167,17 +255,34 @@ class ContinuousBatchingEngine:
             self.params, self.pages, jnp.asarray(table),
             jnp.asarray(tokens), jnp.asarray(pos), self.masks,
             jnp.asarray(refresh))
-        dens_np, tiles_np = np.asarray(dens), np.asarray(tiles)
-        for i in active:
-            self._dens_sum += float(dens_np[i])
-            self._tiles_sum += float(tiles_np[i])
-            self._dens_n += 1
-        if self.track:
-            act_np = np.asarray(act)  # (L, B, F)
-            for i in active:
-                uid = sched.slots[i].request.uid
-                self.trackers[uid].update(act_np[:, i, :])
+        self._account(active, np.asarray(dens), np.asarray(tiles), act)
         sched.record(np.asarray(nxt), np.asarray(lp))
+        self.t += 1
+        return True
+
+    def _step_spec(self) -> bool:
+        """One speculative engine step, batched across slots: γ draft tokens
+        per slot from ONE jitted draft scan, then every slot's whole γ+1
+        window through ONE jitted target forward. The only host traffic is
+        the (B, γ) proposal fetch and the (B, W) greedy/logprob fetch the
+        acceptance bookkeeping needs — no per-token round-trips."""
+        sched = self.scheduler
+        self._admit()
+        active = sched.active_indices()
+        if not active:
+            return False
+        tokens, pos0, table, wlen = sched.spec_batch(self.gamma + 1)
+        jt = jnp.asarray(table)
+        jp, jw = jnp.asarray(pos0), jnp.asarray(wlen)
+        props, self.draft_pages = self._draft(
+            self.draft_params, self.draft_pages, jt, jnp.asarray(tokens),
+            jp, jw)
+        window = np.concatenate([tokens[:, None], np.asarray(props)], axis=1)
+        greedy, lp, self.pages, self.masks, tiles, udens, act = self._verify(
+            self.params, self.pages, jt, jnp.asarray(window), jp, jw,
+            self.masks)
+        self._account(active, np.asarray(udens), np.asarray(tiles), act)
+        sched.record_spec(window, np.asarray(greedy), np.asarray(lp), wlen)
         self.t += 1
         return True
 
@@ -194,11 +299,22 @@ class ContinuousBatchingEngine:
 
     # -- metrics ------------------------------------------------------------
     def weight_io_saved(self) -> float:
-        """Fraction of down-projection weight reads skipped by γ-window
-        reuse, averaged over (active slot, step). 0.0 for dense serving."""
+        """Fraction of down-projection weight reads skipped, averaged over
+        (active slot, step). Autoregressive mode: skipped by γ-window reuse
+        (0.0 for dense serving). Speculative mode: skipped by verifying with
+        only the window's union-active rows — the measured s_agg(γ) of paper
+        Sec. 5.2 / Thm 1."""
         if not self._dens_n:
             return 0.0
         return 1.0 - self._dens_sum / self._dens_n
+
+    def s_agg_window(self) -> float:
+        """Measured mean aggregated sparsity per verify window (speculative
+        mode): 1 − mean fraction of FFN units active anywhere in a γ-window.
+        """
+        if not self.spec:
+            raise ValueError("s_agg_window is a speculative-mode metric")
+        return self.weight_io_saved()
 
     def tile_activity_rate(self) -> float:
         """Mean fraction of d_ff tiles with any live activation, per (active

@@ -46,6 +46,18 @@ class RequestResult:
     prompt_len: int
     admitted_step: int
     finished_step: int
+    # speculative-decoding accounting (zero when served autoregressively)
+    draft_proposed: int = 0  # draft tokens submitted for verification
+    draft_accepted: int = 0  # of those, accepted by the target
+    # verify windows this request cost; prefill is NOT included here (the
+    # reporting layer, spec_decode.spec_metrics, adds it as +1)
+    target_calls: int = 0
+
+    @property
+    def accept_rate(self) -> float:
+        """Measured α: accepted / proposed drafts (NOT a tokens-per-call
+        ratio — see spec_decode.spec_metrics)."""
+        return self.draft_accepted / max(1, self.draft_proposed)
 
 
 class RequestQueue:
@@ -99,6 +111,10 @@ class _Slot:
     age: int = 0  # decoded tokens since admission (drives the γ phase)
     out: List[int] = dataclasses.field(default_factory=list)
     lps: List[float] = dataclasses.field(default_factory=list)
+    # speculative-decoding bookkeeping
+    draft_proposed: int = 0
+    draft_accepted: int = 0
+    target_calls: int = 0
 
     @property
     def done(self) -> bool:
@@ -108,6 +124,10 @@ class _Slot:
     def next_pos(self) -> int:
         """Write position of the current token (prompt occupies 0..s-1)."""
         return self.request.prompt_len + self.age
+
+    @property
+    def remaining(self) -> int:
+        return self.request.max_new - len(self.out)
 
 
 class Scheduler:
@@ -152,6 +172,9 @@ class Scheduler:
                     prompt_len=slot.request.prompt_len,
                     admitted_step=slot.admitted_step,
                     finished_step=step,
+                    draft_proposed=slot.draft_proposed,
+                    draft_accepted=slot.draft_accepted,
+                    target_calls=slot.target_calls,
                 )
                 retired.append(slot.request.uid)
                 self.slots[i] = None
@@ -214,3 +237,80 @@ class Scheduler:
             s.age += 1
             s.out.append(int(next_tokens[i]))
             s.lps.append(float(logprobs[i]))
+
+    # -- speculative decoding ------------------------------------------------
+    def ensure_window_capacity(self, slot: _Slot, W: int) -> int:
+        """Window-overflow guard: a slot whose next W-token verify window
+        would run past its allocated blocks gets one more block from the
+        pool — or, when none is free (or the static table is full), a
+        SHRUNKEN window this step. Either way no speculative write can land
+        out of range (out-of-window writes are additionally scratch-routed
+        in-graph). Returns the slot's effective window length W_s >= 1.
+
+        Because the window is capped at ``slot.remaining`` and the current
+        admission policy reserves a request's full lifetime blocks
+        (ceil((prompt+max_new)/bs)), neither branch binds today — they are
+        the safety net that keeps speculative writes in range under lazier
+        allocation policies (admit-on-prompt, block stealing), and are
+        unit-tested against exactly such states. W_s >= 1 always holds:
+        next_pos <= prompt+max_new-1 while the slot is active, so the
+        current token's own position is always writable — the engine can
+        never deadlock, it just degrades to plain decoding."""
+        need = min(W, slot.remaining)
+        while (slot.next_pos + need > len(slot.blocks) * self.block_size
+               and len(slot.blocks) < self.max_blocks_per_seq):
+            extra = self.allocator.alloc(1)
+            if extra is None:
+                break  # pool exhausted: shrink rather than defer the slot
+            slot.blocks.extend(extra)
+        return max(1, min(need,
+                          len(slot.blocks) * self.block_size - slot.next_pos))
+
+    def spec_batch(self, W: int):
+        """Fixed-shape arrays for the speculative step. Idle slots get
+        wlen 0 (their draft/verify writes land in the scratch block).
+        Returns (tokens (B,), pos0 (B,), table (B, nb), wlen (B,))."""
+        B, nb = self.n_slots, self.max_blocks_per_seq
+        tokens = np.zeros((B,), np.int32)
+        pos0 = np.zeros((B,), np.int32)
+        table = np.full((B, nb), SCRATCH_BLOCK, np.int32)
+        wlen = np.zeros((B,), np.int32)
+        for i in self.active_indices():
+            s = self.slots[i]
+            tokens[i] = s.out[-1]
+            pos0[i] = s.next_pos
+            wlen[i] = self.ensure_window_capacity(s, W)
+            table[i, : len(s.blocks)] = s.blocks
+        return tokens, pos0, table, wlen
+
+    def record_spec(self, window: np.ndarray, greedy: np.ndarray,
+                    logprobs: np.ndarray, wlen: np.ndarray) -> None:
+        """Greedy acceptance + KV rewind bookkeeping for one verify step.
+
+        window: (B, W) = [current token, draft proposals...]; greedy /
+        logprobs: (B, W) the target's argmax continuation (and its logprob)
+        at every window position; wlen: (B,) valid window lengths.
+
+        Per slot: accept the longest prefix of proposals that equals the
+        target's own greedy continuation, then the target's correction /
+        continuation token — exactly Leviathan greedy acceptance, so the
+        output stream is identical to pure autoregressive decoding. The KV
+        rewind is this bookkeeping: advancing ``age`` by only the accepted
+        length rolls ``next_pos`` back over the rejected tail, whose stale
+        K/V is overwritten by the next window (and masked by position until
+        then). Blocks are never allocated per-window-token, so rejection
+        leaks nothing past the scratch-block-0 invariant."""
+        for i in self.active_indices():
+            s = self.slots[i]
+            n_prop = int(wlen[i]) - 1
+            n_acc = 0
+            while (n_acc < n_prop
+                   and int(window[i, n_acc + 1]) == int(greedy[i, n_acc])):
+                n_acc += 1
+            # produced = accepted proposals (== greedy[:n_acc]) + correction
+            s.out.extend(int(t) for t in greedy[i, : n_acc + 1])
+            s.lps.extend(float(x) for x in logprobs[i, : n_acc + 1])
+            s.age += n_acc + 1
+            s.draft_proposed += n_prop
+            s.draft_accepted += n_acc
+            s.target_calls += 1

@@ -1,140 +1,61 @@
-"""Speculative decoding — standard (Leviathan) and the paper's SPARSE variant
-(Sec. 5.2): the target model verifies the γ draft tokens using only the
-aggregated-active FFN rows of the current window, cutting the weight I/O of
-verification by s_agg(γ).
+"""Speculative-decoding metrics + theory reporting (paper Sec. 5.2, App. C).
 
-On this CPU container the I/O saving is *modeled* (App. C latency model fed
-with measured aggregated sparsity); token-level behaviour (accept/reject,
-outputs) is executed for real on tiny models and tested for exactness.
+The EXECUTION of sparse speculative decoding lives in the continuous-
+batching engine: batched γ-token drafting (one jitted scan), one-forward
+window verification (models/transformer.py ``verify_window_paged``) and KV
+rewind-on-reject are engine/scheduler concerns (serving/engine.py,
+serving/scheduler.py). This module is the per-request reporting layer — it
+turns the scheduler's raw accept/propose/target-call counts into the
+paper's quantities:
+
+* measured α — the per-proposal acceptance fraction, accepted_drafts /
+  proposed_drafts. (NOT derived from tokens-per-target-call: a produced/n_t
+  ratio folds the free correction token of every window into "acceptance"
+  and overstates α.)
+* Thm 1 speedup — sparse vs standard speculative verification at the
+  measured aggregated window sparsity s_agg(γ);
+* Thm 2 speedup — sparse speculative decoding vs plain autoregressive
+  decoding at (α, s_agg(γ)).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core import spec_theory
-from repro.core.sparsity import AggregatedTracker
-from repro.models import common as cm
-from repro.models import registry
+from repro.serving.scheduler import RequestResult
 
 
 @dataclasses.dataclass
 class SpecResult:
     tokens: np.ndarray  # (n_new,)
-    accept_rate: float  # measured alpha
-    n_target_calls: int
-    n_draft_calls: int
-    s_agg_window: float  # mean aggregated sparsity per gamma-window
+    accept_rate: float  # measured alpha = accepted / proposed drafts
+    n_target_calls: int  # verify windows + 1 prefill
+    n_draft_calls: int  # drafted proposals submitted for verification
+    target_call_reduction: float  # tokens produced per target call
+    s_agg_window: float  # measured aggregated sparsity per gamma-window
     thm1_speedup: float  # sparse vs standard spec decoding (App. C)
     thm2_speedup: float  # sparse spec decoding vs autoregressive
 
 
-def _greedy(logits, vocab):
-    return jnp.argmax(logits[:, :vocab], -1).astype(jnp.int32)
+def spec_metrics(result: RequestResult, *, gamma: int, c: float,
+                 s_agg: float) -> SpecResult:
+    """Per-request speculative metrics from an engine ``RequestResult``.
 
-
-def speculative_generate(
-    target_cfg: ModelConfig, target_params,
-    draft_cfg: ModelConfig, draft_params,
-    prompt: jnp.ndarray,  # (1, s) int32
-    max_new: int, gamma: int = 4, c: float = 0.1,
-    sparse: bool = True,
-) -> SpecResult:
-    """Greedy speculative decoding for batch=1 (the paper's setting).
-
-    Greedy acceptance: a draft token is accepted iff it equals the target's
-    argmax at that position — output is then *identical* to pure target
-    greedy decoding (verified in tests).
+    gamma: the engine's draft length; c: draft/target cost ratio for the
+    theory speedups; s_agg: measured aggregated window sparsity (e.g. the
+    engine's ``s_agg_window()``).
     """
-    tfam = registry.get_family(target_cfg)
-    dfam = registry.get_family(draft_cfg)
-    d_decode = jax.jit(
-        lambda p, c, t, pos: dfam.model_decode(p, c, t, pos, draft_cfg))
-    max_len = prompt.shape[1] + max_new + gamma + 2
-
-    t_last, t_cache = tfam.model_prefill(target_params, {"tokens": prompt},
-                                         target_cfg, max_len)
-    d_last, d_cache = dfam.model_prefill(draft_params, {"tokens": prompt},
-                                         draft_cfg, max_len)
-
-    produced: List[int] = []
-    n_t, n_d = 1, 0  # prefill counts as one target call
-    cur = int(_greedy(t_last, target_cfg.vocab_size)[0])
-    s = prompt.shape[1]
-    d_pos = s  # next write position in draft cache
-    tracker = AggregatedTracker(target_cfg.n_layers, target_cfg.d_ff)
-    window_sparsities: List[float] = []
-
-    while len(produced) < max_new:
-        produced.append(cur)
-        if len(produced) >= max_new:
-            break
-        # --- draft proposes gamma tokens autoregressively ---
-        proposals = []
-        dt = jnp.asarray([cur], jnp.int32)
-        for g in range(gamma):
-            dl, d_cache = d_decode(draft_params, d_cache, dt,
-                                   jnp.asarray([d_pos + g], jnp.int32))
-            n_d += 1
-            dt = _greedy(dl, draft_cfg.vocab_size)
-            proposals.append(int(dt[0]))
-
-        # --- target verifies [cur] + proposals in ONE forward ---
-        window = jnp.asarray([[cur] + proposals], jnp.int32)  # (1, gamma+1)
-        t_logits, t_cache, masks = _target_window(
-            tfam, target_params, t_cache, window, s + len(produced) - 1,
-            target_cfg, collect=sparse)
-        n_t += 1
-        if sparse and masks:
-            for m in masks:
-                tracker.update(m)
-            union = np.any(np.stack(masks), axis=0)
-            window_sparsities.append(1.0 - float(union.mean()))
-
-        greedy = np.asarray(_greedy(t_logits[0], target_cfg.vocab_size))
-        # accept longest prefix where draft token == target argmax
-        n_acc = 0
-        for g in range(gamma):
-            if greedy[g] == proposals[g]:
-                n_acc += 1
-            else:
-                break
-        accepted = proposals[:n_acc]
-        produced.extend(accepted[: max_new - len(produced)])
-        cur = int(greedy[n_acc])  # the target's correction / continuation
-        d_pos = s + len(produced) - 1
-
-    alpha = 1.0 - 1.0 / max(1.0, (len(produced) / max(1, n_t)))
-    s_agg = float(np.mean(window_sparsities)) if window_sparsities else 0.0
+    alpha = result.accept_rate
+    n_t = result.target_calls + 1  # prefill counts as one target call
     return SpecResult(
-        tokens=np.asarray(produced[:max_new]),
-        accept_rate=alpha, n_target_calls=n_t, n_draft_calls=n_d,
+        tokens=result.tokens,
+        accept_rate=alpha,
+        n_target_calls=n_t,
+        n_draft_calls=result.draft_proposed,
+        target_call_reduction=len(result.tokens) / max(1, n_t),
         s_agg_window=s_agg,
         thm1_speedup=spec_theory.thm1_speedup(gamma, c, s_agg),
         thm2_speedup=spec_theory.thm2_speedup(gamma, c, s_agg, alpha),
     )
-
-
-def _target_window(fam, params, cache, window, pos0, cfg, collect):
-    """Verify a (1, w) token window: w sequential cached decode steps (kept
-    simple and exact; a production verifier fuses this into one forward).
-    Returns (logits (1, w, V), cache, per-step activity masks)."""
-    logits_all, masks = [], []
-    for i in range(window.shape[1]):
-        stats = cm.StatsCollector(True) if collect else None
-        lg, cache = fam.model_decode(
-            params, cache, window[:, i],
-            jnp.asarray([pos0 + i], jnp.int32), cfg, stats=stats)
-        logits_all.append(lg)
-        if collect:
-            step = [np.asarray(stats.stats[f"layer{j}/down_act"])
-                    for j in range(cfg.n_layers)
-                    if f"layer{j}/down_act" in stats.stats]
-            if step:
-                masks.append(np.stack(step))
-    return jnp.stack(logits_all, axis=1), cache, masks

@@ -8,7 +8,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.fused_ffn import (fused_up_relu, fused_up_relu_tokens,
-                                     tile_activity)
+                                     fused_up_relu_window, tile_activity,
+                                     window_tile_activity)
 from repro.kernels.sparse_matmul import sparse_matmul
 
 
@@ -91,6 +92,32 @@ def test_fused_up_relu_tokens_per_request_scores():
                                rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(np.asarray(scores).max(0), np.asarray(scores_u),
                                rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,W,shift", [(3, 4, 0.0), (2, 5, 0.5), (4, 1, 0.0)])
+def test_fused_up_relu_window_union_scores(B, W, shift):
+    """The γ-window verification kernel: per-slot scores are the UNION (max)
+    over the slot's window tokens, matching window_tile_activity, and the
+    activations match the per-token kernel on the flattened batch."""
+    rng = np.random.RandomState(5)
+    d, F = 128, 512
+    x = jnp.asarray(rng.randn(B, W, d), jnp.float32)
+    wu = jnp.asarray(rng.randn(d, F) / np.sqrt(d), jnp.float32)
+    h, scores = fused_up_relu_window(x, wu, shift, block_f=256)
+    assert h.shape == (B, W, F) and scores.shape == (B, F // 128)
+    np.testing.assert_allclose(np.asarray(scores),
+                               np.asarray(window_tile_activity(h)),
+                               rtol=1e-6, atol=1e-6)
+    h_tok, s_tok = fused_up_relu_tokens(x.reshape(B * W, d), wu, shift,
+                                        block_f=256)
+    np.testing.assert_allclose(np.asarray(h).reshape(B * W, F),
+                               np.asarray(h_tok), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(scores),
+        np.asarray(s_tok).reshape(B, W, -1).max(1), rtol=1e-6, atol=1e-6)
+    if W == 1:  # single-token window degenerates to the per-token scores
+        np.testing.assert_array_equal(np.asarray(scores),
+                                      np.asarray(s_tok))
 
 
 @pytest.mark.slow

@@ -1,5 +1,5 @@
 """Serving-layer tests: engine generation, γ-reuse semantics, aggregated
-tracker, speculative decoding exactness."""
+tracker, speculative decoding exactness + metrics accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,8 +7,10 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.sparsity import AggregatedTracker
 from repro.models import registry
+from repro.serving import ContinuousBatchingEngine
 from repro.serving.engine import ServeEngine
-from repro.serving.spec_decode import speculative_generate
+from repro.serving.scheduler import RequestResult
+from repro.serving.spec_decode import spec_metrics
 
 
 def _setup(name="tiny-relu"):
@@ -52,19 +54,67 @@ def test_aggregated_tracker_invariants():
 
 
 def test_spec_decode_exact_and_fewer_target_calls():
-    tcfg, tparams, batch = _setup("tiny-relu")
-    dcfg = get_config("tiny").replace(n_layers=1)
-    dparams = registry.get_family(dcfg).init_params(jax.random.PRNGKey(9), dcfg)
-    prompt = batch["tokens"][:1]
-    res = speculative_generate(tcfg, tparams, dcfg, dparams, prompt,
-                               max_new=12, gamma=3, sparse=False)
-    eng = ServeEngine(tcfg, tparams, max_len=64)
-    pure = eng.generate({"tokens": prompt}, max_new=12)
-    np.testing.assert_array_equal(res.tokens, pure.tokens[0])
-    # verification is batched: strictly fewer target calls than tokens
-    # whenever anything was accepted; never more than tokens
-    assert res.n_target_calls <= 12
-    assert res.thm1_speedup >= 1.0
+    """Engine speculative mode vs engine autoregressive mode (f32 compute so
+    the two executables agree bitwise — see test_continuous_batching for the
+    bf16 same-executable exactness properties)."""
+    tcfg = get_config("tiny-relu").replace(compute_dtype="float32")
+    fam = registry.get_family(tcfg)
+    tparams = fam.init_params(jax.random.PRNGKey(0), tcfg)
+    dcfg = tcfg.replace(name="tiny-draft", n_layers=1)
+    dparams = fam.init_params(jax.random.PRNGKey(9), dcfg)
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (8,), 0,
+                                           tcfg.vocab_size), np.int32)
+
+    ar = ContinuousBatchingEngine(tcfg, tparams, n_slots=1, block_size=8,
+                                  max_blocks_per_seq=4)
+    u = ar.submit(prompt, max_new=12)
+    pure = ar.run()[u]
+
+    eng = ContinuousBatchingEngine(tcfg, tparams, n_slots=1, block_size=8,
+                                   max_blocks_per_seq=4, draft_cfg=dcfg,
+                                   draft_params=dparams, gamma=3)
+    u = eng.submit(prompt, max_new=12)
+    res = eng.run()[u]
+
+    np.testing.assert_array_equal(res.tokens, pure.tokens)
+    # verification is batched: never more target calls than tokens, and the
+    # whole window goes through ONE forward per engine step
+    assert res.target_calls <= 12
+    assert res.target_calls == eng.t
+    m = spec_metrics(res, gamma=3, c=0.1, s_agg=eng.s_agg_window())
+    assert m.thm1_speedup >= 1.0
+    assert m.target_call_reduction >= 1.0
+
+
+def test_spec_metrics_alpha_is_per_proposal_fraction():
+    """α must be accepted/proposed — not the tokens-per-target-call ratio,
+    which counts every window's free correction token as 'accepted'."""
+    res = RequestResult(uid=1, tokens=np.zeros(10, np.int32),
+                        logprobs=np.zeros(10, np.float32), prompt_len=4,
+                        admitted_step=0, finished_step=5, draft_proposed=12,
+                        draft_accepted=9, target_calls=4)
+    assert res.accept_rate == 9 / 12
+    m = spec_metrics(res, gamma=3, c=0.1, s_agg=0.4)
+    assert m.accept_rate == 9 / 12
+    assert m.n_target_calls == 5  # + prefill
+    assert m.n_draft_calls == 12
+    assert m.target_call_reduction == 2.0
+    # all-rejected requests must report alpha 0, not a prefill-skewed ratio
+    res0 = RequestResult(uid=2, tokens=np.zeros(6, np.int32),
+                         logprobs=np.zeros(6, np.float32), prompt_len=4,
+                         admitted_step=0, finished_step=6, draft_proposed=15,
+                         draft_accepted=0, target_calls=5)
+    assert res0.accept_rate == 0.0
+    assert spec_metrics(res0, gamma=3, c=0.1, s_agg=0.0).accept_rate == 0.0
+    # alpha == 1 (target-as-draft) takes the geometric-series limit, it must
+    # not divide by zero: expected tokens per window = gamma + 1
+    res1 = RequestResult(uid=3, tokens=np.zeros(12, np.int32),
+                         logprobs=np.zeros(12, np.float32), prompt_len=4,
+                         admitted_step=0, finished_step=3, draft_proposed=9,
+                         draft_accepted=9, target_calls=3)
+    m1 = spec_metrics(res1, gamma=3, c=0.1, s_agg=0.5)
+    assert m1.accept_rate == 1.0
+    np.testing.assert_allclose(m1.thm2_speedup, 4.0 / (0.3 + 0.5))
 
 
 def test_engine_scores_perplexity():

@@ -1,0 +1,150 @@
+"""Property tests (hypothesis; stub-compatible) for speculative decoding's
+paged-cache rollback: arbitrary accept/reject sequences must preserve
+block-table integrity, never touch the scratch block's reservation, and
+leave the KV prefix identical to pure token-by-token autoregressive writes.
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.models import common as cm
+from repro.serving.scheduler import Request, Scheduler
+
+
+# ---------------------------------------------------------------------------
+# cache-level property: window writes + rewind == sequential writes
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 5), st.integers(0, 10_000))
+def test_window_write_rewind_kv_prefix_matches_sequential(
+        block_size, gamma, seed):
+    """Drive a single slot through random speculative windows (random accept
+    counts, scratch-routed overhang) and check the three rollback
+    invariants: (1) the KV prefix up to the rewound position is bitwise
+    identical to sequential one-token-per-step writes of the accepted
+    stream; (2) pool blocks outside the slot's table are never written;
+    (3) the block table never contains the scratch block."""
+    rng = np.random.RandomState(seed)
+    W = gamma + 1
+    nb = 4  # table width
+    n_blocks = nb + 3  # scratch + table + 2 never-owned sentinels
+    total = nb * block_size
+    sentinel = -7.0
+
+    pages = jnp.full((1, n_blocks, 1, block_size, 1), sentinel, jnp.float32)
+    owned = list(rng.permutation(np.arange(1, n_blocks))[:nb])
+    table = jnp.asarray(np.asarray(owned, np.int32)[None])
+    assert cm.SCRATCH_BLOCK not in owned
+
+    pos = 0
+    accepted_vals = []  # the autoregressive reference stream
+    while pos < total - 1 and len(accepted_vals) < 3 * total:
+        wlen = min(W, total - pos)
+        n_acc = rng.randint(0, wlen)  # accepted proposals this window
+        # window token values: the value AT position p is 100 + p for the
+        # accepted prefix; rejected tail writes recognizable garbage
+        vals = np.full((1, W), 0.0, np.float32)
+        for i in range(wlen):
+            vals[0, i] = (100.0 + pos + i) if i <= n_acc else -1000.0 - i
+        wpos = jnp.asarray(np.arange(pos, pos + W, dtype=np.int32)[None])
+        enable = jnp.asarray((np.arange(W) < wlen)[None])
+        pages = cm.paged_write_window(
+            pages, 0, table, wpos, jnp.asarray(vals)[..., None, None],
+            block_size, enable)
+        accepted_vals.extend(100.0 + pos + i for i in range(n_acc + 1))
+        pos += n_acc + 1  # the rewind: rejected tail stays stale
+
+    got = np.asarray(cm.paged_gather(pages[0], table))[0, 0, :, 0]
+    np.testing.assert_array_equal(got[:pos], np.asarray(accepted_vals))
+    # blocks the slot does not own were never written
+    for b in range(1, n_blocks):
+        if b not in owned:
+            assert (np.asarray(pages)[0, b] == sentinel).all(), b
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_scratch_routing_protects_foreign_blocks(block_size, seed):
+    """Out-of-window (disabled) writes — including positions past the table
+    — always land in the scratch block, whatever the position says."""
+    rng = np.random.RandomState(seed)
+    nb, n_blocks, W = 2, 5, 4
+    pages = jnp.zeros((1, n_blocks, 1, block_size, 1), jnp.float32)
+    table = jnp.asarray([[3, 1]], jnp.int32)
+    # positions deliberately run past the table's capacity
+    base = rng.randint(0, 3 * nb * block_size)
+    wpos = jnp.asarray(np.arange(base, base + W, dtype=np.int32)[None])
+    pages = cm.paged_write_window(
+        pages, 0, table, wpos, jnp.ones((1, W, 1, 1), jnp.float32),
+        block_size, enable=jnp.zeros((1, W), bool))
+    changed = np.nonzero(np.asarray(pages)[0].reshape(n_blocks, -1).any(1))[0]
+    assert set(changed) <= {cm.SCRATCH_BLOCK}
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level property: spec bookkeeping keeps the pool consistent
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(0, 10_000))
+def test_scheduler_spec_bookkeeping_integrity(n_slots, gamma, seed):
+    """Random request mix + random accept patterns through spec_batch /
+    record_spec / retire: block tables stay disjoint, the scratch block is
+    never handed out, every block returns to the pool, and every request
+    finishes with exactly max_new tokens."""
+    rng = np.random.RandomState(seed)
+    bs, max_bps = 4, 4
+    n_blocks = 1 + n_slots * max_bps
+    sched = Scheduler(n_slots, n_blocks, bs, max_bps)
+    W = gamma + 1
+    n_req = rng.randint(2, 6)
+    for uid in range(1, n_req + 1):
+        prompt = rng.randint(3, 2 * bs + 1)
+        max_new = rng.randint(1, max_bps * bs - prompt)
+        sched.submit(Request(uid=uid, tokens=np.zeros(prompt, np.int32),
+                             max_new=max_new))
+
+    for step in range(500):
+        sched.retire_finished(step)
+        if not sched.has_work():
+            break
+        for _, slot in sched.admit(step):
+            sched.seed(slot, int(rng.randint(0, 256)), -1.0)
+        if not sched.active_indices():
+            continue
+        tokens, pos0, table, wlen = sched.spec_batch(W)
+
+        # -- invariants under arbitrary accept patterns ---------------------
+        owned = [b for s in sched.slots if s is not None for b in s.blocks]
+        assert len(owned) == len(set(owned))  # disjoint tables
+        assert cm.SCRATCH_BLOCK not in owned
+        assert sched.allocator.available + len(owned) == n_blocks - 1
+        for i in sched.active_indices():
+            s = sched.slots[i]
+            assert 1 <= wlen[i] <= W
+            # the whole window fits the slot's blocks: no write out of range
+            assert pos0[i] + wlen[i] <= len(s.blocks) * bs
+            assert len(s.blocks) <= max_bps
+
+        # fabricate a verify outcome with a random acceptance prefix
+        window = np.concatenate(
+            [tokens[:, None],
+             rng.randint(0, 256, (n_slots, W - 1)).astype(np.int32)], axis=1)
+        greedy = rng.randint(0, 256, (n_slots, W)).astype(np.int32)
+        for i in sched.active_indices():
+            n_acc = rng.randint(0, wlen[i])
+            greedy[i, :n_acc] = window[i, 1: n_acc + 1]
+            if n_acc < wlen[i] - 1:  # force rejection right after the prefix
+                greedy[i, n_acc] = (window[i, n_acc + 1] + 1) % 256
+        sched.record_spec(window, greedy,
+                          np.zeros((n_slots, W), np.float32), wlen)
+    else:
+        raise AssertionError("scheduler failed to drain")
+
+    assert sched.allocator.available == n_blocks - 1  # all blocks returned
+    assert len(sched.results) == n_req
+    for uid, res in sched.results.items():
+        # seed token + (accepted + correction) per verify window, exactly
+        assert len(res.tokens) == 1 + res.draft_accepted + res.target_calls
+        assert res.draft_accepted <= res.draft_proposed
