@@ -1,0 +1,122 @@
+"""Predictor-mode weight-I/O savings vs recall, per activation function.
+
+For each ReLU-family model, calibrate activity predictors (training-free
+sign probe and learned low-rank factors) at several target recalls, then
+serve a mixed-length workload through ``ContinuousBatchingEngine``'s
+predictor mode and report what the paper's Sec. 5 headroom actually buys:
+the fraction of up+down FFN weight reads skipped (both projections gather
+the SAME predicted tile set, so the saving applies to each) against the
+recall the predictor realized in-graph on served tokens.
+
+Full mode uses the shared trained tiny models (benchmarks/common.py);
+BENCH_SMOKE=1 uses random-init models so the CI smoke job exercises the
+whole predictor serving path with no training. tile=1 (exact row-skipping)
+keeps the savings observable at tiny-model widths; TPU-scale configs use
+the 128-lane tile.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.predictor import calibrate
+from repro.serving import ContinuousBatchingEngine
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+
+def _models():
+    """(label, cfg, params) per activation function. Measurement runs at f32
+    compute: the probe and the served pre-activation then share a dtype, so
+    a recall-1.0 sign calibration measures recall exactly 1.0 (at bf16 the
+    probe/compute rounding gap costs ~1e-3 recall — a real deployment
+    effect, but noise for the I/O-vs-recall curve this module draws)."""
+    out = []
+    if SMOKE:
+        for label, name in (("relu", "tiny-relu"), ("relu_mlp", "tiny-opt")):
+            cfg = get_config(name)
+            params = registry.get_family(cfg).init_params(
+                jax.random.PRNGKey(0), cfg)
+            out.append((label, cfg, params))
+        cfg = get_config("tiny-relu").replace(
+            activation="shifted_relu").replace_sparsity(shift=0.5)
+        out.append(("shifted_relu", cfg,
+                    registry.get_family(cfg).init_params(
+                        jax.random.PRNGKey(0), cfg)))
+    else:
+        from benchmarks.common import get_model
+        for label, kind in (("relu", "relu"), ("shifted_relu", "shifted")):
+            cfg, params, _ = get_model(kind)
+            out.append((label, cfg, params))
+        # fatrelu: serving-time thresholding of the trained relu model
+        cfg, params, _ = get_model("relu")
+        out.append(("fatrelu", cfg.replace(name="bench-fatrelu",
+                                           activation="fatrelu:0.05"),
+                    params))
+    return [(label, cfg.replace(compute_dtype="float32"), params)
+            for label, cfg, params in out]
+
+
+def _settings():
+    """(kind, target_recall, calibrate kwargs) sweep."""
+    if SMOKE:
+        return [("sign", 1.0, dict(probe_dtype="float32")),
+                ("lowrank", 0.9, dict(rank=8))]
+    return [("sign", 1.0, dict(probe_dtype="float32")),
+            ("sign", 0.97, dict(probe_dtype="bfloat16")),
+            ("lowrank", 0.97, dict(rank=16)),
+            ("lowrank", 0.9, dict(rank=8))]
+
+
+def _serve(cfg, params, pred):
+    rng = np.random.RandomState(0)
+    n_req, max_new = (3, 10) if SMOKE else (6, 16)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=16,
+                                   max_blocks_per_seq=4, predictor=pred)
+    uids = [eng.submit(rng.randint(0, cfg.vocab_size, int(s)), max_new)
+            for s in rng.randint(6, 20, n_req)]
+    t0 = time.time()
+    res = eng.run()
+    dt = time.time() - t0
+    n_tok = sum(len(res[u].tokens) for u in uids)
+    return {
+        "io_saved": eng.weight_io_saved(),
+        "density": eng.predictor_density(),
+        "recall": eng.predictor_recall(),
+        "misses": int(sum(res[u].pred_misses for u in uids)),
+        "us_per_token": dt / n_tok * 1e6,
+        "calib": pred.mean_report(),
+    }
+
+
+def run():
+    rows, full = [], {}
+    for label, cfg, params in _models():
+        calib = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab_size)}
+        for kind, target, kw in _settings():
+            pred = calibrate(params, cfg, calib, kind=kind,
+                             target_recall=target, tile=1, **kw)
+            m = _serve(cfg, params, pred)
+            m["target_recall"] = target
+            full[f"{label}/{kind}_t{target}"] = m
+            rows.append(
+                f"predictor/{label}_{kind}_t{target},"
+                f"{m['us_per_token']:.0f},"
+                f"io_saved={m['io_saved']:.3f};recall={m['recall']:.4f};"
+                f"target={target};density={m['density']:.3f}")
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_predictor.json", "w") as f:
+        json.dump(full, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

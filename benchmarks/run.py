@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.fig10_optimal_gamma",
     "benchmarks.appE_scaling",
     "benchmarks.serving_throughput",
+    "benchmarks.predictor_sparsity",
 ]
 
 # training-free modules that exercise the kernel + serving hot paths; the CI
@@ -36,6 +37,7 @@ SMOKE_MODULES = [
     "benchmarks.fig10_optimal_gamma",
     "benchmarks.fig7_spec_decode",
     "benchmarks.serving_throughput",
+    "benchmarks.predictor_sparsity",
 ]
 
 

@@ -56,18 +56,24 @@ def _run_legacy(cfg, params, prompts, max_news, max_len):
 
 
 def _run_cb(cfg, params, prompts, max_news, *, arrival_every, gamma=0,
-            n_slots=4, draft=None):
+            n_slots=4, draft=None, predictor=None):
     """draft=(dcfg, dparams) switches the engine to speculative mode (γ-token
     drafts verified in one target forward per step); gamma is then the draft
-    length instead of the Fig. 7c reuse window."""
-    if draft is None:
-        eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
-                                       block_size=16, max_blocks_per_seq=4)
-    else:
+    length instead of the Fig. 7c reuse window. predictor=Predictor switches
+    it to predictor mode (gathered up+down FFN matmuls over predicted-active
+    tiles)."""
+    if draft is not None:
         eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
                                        block_size=16, max_blocks_per_seq=4,
                                        draft_cfg=draft[0],
                                        draft_params=draft[1], gamma=gamma)
+    elif predictor is not None:
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
+                                       block_size=16, max_blocks_per_seq=4,
+                                       predictor=predictor)
+    else:
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
+                                       block_size=16, max_blocks_per_seq=4)
     def serve():
         pending = list(zip(prompts, max_news))
         next_arrival = eng.t  # engine step counter keeps running across runs
@@ -142,6 +148,24 @@ def run():
     rows.append(f"serving/cb_spec_gamma4,{1e6 / tps_s:.0f},"
                 f"toks_per_s={tps_s:.1f};s_agg={s_agg:.3f};"
                 f"tile_activity={tiles_s:.3f}")
+
+    # predictor serving: a training-free sign predictor (f32 probe, recall
+    # 1.0 — identical token streams) names each token's active FFN rows and
+    # the engine gathers only those for BOTH the up- and down-projections;
+    # io_saved here is the up+down weight-I/O the predictor skipped
+    from repro.predictor import calibrate
+    calib = {"tokens": jnp.asarray(
+        np.random.RandomState(7).randint(0, cfg.vocab_size, (4, 32)))}
+    pred = calibrate(params, cfg, calib, kind="sign", probe_dtype="float32",
+                     target_recall=1.0, tile=1)
+    tps_p, io_p, tiles_p = _run_cb(cfg, params, prompts, max_news,
+                                   arrival_every=0, predictor=pred)
+    full["cb_predictor_tokens_per_s"] = tps_p
+    full["cb_predictor_io_saved"] = io_p
+    full["cb_predictor_tile_activity"] = tiles_p
+    rows.append(f"serving/cb_predictor,{1e6 / tps_p:.0f},"
+                f"toks_per_s={tps_p:.1f};io_saved={io_p:.3f};"
+                f"tile_activity={tiles_p:.3f}")
 
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/bench_serving.json", "w") as f:

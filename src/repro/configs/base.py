@@ -43,6 +43,12 @@ class SparsityConfig:
     # the weight gather never crosses shards (beyond-paper §Perf opt; 1 = the
     # paper-faithful global top-k)
     n_groups: int = 1
+    # activation-sparsity predictor (predictor serving mode, repro.predictor):
+    # skip up+down projection weight reads for neurons predicted inactive.
+    predictor: str = "none"        # none | sign | lowrank
+    predictor_rank: int = 8        # low-rank factor rank (lowrank kind)
+    predictor_recall: float = 0.99  # calibration target recall
+    probe_dtype: str = "bfloat16"  # sign-probe precision (f32 = exact)
 
 
 @dataclass(frozen=True)

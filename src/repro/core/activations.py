@@ -86,6 +86,25 @@ def is_sparse_activation(name: str) -> bool:
     return name == "relu" or name.startswith("shifted_relu") or name.startswith("fatrelu")
 
 
+def firing_threshold(name: str, shift: float = 0.0):
+    """Pre-activation threshold above which a ReLU-family unit fires
+    (f(pre) != 0 iff pre > threshold); None for soft activations.
+
+    This is the quantity an activity predictor thresholds its probe against
+    (repro.predictor): relu fires at 0, shifted_relu at its shift, fatrelu
+    at its gate threshold.
+    """
+    if name == "relu":
+        return 0.0
+    if name == "shifted_relu":
+        return shift
+    if name.startswith("shifted_relu:"):
+        return float(name.split(":", 1)[1])
+    if name.startswith("fatrelu:"):
+        return float(name.split(":", 1)[1])
+    return None
+
+
 def sparsity_of(x: jnp.ndarray, eps: float = 0.0) -> jnp.ndarray:
     """Fraction of entries that are (exactly or nearly) zero."""
     return jnp.mean((jnp.abs(x) <= eps).astype(jnp.float32))

@@ -1,15 +1,32 @@
-"""Pallas TPU kernel: tile-gathered sparse matmul (the paper's row-skipping,
+"""Pallas TPU kernels: tile-gathered sparse matmuls (the paper's row-skipping,
 TPU-native — DESIGN.md §3).
 
-``y = x @ w`` computed only over K selected F-tiles. The tile index list
-arrives via *scalar prefetch*, so the weight BlockSpec's ``index_map``
-dereferences ``idx[i]`` — the DMA engine fetches ONLY the active weight
-tiles from HBM. This is exactly the paper's "skip loading zero rows"
-(App. B Fig. 9a) expressed in the TPU memory hierarchy: HBM→VMEM traffic
-and MXU work both shrink by the sparsity factor.
+``y = x @ w`` computed only over selected F-tiles. Tile index lists arrive
+via *scalar prefetch*, so the weight BlockSpec's ``index_map`` dereferences
+``idx[...]`` — the DMA engine fetches ONLY the active weight tiles from HBM.
+This is exactly the paper's "skip loading zero rows" (App. B Fig. 9a)
+expressed in the TPU memory hierarchy: HBM→VMEM traffic and MXU work both
+shrink by the sparsity factor.
 
-Grid = (D_tiles, K) with K innermost: the (T, Dt) output block stays
-resident in VMEM while the K gathered tiles accumulate into it.
+Three variants:
+
+* ``sparse_matmul`` — one shared tile list for all T rows (the batch-union
+  selection the γ-window down-projection uses). Grid = (D_tiles, K) with K
+  innermost: the (T, Dt) output block stays resident in VMEM while the K
+  gathered tiles accumulate into it.
+* ``sparse_matmul_tokens`` — PER-ROW tile lists (idx (T, K), nvalid (T,)):
+  every row gathers its own tiles. This is the continuous-batching shape —
+  co-scheduled requests predict different active sets and must not union
+  (predictor serving mode, serving/engine.py).
+* ``sparse_up_matmul`` — gathers OUTPUT tiles (columns of w): only the
+  predicted-active up-projection tiles are computed/read; the rest of the
+  output is exactly zero. The kernel emits a compact (T, K, tile) buffer
+  (every grid point writes its own block, so nothing is left
+  uninitialized); a plain-XLA scatter-add places it, padding masked to
+  zero so duplicate pad indices are harmless.
+
+``interpret=None`` (the default) autodetects: interpret mode on CPU (this
+container), compiled on TPU. Pass an explicit bool to override.
 """
 from __future__ import annotations
 
@@ -19,6 +36,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _resolve_interpret(interpret) -> bool:
+    """None -> interpret iff running on CPU (explicit bool overrides)."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)
 
 
 def _kernel(idx_ref, nvalid_ref, x_ref, w_ref, o_ref):
@@ -37,11 +61,11 @@ def _kernel(idx_ref, nvalid_ref, x_ref, w_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("tile", "block_d", "interpret"))
 def sparse_matmul(x, w, idx, nvalid, *, tile: int = 128, block_d: int = 256,
-                  interpret: bool = True):
+                  interpret=None):
     """x: (T, F), w: (F, D), idx: (K,) int32 tile ids, nvalid: () int32.
 
-    Returns (T, D) f32. `interpret=True` runs the kernel body on CPU (this
-    container); on TPU pass interpret=False.
+    Returns (T, D) f32. One tile list shared by every row (batch-union
+    selection). interpret=None autodetects from the backend.
     """
     T, F = x.shape
     D = w.shape[1]
@@ -63,5 +87,115 @@ def sparse_matmul(x, w, idx, nvalid, *, tile: int = 128, block_d: int = 256,
         _kernel,
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((T, D), jnp.float32),
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(idx, jnp.reshape(nvalid, (1,)).astype(jnp.int32), x, w)
+
+
+def _kernel_tokens(idx_ref, nvalid_ref, x_ref, w_ref, o_ref):
+    t, i = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(i < nvalid_ref[t])
+    def _acc():
+        o_ref[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "block_d", "interpret"))
+def sparse_matmul_tokens(x, w, idx, nvalid, *, tile: int = 128,
+                         block_d: int = 256, interpret=None):
+    """Per-row tile gather: x (T, F), w (F, D), idx (T, K) int32 tile ids,
+    nvalid (T,) int32 valid-count per row. Returns (T, D) f32.
+
+    Row t accumulates only its own idx[t, :nvalid[t]] tiles — the
+    continuous-batching predictor shape, where each slot's predicted active
+    set differs. Pad idx[t, i >= nvalid[t]] with any in-range tile id
+    (repeating a valid id keeps the padded DMAs cache-resident); padded
+    iterations are skipped by the nvalid guard either way.
+    """
+    T, F = x.shape
+    D = w.shape[1]
+    K = idx.shape[1]
+    block_d = min(block_d, D)
+    assert F % tile == 0 and D % block_d == 0
+
+    grid = (T, D // block_d, K)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda t, j, i, idx, nv: (t, idx[t, i])),
+            pl.BlockSpec((tile, block_d),
+                         lambda t, j, i, idx, nv: (idx[t, i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d),
+                               lambda t, j, i, idx, nv: (t, j)),
+    )
+    return pl.pallas_call(
+        _kernel_tokens,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((T, D), jnp.float32),
+        interpret=_resolve_interpret(interpret),
+    )(idx.astype(jnp.int32), nvalid.astype(jnp.int32), x, w)
+
+
+def _kernel_up(idx_ref, nvalid_ref, x_ref, w_ref, o_ref):
+    t, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i < nvalid_ref[t])
+    def _compute():
+        o_ref[...] = jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[None]
+
+    @pl.when(i >= nvalid_ref[t])
+    def _zero():  # padded iterations: no MXU work, block zeroed
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sparse_up_matmul(x, w, idx, nvalid, *, tile: int = 128, interpret=None):
+    """Output-tile gather for the up-projection: x (T, d), w (d, F),
+    idx (T, K) int32 OUTPUT tile ids, nvalid (T,). Returns (T, F) f32 where
+    only row t's selected output tiles are computed (their weight columns
+    read); everything else is exactly 0.
+
+    The kernel writes a compact (T, K, tile) buffer — each grid point owns
+    its own output block, so no block is left unvisited/uninitialized;
+    iterations past nvalid[t] skip the matmul and just zero their block
+    (their idx entries repeat the row's first tile, so their weight
+    prefetch revisits an already-fetched block). A scatter-ADD then places
+    the tiles, with padding masked to zero so duplicate pad indices cannot
+    clobber real tiles.
+    """
+    T, d = x.shape
+    F = w.shape[1]
+    K = idx.shape[1]
+    assert F % tile == 0
+    n_tiles = F // tile
+
+    grid = (T, K)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda t, i, idx, nv: (t, 0)),
+            pl.BlockSpec((d, tile), lambda t, i, idx, nv: (0, idx[t, i])),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tile), lambda t, i, idx, nv: (t, i, 0)),
+    )
+    compact = pl.pallas_call(
+        _kernel_up,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((T, K, tile), jnp.float32),
+        interpret=_resolve_interpret(interpret),
+    )(idx.astype(jnp.int32), nvalid.astype(jnp.int32), x, w)
+    valid = (jnp.arange(K)[None, :] < nvalid[:, None]).astype(jnp.float32)
+    compact = compact * valid[:, :, None]
+    y = jnp.zeros((T, n_tiles, tile), jnp.float32)
+    y = y.at[jnp.arange(T)[:, None], idx].add(compact)
+    return y.reshape(T, F)

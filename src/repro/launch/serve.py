@@ -6,6 +6,8 @@ the paper's sparse-inference config (relufied weights, tile capacities).
   python -m repro.launch.serve --arch qwen3-4b --smoke --tokens 32   # CPU
   python -m repro.launch.serve --arch qwen3-4b --smoke --continuous  # CB path
   python -m repro.launch.serve --arch qwen3-4b --smoke --speculative # spec
+  python -m repro.launch.serve --arch qwen3-4b --smoke \
+      --predictor sign --target-recall 0.99                # predictor mode
 """
 from __future__ import annotations
 
@@ -31,10 +33,21 @@ def main() -> None:
                          "--continuous)")
     ap.add_argument("--gamma", type=int, default=4,
                     help="draft length γ for --speculative")
+    ap.add_argument("--predictor", choices=["none", "sign", "lowrank"],
+                    default="none",
+                    help="predictor serving mode: skip up+down projection "
+                         "weight reads for neurons a calibrated activity "
+                         "predictor marks inactive (implies --continuous; "
+                         "relufies soft-activation archs first)")
+    ap.add_argument("--target-recall", type=float, default=0.99,
+                    help="calibration recall target for --predictor")
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args()
-    if args.speculative:
+    if args.speculative or args.predictor != "none":
         args.continuous = True
+    if args.speculative and args.predictor != "none":
+        ap.error("--speculative and --predictor are mutually exclusive "
+                 "serving modes")
     if args.continuous and not args.smoke:
         ap.error("--continuous requires --smoke (the pod-mesh launcher "
                  "lowers the legacy decode cell)")
@@ -57,6 +70,12 @@ def main() -> None:
         import numpy as np
         from repro.serving import ContinuousBatchingEngine
         from repro.serving.spec_decode import spec_metrics
+        if args.predictor != "none":
+            from repro.core.activations import is_sparse_activation
+            if not is_sparse_activation(cfg.activation):
+                cfg = relufication.relufy_stage1(cfg)
+            cfg = cfg.replace_sparsity(predictor=args.predictor,
+                                       predictor_recall=args.target_recall)
         fam = registry.get_family(cfg)
         params = fam.init_params(jax.random.PRNGKey(0), cfg)
         lengths = (8, 13, 21)
@@ -68,6 +87,14 @@ def main() -> None:
                            draft_params=fam.init_params(
                                jax.random.PRNGKey(2), dcfg),
                            gamma=args.gamma)
+        if args.predictor != "none":
+            from repro.predictor import calibrate_from_config
+            calib = {"tokens": jax.random.randint(
+                jax.random.PRNGKey(7), (4, 32), 0, cfg.vocab_size)}
+            # tile=1 = exact row-skipping: observable savings on the tiny
+            # smoke models (128-wide tiles are never all-zero at this size)
+            spec_kw = dict(predictor=calibrate_from_config(
+                params, cfg, calib, tile=1))
         eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=16,
                                        max_blocks_per_seq=max_bps,
                                        track_sparsity=True, **spec_kw)
@@ -82,6 +109,14 @@ def main() -> None:
               f"per-request aggregated FFN sparsity "
               f"{', '.join(f'{a:.3f}' for a in aggs)}; "
               f"weight I/O saved {eng.weight_io_saved():.1%}")
+        if args.predictor != "none":
+            print(f"predictor={args.predictor} "
+                  f"(target recall {args.target_recall}): "
+                  f"tile density {eng.predictor_density():.3f}; "
+                  f"realized recall {eng.predictor_recall():.4f}; "
+                  f"up+down weight I/O saved {eng.weight_io_saved():.1%}; "
+                  f"per-request misses "
+                  f"{', '.join(str(res[u].pred_misses) for u in uids)}")
         if args.speculative:
             ms = [spec_metrics(res[u], gamma=args.gamma, c=0.1,
                                s_agg=eng.s_agg_window()) for u in uids]

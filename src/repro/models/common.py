@@ -454,6 +454,17 @@ def pick_group_tile(F: int, n_groups: int) -> int:
     return per
 
 
+def ffn_gather_tile(cfg: ModelConfig) -> int:
+    """The FFN weight-gather tile width: cfg.sparsity.tile_size when it
+    divides d_ff (default 128 = TPU lane width), else the aligned fallback.
+    The single source of truth for the granularity shared by the serving
+    decode steps' tile-activity scores (models/transformer.py) and the
+    activity predictors' masks (repro.predictor) — they must agree or
+    predicted masks stop being weight-I/O plans."""
+    ts = cfg.sparsity.tile_size
+    return ts if cfg.d_ff % ts == 0 else pick_group_tile(cfg.d_ff, 1)
+
+
 def grouped_sparse_matmul(x, w, density: float, n_groups: int):
     """Shard-local tile-gathered matmul (the §Perf optimization).
 
@@ -547,13 +558,21 @@ class StatsCollector:
     HLO contains no instrumentation.
     """
 
-    def __init__(self, active: bool = False):
+    def __init__(self, active: bool = False, raw: bool = False):
         self.active = active
+        self.raw = active and raw
         self.stats: Dict[str, jnp.ndarray] = {}
 
     def add(self, name: str, value: jnp.ndarray):
         if self.active:
             self.stats[name] = value
+
+    def add_raw(self, name: str, x: jnp.ndarray):
+        """Capture a full activation tensor (calibration runs only — e.g.
+        the predictor harness needs per-layer FFN inputs, not summaries).
+        No-op unless the collector was built with raw=True."""
+        if self.raw:
+            self.stats[name] = jax.lax.stop_gradient(x)
 
     def add_sparsity(self, name: str, x: jnp.ndarray):
         if self.active:

@@ -48,6 +48,19 @@ def model_decode_paged(params, pages, table, token, pos, cfg: ModelConfig,
                                ffn_masks, refresh, block_size=block_size)
 
 
+def model_decode_paged_predicted(params, pages, table, token, pos,
+                                 cfg: ModelConfig, ffn_masks, refresh,
+                                 pred_params, kind: str, tile: int,
+                                 k_tiles: int, block_size: int,
+                                 measure: bool = True):
+    return T.decode_step_paged_predicted(params, pages, table, token, pos,
+                                         cfg, ffn_masks, refresh, pred_params,
+                                         kind=kind, tile=tile,
+                                         k_tiles=k_tiles,
+                                         block_size=block_size,
+                                         measure=measure)
+
+
 def model_verify_window_paged(params, pages, table, tokens, pos0, wlen,
                               cfg: ModelConfig, ffn_masks, refresh,
                               block_size: int):

@@ -206,6 +206,7 @@ def apply_ffn(p, x, cfg: ModelConfig, *, stats: cm.StatsCollector,
     weight reuse (paper Fig. 7c): only previously-loaded rows participate."""
     act = acts.get(cfg.activation, shift=cfg.sparsity.shift)
     stats.add_sparsity("up_in", x)
+    stats.add_raw("ffn_x", x)  # predictor-calibration capture (raw=True only)
     x = rules.constrain(x, "dp", None)
     dens_in = cfg.sparsity.input_tile_density if (cfg.sparsity.enabled and decode) else 1.0
     if cfg.ffn_kind == "glu":
@@ -345,7 +346,7 @@ def forward(params, tokens, cfg: ModelConfig, *, stats: Optional[cm.StatsCollect
         layers = params["layers"]
         for i in range(cfg.n_layers):
             pl_i = jax.tree.map(lambda a: a[i], layers)
-            sub = cm.StatsCollector(True)
+            sub = cm.StatsCollector(True, raw=stats.raw)
             if return_kv:
                 x, kv = block(pl_i, x, cfg, positions=positions, stats=sub,
                               return_kv=True)
@@ -471,9 +472,7 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig,
 
 
 def _ffn_tile(cfg: ModelConfig) -> int:
-    F = cfg.d_ff
-    ts = cfg.sparsity.tile_size
-    return ts if F % ts == 0 else cm.pick_group_tile(F, 1)
+    return cm.ffn_gather_tile(cfg)
 
 
 def apply_attn_window_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
@@ -607,8 +606,74 @@ def verify_window_paged(params, pages, table, tokens, pos0, wlen,
                                                    udens)
 
 
+def _ffn_decode_predicted(pf, h, cfg: ModelConfig, pred_l, *, kind: str,
+                          tile: int, k_tiles: int, mask, refresh,
+                          measure: bool = True):
+    """Predictor-gathered decode FFN (predictor serving mode): the
+    activity predictor (repro.predictor) names each token's active tiles
+    BEFORE any FFN weight is read, and both the up- and down-projections
+    run as tile-gathered matmuls (kernels/sparse_matmul.py) over exactly
+    those tiles — the paper's "up to 3x" headroom applied to the full FFN
+    weight I/O, not just the down-projection.
+
+    h: (B, d) post-norm FFN input; pred_l: this layer's predictor-param
+    slice; mask (B, F) / refresh (B,): the γ-window machinery — between
+    refreshes the window's rows are composed INTO the predicted set
+    (cheap recall insurance: recently-active rows stay computable even if
+    the probe misses them).
+
+    A recall miss is a correctness event, so with measure=True (the
+    measurement-repo default) it is counted in-graph: a dense gate
+    pre-activation — telemetry only, its product never feeds the residual
+    stream — re-reads the gate weight each step. measure=False drops that
+    probe (n_active/n_miss come back 0), making the gathered reads the
+    ONLY FFN weight traffic — the production-serving configuration.
+
+    Returns (f (B, d), act (B, F), scores (B, F // _ffn_tile),
+             density (B,) fraction of weight tiles READ (up AND down),
+             n_active (B,), n_miss (B,))."""
+    from repro.kernels import sparse_matmul as ksm
+    from repro.kernels.fused_ffn import tile_activity
+    from repro.predictor import predictors as preds
+
+    act_fn = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+    n_tiles = cfg.d_ff // tile
+    unit_pred = preds.predict_units(kind, pred_l, h)  # (B, F)
+    eff_units = unit_pred | (mask & ~refresh[:, None])
+    tile_mask = preds.units_to_tiles(eff_units, tile)
+    idx, nvalid = preds.pack_tile_indices(tile_mask, k_tiles)
+    cov_units = preds.tiles_to_units(
+        preds.covered_tiles(idx, nvalid, n_tiles), tile)  # (B, F)
+
+    gate_w = pf["wg"] if cfg.ffn_kind == "glu" else pf["wu"]
+    pre = ksm.sparse_up_matmul(h, gate_w, idx, nvalid, tile=tile)
+    # mask to the covered tiles so skipped tiles are EXACTLY zero even for
+    # activations with f(0) != 0 (e.g. a negative shifted_relu shift)
+    hh = act_fn(pre) * cov_units.astype(pre.dtype)
+    if cfg.ffn_kind == "glu":
+        hh = hh * ksm.sparse_up_matmul(h, pf["wu"], idx, nvalid, tile=tile)
+    act = hh != 0
+    scores = tile_activity(hh, _ffn_tile(cfg))
+    f = ksm.sparse_matmul_tokens(hh.astype(pf["wd"].dtype), pf["wd"], idx,
+                                 nvalid, tile=tile).astype(h.dtype)
+    density = nvalid.astype(jnp.float32) / n_tiles
+
+    if measure:
+        thr = acts.firing_threshold(cfg.activation, cfg.sparsity.shift)
+        true_act = (h @ gate_w).astype(jnp.float32) > thr  # telemetry only
+        n_active = jnp.sum(true_act.astype(jnp.int32), axis=-1)
+        n_miss = jnp.sum((true_act & ~cov_units).astype(jnp.int32), axis=-1)
+    else:
+        n_active = jnp.zeros(h.shape[0], jnp.int32)
+        n_miss = jnp.zeros(h.shape[0], jnp.int32)
+    return f, act, scores, density, n_active, n_miss
+
+
 def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
-                             pos, *, layer, block_size: int, mask, refresh):
+                             pos, *, layer, block_size: int, mask, refresh,
+                             pred=None, pred_kind: Optional[str] = None,
+                             pred_tile: int = 128, k_tiles: int = 0,
+                             pred_measure: bool = True):
     """Single-token specialization of ``apply_block_window_paged``.
 
     Mathematically the W = 1 case, but kept as its own lowering: the decode
@@ -616,6 +681,11 @@ def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
     and its bf16 rounding placement is FROZEN — re-deriving it from the
     window code changes where XLA rounds, which changes greedy outputs of
     bf16 models across engines (exactness tests pin the current numerics).
+
+    ``pred`` (a per-layer predictor-param slice; None = off, identical
+    trace to before) switches the FFN to the predictor-gathered path
+    (``_ffn_decode_predicted``), which appends (n_active, n_miss) recall
+    telemetry to the return tuple.
     """
     stats = cm.StatsCollector(False)
     h = post_norm(cm.apply_norm(p["ln1"], x[:, None], cfg)[:, 0], cfg)
@@ -638,6 +708,13 @@ def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
 
     from repro.kernels.fused_ffn import tile_activity
     h = post_norm(cm.apply_norm(p["ln2"], x[:, None], cfg)[:, 0], cfg)
+    if pred is not None:
+        f, act, scores, density, n_active, n_miss = _ffn_decode_predicted(
+            p["ffn"], h, cfg, pred, kind=pred_kind, tile=pred_tile,
+            k_tiles=k_tiles, mask=mask, refresh=refresh,
+            measure=pred_measure)
+        x = x + f
+        return x, k_pages, v_pages, act, scores, density, n_active, n_miss
     act_fn = acts.get(cfg.activation, shift=cfg.sparsity.shift)
     dens_in = (cfg.sparsity.input_tile_density if cfg.sparsity.enabled
                else 1.0)
@@ -689,6 +766,48 @@ def decode_step_paged(params, pages, table, token, pos, cfg: ModelConfig,
     x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
     logits = logits_from(params, x, cfg)
     return logits, {"k": kp, "v": vp}, new_masks, (act, scores, density)
+
+
+def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConfig,
+                                ffn_masks, refresh, pred_params, *,
+                                kind: str, tile: int, k_tiles: int,
+                                block_size: int, measure: bool = True):
+    """Predictor-mode continuous-batching decode step: like
+    ``decode_step_paged`` but every layer's FFN runs tile-gathered over the
+    activity predictor's per-token mask (up- AND down-projection reads are
+    skipped — see ``_ffn_decode_predicted``). pred_params is the stacked
+    (leading layer axis) predictor pytree; kind / tile / k_tiles are static
+    so the step compiles ONCE (fixed-K padded tile indices, no retracing).
+    measure=False drops the in-graph recall probe (and its dense gate-weight
+    re-read) — the production configuration.
+
+    Returns (logits (b, vocab_p), pages, new_masks (L, b, F), aux) with
+    aux = (act (L, b, F), scores (L, b, F//tile'), density (L, b) fraction
+    of FFN weight tiles read, n_active (L, b), n_miss (L, b) in-graph
+    recall telemetry; zeros when measure=False)."""
+    params = cm.cast_params(params, cfg)
+    x = embed_tokens(params, token[:, None], cfg, pos[:, None])[:, 0]
+
+    def body(carry, xs):
+        x, kp, vp = carry
+        pl_i, li, fm, pred_l = xs
+        x, kp, vp, act, scores, density, n_act, n_miss = \
+            apply_block_decode_paged(
+                pl_i, x, cfg, kp, vp, table, pos, layer=li,
+                block_size=block_size, mask=fm, refresh=refresh,
+                pred=pred_l, pred_kind=kind, pred_tile=tile, k_tiles=k_tiles,
+                pred_measure=measure)
+        return (x, kp, vp), (act, scores, density, n_act, n_miss)
+
+    xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks, pred_params)
+    (x, kp, vp), (act, scores, density, n_act, n_miss) = jax.lax.scan(
+        body, (x, pages["k"], pages["v"]), xs)
+    new_masks = jnp.where(refresh[None, :, None], act, ffn_masks)
+
+    x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
+    logits = logits_from(params, x, cfg)
+    return logits, {"k": kp, "v": vp}, new_masks, (act, scores, density,
+                                                   n_act, n_miss)
 
 
 def draft_gamma_paged(params, pages, table, token, pos0, wlen,

@@ -1,0 +1,25 @@
+"""Activation-sparsity predictor subsystem (paper Sec. 5 headroom).
+
+Predict which FFN neurons fire *before* reading their weights, so the
+serving engine can gather only the predicted-active up- AND down-projection
+tiles (serving/engine.py ``predictor=`` mode). See predictors.py for the
+sign / low-rank predictors and calibration.py for the offline fitting
+harness + serialization.
+"""
+from repro.predictor.calibration import (calibrate, calibrate_from_config,
+                                         collect_ffn_inputs, load_predictor,
+                                         save_predictor)
+from repro.predictor.predictors import (LayerReport, Predictor,
+                                        pack_tile_indices, sign_predictor)
+
+__all__ = [
+    "LayerReport",
+    "Predictor",
+    "calibrate",
+    "calibrate_from_config",
+    "collect_ffn_inputs",
+    "load_predictor",
+    "pack_tile_indices",
+    "save_predictor",
+    "sign_predictor",
+]

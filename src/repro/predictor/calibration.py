@@ -1,0 +1,224 @@
+"""Offline predictor calibration: fit thresholds (and low-rank factors) on a
+calibration batch to hit a target recall, with per-layer precision / recall /
+density reports and checkpoint-manager serialization.
+
+The harness runs the model ONCE over the calibration batch with raw
+activation capture (models.common.StatsCollector(raw=True) stores each
+layer's FFN input), then fits everything offline in numpy:
+
+* true activity: a unit fires iff its gate pre-activation exceeds the
+  activation's firing threshold (core.activations.firing_threshold);
+* sign predictor: probe = X @ W_lp at the chosen probe dtype; only the
+  threshold tau is fitted;
+* lowrank predictor: reduced-rank regression of the pre-activations on the
+  inputs. With Z = X @ W the rank-r minimizer of ||X A B - Z||_F is the
+  truncated SVD of Z: B = V_r^T, A = W V_r — data-weighted (directions that
+  matter on real activations are kept), computed per layer from the
+  calibration batch;
+* tau per layer: the highest threshold keeping calibration recall >= the
+  target (highest = most tiles skipped). target_recall >= 1 additionally
+  clamps the sign predictor's tau to the firing threshold, making
+  recall 1.0 *structural* when the probe is full-precision — the exactness
+  anchor the serving tests pin.
+
+Serialization: CheckpointManager (checkpoint/manager.py) — params as the
+array payload, everything else (kind, tau already in params, reports,
+knobs) in the JSON extras, so a fitted predictor round-trips through the
+same atomic-write / keep-k machinery as model checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import registry
+from repro.predictor.predictors import (LayerReport, Predictor, ffn_tile,
+                                        firing_threshold, gate_weight_key,
+                                        probe)
+
+
+def collect_ffn_inputs(params, batch: Dict, cfg: ModelConfig) -> np.ndarray:
+    """One instrumented forward over the calibration batch; returns the
+    per-layer FFN inputs, stacked (L, N, d) f32 (N = batch * seq tokens)."""
+    stats = cm.StatsCollector(True, raw=True)
+    fam = registry.get_family(cfg)
+    fam.model_forward(params, batch, cfg, stats=stats)
+    xs = []
+    for i in range(cfg.n_layers):
+        key = f"layer{i}/ffn_x"
+        if key not in stats.stats:
+            raise ValueError(f"no FFN capture for layer {i} — family "
+                             f"{cfg.family!r} lacks predictor support")
+        xs.append(np.asarray(stats.stats[key], np.float32))
+    return np.stack(xs)
+
+
+def _fit_tau(probe_act: np.ndarray, target_recall: float) -> float:
+    """Highest tau with calibration recall >= target: allow
+    floor((1-target)*n) misses, set tau just below the first kept probe."""
+    n = probe_act.size
+    if n == 0:
+        return 0.0
+    allowed = int(np.floor((1.0 - min(target_recall, 1.0)) * n))
+    srt = np.sort(probe_act)  # ascending
+    anchor = srt[min(allowed, n - 1)]
+    eps = 1e-6 * max(1.0, abs(float(anchor)))
+    return float(anchor) - eps
+
+
+def _layer_report(layer: int, tau: float, probe: np.ndarray,
+                  active: np.ndarray, tile: int) -> LayerReport:
+    pred = probe > tau
+    n_act = max(1, int(active.sum()))
+    n_pred = max(1, int(pred.sum()))
+    N, F = pred.shape
+    pred_tiles = pred.reshape(N, F // tile, tile).any(-1)
+    covered = np.repeat(pred_tiles, tile, axis=-1)
+    return LayerReport(
+        layer=layer,
+        tau=float(tau),
+        recall=float((pred & active).sum() / n_act),
+        tile_recall=float((covered & active).sum() / n_act),
+        precision=float((pred & active).sum() / n_pred),
+        unit_density=float(pred.mean()),
+        tile_density=float(pred_tiles.mean()),
+    )
+
+
+def calibrate(params, cfg: ModelConfig, batch: Dict, *,
+              kind: str = "sign", target_recall: float = 0.99,
+              rank: int = 8, probe_dtype: str = "bfloat16",
+              tile: Optional[int] = None,
+              k_tiles: Optional[int] = None) -> Predictor:
+    """Fit a predictor of the given kind on one calibration batch.
+
+    Returns a Predictor whose per-layer reports record the calibration
+    recall / precision / density at the fitted thresholds. tile defaults to
+    the config's gather granularity (128 on TPU-shaped configs; tiny CPU
+    models can pass 1 for exact row-skipping). k_tiles (static serving
+    gather capacity) defaults to the full tile count — density savings come
+    from nvalid, never from silent truncation.
+    """
+    thr = firing_threshold(cfg)
+    tile = ffn_tile(cfg) if tile is None else tile
+    if cfg.d_ff % tile:
+        raise ValueError(f"d_ff={cfg.d_ff} is not a multiple of tile={tile}")
+    X = collect_ffn_inputs(params, batch, cfg)  # (L, N, d)
+    W = np.asarray(params["layers"]["ffn"][gate_weight_key(cfg)], np.float32)
+    L = cfg.n_layers
+    n_tiles = cfg.d_ff // tile
+
+    taus, reports = [], []
+    a_l, b_l, w_lp = [], [], []
+    for layer in range(L):
+        x, w = X[layer], W[layer]
+        pre = x @ w  # (N, F) true gate pre-activation (f32 reference)
+        active = pre > thr
+        # probes go through predictors.probe — the SAME jnp computation
+        # (including its output rounding at low probe dtypes) the serving
+        # decode step runs, so the fitted tau binds serving-time values
+        if kind == "sign":
+            lp = jnp.asarray(w).astype(jnp.dtype(probe_dtype))
+            w_lp.append(lp)
+            pr = np.asarray(probe("sign", {"w": lp}, jnp.asarray(x)))
+        elif kind == "lowrank":
+            # reduced-rank regression: truncated SVD of the calibration
+            # pre-activations gives the data-weighted rank-r factorization
+            _, _, vt = np.linalg.svd(pre, full_matrices=False)
+            v_r = vt[: min(rank, vt.shape[0])].T  # (F, r)
+            a = jnp.asarray(w @ v_r, jnp.float32)  # (d, r)
+            b = jnp.asarray(v_r.T, jnp.float32)  # (r, F)
+            a_l.append(a)
+            b_l.append(b)
+            pr = np.asarray(probe("lowrank", {"a": a, "b": b},
+                                  jnp.asarray(x)))
+        else:
+            raise ValueError(f"unknown predictor kind {kind!r}")
+        tau = _fit_tau(pr[active], target_recall)
+        if kind == "sign" and target_recall >= 1.0:
+            # structural recall: a full-precision probe IS the
+            # pre-activation, and every firing unit exceeds thr
+            tau = min(tau, thr)
+        taus.append(tau)
+        reports.append(_layer_report(layer, tau, pr, active, tile))
+
+    tau_arr = jnp.asarray(np.asarray(taus, np.float32))
+    if kind == "sign":
+        p = {"w": jnp.stack(w_lp), "tau": tau_arr}
+    else:
+        p = {"a": jnp.stack(a_l), "b": jnp.stack(b_l), "tau": tau_arr}
+    return Predictor(
+        kind=kind, params=p, n_tiles=n_tiles,
+        k_tiles=n_tiles if k_tiles is None else min(k_tiles, n_tiles),
+        tile=tile, target_recall=target_recall, probe_dtype=probe_dtype,
+        reports=reports)
+
+
+def calibrate_from_config(params, cfg: ModelConfig, batch: Dict,
+                          **overrides) -> Predictor:
+    """Calibrate using the SparsityConfig predictor knobs: kind =
+    cfg.sparsity.predictor, target recall, rank, and probe dtype all come
+    from the config (a deployment is a config — configs/base.py), with
+    keyword overrides for experiments."""
+    if cfg.sparsity.predictor == "none":
+        raise ValueError("cfg.sparsity.predictor is 'none' — set it to "
+                         "'sign' or 'lowrank' (or call calibrate directly)")
+    kw = dict(kind=cfg.sparsity.predictor,
+              target_recall=cfg.sparsity.predictor_recall,
+              rank=cfg.sparsity.predictor_rank,
+              probe_dtype=cfg.sparsity.probe_dtype)
+    kw.update(overrides)
+    return calibrate(params, cfg, batch, **kw)
+
+
+# ---------------------------------------------------------------------------
+# serialization (checkpoint/manager.py format)
+
+
+def save_predictor(pred: Predictor, directory: str, step: int = 0) -> None:
+    """Atomic-write the predictor under `directory` (numpy has no bf16, so
+    array payloads are stored f32 and re-cast to probe_dtype on load)."""
+    mgr = CheckpointManager(directory, keep=2, async_save=False)
+    tree = {k: jnp.asarray(v, jnp.float32) for k, v in pred.params.items()}
+    extras = {
+        "kind": pred.kind,
+        "n_tiles": pred.n_tiles,
+        "k_tiles": pred.k_tiles,
+        "tile": pred.tile,
+        "target_recall": pred.target_recall,
+        "probe_dtype": pred.probe_dtype,
+        "reports": [dataclasses.asdict(r) for r in pred.reports],
+    }
+    mgr.save(step, tree, extras=extras, block=True)
+
+
+def load_predictor(directory: str, step: Optional[int] = None) -> Predictor:
+    mgr = CheckpointManager(directory, async_save=False)
+    step = mgr.latest_step() if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no predictor checkpoints in {directory}")
+    with open(os.path.join(directory, f"step_{step:010d}",
+                           "manifest.json")) as f:
+        extras = json.load(f)["extras"]
+    template = ({"w": 0, "tau": 0} if extras["kind"] == "sign"
+                else {"a": 0, "b": 0, "tau": 0})
+    tree, extras = mgr.restore(template, step=step)
+    # probe_dtype governs only the sign probe's weight; low-rank factors and
+    # thresholds are f32
+    pd = jnp.dtype(extras["probe_dtype"])
+    params = {k: (v.astype(pd) if k == "w" else v.astype(jnp.float32))
+              for k, v in tree.items()}
+    return Predictor(
+        kind=extras["kind"], params=params, n_tiles=extras["n_tiles"],
+        k_tiles=extras["k_tiles"], tile=extras["tile"],
+        target_recall=extras["target_recall"],
+        probe_dtype=extras["probe_dtype"],
+        reports=[LayerReport(**r) for r in extras["reports"]])

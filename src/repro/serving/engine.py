@@ -71,6 +71,23 @@ class ContinuousBatchingEngine:
         ``reuse_window`` is ignored in this mode (the verify window IS the
         γ-window; every window refreshes its own union mask).
     gamma: draft length γ per verify window (speculative mode only).
+    predictor: enable PREDICTOR mode (the third serving mode): a fitted
+        activity predictor (repro.predictor) names each token's active FFN
+        tiles BEFORE any FFN weight is read, and the jitted decode step
+        gathers ONLY those tiles for both the up- and down-projections
+        (kernels/sparse_matmul.py) — fixed-K padded tile indices, so one
+        trace serves every step. The predicted mask is composed with the
+        γ-window union mask (rows from the current window stay computable),
+        and every step measures predicted density + realized recall
+        in-graph: a recall miss (masked-out-but-active neuron) is a
+        correctness event recorded on RequestResult. Mutually exclusive
+        with speculative mode.
+    predictor_telemetry: measure realized recall in-graph (predictor mode).
+        The probe re-reads the gate weight densely each step — right for
+        this measurement repo, wrong for a memory-bound deployment: set
+        False in production so the gathered tiles are the ONLY FFN weight
+        traffic (recall telemetry then reads 0 and predictor_recall()
+        raises instead of reporting a fake 1.0).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
@@ -78,7 +95,8 @@ class ContinuousBatchingEngine:
                  n_blocks: Optional[int] = None,
                  track_sparsity: bool = False,
                  draft_cfg: Optional[ModelConfig] = None,
-                 draft_params=None, gamma: int = 4):
+                 draft_params=None, gamma: int = 4,
+                 predictor=None, predictor_telemetry: bool = True):
         fam = registry.get_family(cfg)
         if not hasattr(fam, "model_decode_paged"):
             raise ValueError(
@@ -109,6 +127,9 @@ class ContinuousBatchingEngine:
         self._dens_sum = 0.0
         self._tiles_sum = 0.0
         self._dens_n = 0
+        # predictor-mode recall accounting (in-graph miss counts)
+        self._pred_active = 0
+        self._pred_miss = 0
 
         vocab = cfg.vocab_size
 
@@ -144,6 +165,40 @@ class ContinuousBatchingEngine:
         # prompts are padded to block multiples, so prefill compiles at most
         # max_blocks_per_seq distinct shapes (admission-path latency bound)
         self._prefill = jax.jit(prefill, donate_argnums=(2,))
+
+        # -- predictor mode --------------------------------------------------
+        self.predictor = predictor
+        self.predictor_telemetry = predictor_telemetry
+        if predictor is not None:
+            if draft_cfg is not None:
+                raise ValueError("predictor and speculative modes are "
+                                 "mutually exclusive serving modes")
+            if not hasattr(fam, "model_decode_paged_predicted"):
+                raise ValueError(f"family {cfg.family!r} has no "
+                                 "predictor-mode serving support")
+            if predictor.n_tiles * predictor.tile != cfg.d_ff:
+                raise ValueError(
+                    f"predictor geometry {predictor.n_tiles}x"
+                    f"{predictor.tile} does not cover d_ff={cfg.d_ff}")
+            kind, tile_w = predictor.kind, predictor.tile
+            k_tiles = predictor.k_tiles
+
+            def decode_pred(params, pages, table, token, pos, masks, refresh,
+                            pred_params):
+                logits, pages, new_masks, (act, scores, density, n_act,
+                                           n_miss) = \
+                    fam.model_decode_paged_predicted(
+                        params, pages, table, token, pos, cfg, masks,
+                        refresh, pred_params, kind, tile_w, k_tiles,
+                        block_size, predictor_telemetry)
+                nxt, lp = greedy(logits)
+                tiles = jnp.mean((scores > 0).astype(jnp.float32),
+                                 axis=(0, 2))
+                return (nxt, lp, pages, new_masks, tiles,
+                        jnp.mean(density, 0), act,
+                        jnp.sum(n_act, 0), jnp.sum(n_miss, 0))
+
+            self._decode_pred = jax.jit(decode_pred, donate_argnums=(1, 5))
 
         # -- speculative mode ------------------------------------------------
         self.spec = draft_cfg is not None
@@ -245,6 +300,8 @@ class ContinuousBatchingEngine:
         when nothing decoded."""
         if self.spec:
             return self._step_spec()
+        if self.predictor is not None:
+            return self._step_pred()
         sched = self.scheduler
         self._admit()
         active = sched.active_indices()
@@ -257,6 +314,32 @@ class ContinuousBatchingEngine:
             jnp.asarray(refresh))
         self._account(active, np.asarray(dens), np.asarray(tiles), act)
         sched.record(np.asarray(nxt), np.asarray(lp))
+        self.t += 1
+        return True
+
+    def _step_pred(self) -> bool:
+        """One predictor-mode engine step: per-token predicted tile masks
+        drive gathered up+down FFN matmuls inside the single jitted decode
+        step; density / recall telemetry comes back with the batch."""
+        sched = self.scheduler
+        self._admit()
+        active = sched.active_indices()
+        if not active:
+            return False
+        tokens, pos, table, refresh = sched.batch_arrays()
+        (nxt, lp, self.pages, self.masks, tiles, dens, act, n_act,
+         n_miss) = self._decode_pred(
+            self.params, self.pages, jnp.asarray(table), jnp.asarray(tokens),
+            jnp.asarray(pos), self.masks, jnp.asarray(refresh),
+            self.predictor.params)
+        dens_np = np.asarray(dens)
+        na, nm = np.asarray(n_act), np.asarray(n_miss)
+        self._account(active, dens_np, np.asarray(tiles), act)
+        for i in active:
+            self._pred_active += int(na[i])
+            self._pred_miss += int(nm[i])
+        sched.record(np.asarray(nxt), np.asarray(lp), pred_density=dens_np,
+                     pred_active=na, pred_miss=nm)
         self.t += 1
         return True
 
@@ -299,14 +382,40 @@ class ContinuousBatchingEngine:
 
     # -- metrics ------------------------------------------------------------
     def weight_io_saved(self) -> float:
-        """Fraction of down-projection weight reads skipped, averaged over
-        (active slot, step). Autoregressive mode: skipped by γ-window reuse
-        (0.0 for dense serving). Speculative mode: skipped by verifying with
-        only the window's union-active rows — the measured s_agg(γ) of paper
-        Sec. 5.2 / Thm 1."""
+        """Fraction of FFN weight reads skipped, averaged over (active
+        slot, step). Autoregressive mode: down-projection rows skipped by
+        γ-window reuse (0.0 for dense serving). Speculative mode: skipped
+        by verifying with only the window's union-active rows — the
+        measured s_agg(γ) of paper Sec. 5.2 / Thm 1. Predictor mode:
+        up- AND down-projection tiles skipped because the predictor never
+        gathered them (1 − mean predicted tile density)."""
         if not self._dens_n:
             return 0.0
         return 1.0 - self._dens_sum / self._dens_n
+
+    def predictor_density(self) -> float:
+        """Mean fraction of FFN weight tiles gathered per (active slot,
+        step, layer) in predictor mode — the up+down weight-I/O actually
+        paid."""
+        if self.predictor is None:
+            raise ValueError("predictor_density is a predictor-mode metric")
+        if not self._dens_n:
+            return 1.0
+        return self._dens_sum / self._dens_n
+
+    def predictor_recall(self) -> float:
+        """Realized recall, measured in-graph across every served token:
+        1 − (active neurons the predictor's gathered tiles missed) /
+        (active neurons). A miss is a correctness event — at recall 1.0 the
+        predictor-mode stream is the dense greedy stream."""
+        if self.predictor is None:
+            raise ValueError("predictor_recall is a predictor-mode metric")
+        if not self.predictor_telemetry:
+            raise ValueError("recall was not measured: the engine was built "
+                             "with predictor_telemetry=False")
+        if not self._pred_active:
+            return 1.0
+        return 1.0 - self._pred_miss / self._pred_active
 
     def s_agg_window(self) -> float:
         """Measured mean aggregated sparsity per verify window (speculative

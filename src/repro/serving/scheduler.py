@@ -52,6 +52,10 @@ class RequestResult:
     # verify windows this request cost; prefill is NOT included here (the
     # reporting layer, spec_decode.spec_metrics, adds it as +1)
     target_calls: int = 0
+    # predictor-mode telemetry (zero-information defaults otherwise)
+    predicted_density: float = 1.0  # mean fraction of FFN weight tiles read
+    realized_recall: float = 1.0    # 1 - misses/actives, measured in-graph
+    pred_misses: int = 0            # masked-out-but-active neurons (count)
 
     @property
     def accept_rate(self) -> float:
@@ -115,6 +119,11 @@ class _Slot:
     draft_proposed: int = 0
     draft_accepted: int = 0
     target_calls: int = 0
+    # predictor-mode accumulators (per decoded token)
+    pred_dens_sum: float = 0.0
+    pred_steps: int = 0
+    pred_active: int = 0
+    pred_miss: int = 0
 
     @property
     def done(self) -> bool:
@@ -175,6 +184,11 @@ class Scheduler:
                     draft_proposed=slot.draft_proposed,
                     draft_accepted=slot.draft_accepted,
                     target_calls=slot.target_calls,
+                    predicted_density=(slot.pred_dens_sum / slot.pred_steps
+                                       if slot.pred_steps else 1.0),
+                    realized_recall=(1.0 - slot.pred_miss / slot.pred_active
+                                     if slot.pred_active else 1.0),
+                    pred_misses=slot.pred_miss,
                 )
                 retired.append(slot.request.uid)
                 self.slots[i] = None
@@ -230,13 +244,24 @@ class Scheduler:
             refresh[i] = gamma <= 1 or (s.age % gamma == 0)
         return tokens, pos, table, refresh
 
-    def record(self, next_tokens: np.ndarray, logprobs: np.ndarray) -> None:
-        """Append the step's outputs to every active slot."""
+    def record(self, next_tokens: np.ndarray, logprobs: np.ndarray,
+               pred_density: Optional[np.ndarray] = None,
+               pred_active: Optional[np.ndarray] = None,
+               pred_miss: Optional[np.ndarray] = None) -> None:
+        """Append the step's outputs to every active slot. The optional
+        (B,) predictor-telemetry arrays (predictor serving mode) accumulate
+        per-request: mean weight-tile density, and the in-graph
+        active/missed neuron counts behind ``realized_recall``."""
         for i in self.active_indices():
             s = self.slots[i]
             s.age += 1
             s.out.append(int(next_tokens[i]))
             s.lps.append(float(logprobs[i]))
+            if pred_density is not None:
+                s.pred_dens_sum += float(pred_density[i])
+                s.pred_steps += 1
+                s.pred_active += int(pred_active[i])
+                s.pred_miss += int(pred_miss[i])
 
     # -- speculative decoding ------------------------------------------------
     def ensure_window_capacity(self, slot: _Slot, W: int) -> int:

@@ -1,0 +1,275 @@
+"""Predictor-subsystem tests: tile-gather kernel variants, calibration
+(target recall, serialization), predictor-mode serving exactness at
+recall-1.0, telemetry, and the hypothesis properties the issue pins
+(recall monotone in threshold; padded tile indices always in range)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.kernels.sparse_matmul import (sparse_matmul_tokens,
+                                         sparse_up_matmul)
+from repro.models import registry
+from repro.predictor import (calibrate, load_predictor, pack_tile_indices,
+                             save_predictor, sign_predictor)
+from repro.serving import ContinuousBatchingEngine
+
+
+def _setup(name="tiny-relu", dtype=None):
+    cfg = get_config(name)
+    if dtype is not None:
+        cfg = cfg.replace(compute_dtype=dtype)
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _calib_batch(cfg, seed=2, shape=(4, 24)):
+    return {"tokens": jax.random.randint(jax.random.PRNGKey(seed), shape, 0,
+                                         cfg.vocab_size)}
+
+
+def _prompts(cfg, lengths, seed=1):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, s).astype(np.int32)
+            for s in lengths]
+
+
+# ---------------------------------------------------------------------------
+# kernel variants (interpret autodetects CPU — no interpret= arg anywhere)
+
+
+def test_sparse_matmul_tokens_per_row_gather():
+    """Each row accumulates only its own tiles; zero-valid rows are zero."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(3, 256), jnp.float32)
+    w = jnp.asarray(rng.randn(256, 64), jnp.float32)
+    idx = jnp.asarray([[1, 1], [0, 1], [0, 0]], jnp.int32)
+    nv = jnp.asarray([1, 2, 0], jnp.int32)
+    y = np.asarray(sparse_matmul_tokens(x, w, idx, nv, tile=128, block_d=64))
+    np.testing.assert_allclose(y[0], np.asarray(x[0, 128:] @ w[128:]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y[1], np.asarray(x[1] @ w), rtol=1e-5,
+                               atol=1e-5)
+    assert np.abs(y[2]).sum() == 0.0
+
+
+def test_sparse_up_matmul_zero_outside_selection():
+    """Output-tile gather: selected tiles match the dense product, the rest
+    are exactly zero (the predictor's correctness contract)."""
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(2, 32), jnp.float32)
+    w = jnp.asarray(rng.randn(32, 64), jnp.float32)
+    idx = jnp.asarray([[3, 0, 0], [1, 2, 1]], jnp.int32)
+    nv = jnp.asarray([1, 2], jnp.int32)
+    y = np.asarray(sparse_up_matmul(x, w, idx, nv, tile=16))
+    full = np.asarray(x @ w)
+    np.testing.assert_allclose(y[0, 48:], full[0, 48:], rtol=1e-5, atol=1e-5)
+    assert np.abs(y[0, :48]).sum() == 0.0
+    np.testing.assert_allclose(y[1, 16:48], full[1, 16:48], rtol=1e-5,
+                               atol=1e-5)
+    assert np.abs(y[1, :16]).sum() == 0.0 and np.abs(y[1, 48:]).sum() == 0.0
+
+
+@pytest.mark.skipif(jax.default_backend() != "cpu",
+                    reason="autodetect contract differs off-CPU")
+def test_interpret_autodetect_matches_explicit():
+    """interpret=None resolves to interpret mode on this CPU container and
+    agrees with the explicit override."""
+    from repro.kernels.sparse_matmul import _resolve_interpret, sparse_matmul
+    assert _resolve_interpret(None) is True
+    assert _resolve_interpret(False) is False
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(2, 256), jnp.float32)
+    w = jnp.asarray(rng.randn(256, 64), jnp.float32)
+    idx, nv = jnp.asarray([0, 1], jnp.int32), jnp.asarray(2)
+    auto = sparse_matmul(x, w, idx, nv, tile=128, block_d=64)
+    expl = sparse_matmul(x, w, idx, nv, tile=128, block_d=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(expl))
+
+
+# ---------------------------------------------------------------------------
+# calibration
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("sign", dict(probe_dtype="bfloat16", target_recall=0.95)),
+    ("lowrank", dict(rank=8, target_recall=0.9)),
+])
+def test_calibration_hits_target_recall(kind, kw):
+    cfg, params = _setup()
+    pred = calibrate(params, cfg, _calib_batch(cfg), kind=kind, tile=1, **kw)
+    assert len(pred.reports) == cfg.n_layers
+    for r in pred.reports:
+        assert r.recall >= kw["target_recall"] - 1e-9
+        assert 0.0 <= r.precision <= 1.0
+        assert 0.0 < r.tile_density <= 1.0
+        assert r.tile_recall >= r.recall  # tiles only ever add coverage
+
+
+def test_sign_recall_one_is_structural():
+    """target_recall=1.0 clamps the sign tau to the firing threshold, so
+    calibration recall is 1.0 by construction, not by luck."""
+    cfg, params = _setup(dtype="float32")
+    pred = calibrate(params, cfg, _calib_batch(cfg), kind="sign",
+                     probe_dtype="float32", target_recall=1.0, tile=1)
+    assert all(r.recall == 1.0 for r in pred.reports)
+    assert np.all(np.asarray(pred.params["tau"]) <= 0.0)
+
+
+def test_predictor_checkpoint_roundtrip(tmp_path):
+    cfg, params = _setup()
+    pred = calibrate(params, cfg, _calib_batch(cfg), kind="lowrank", rank=4,
+                     target_recall=0.9, tile=1)
+    save_predictor(pred, str(tmp_path))
+    back = load_predictor(str(tmp_path))
+    assert back.kind == pred.kind and back.k_tiles == pred.k_tiles
+    assert back.tile == pred.tile and back.n_tiles == pred.n_tiles
+    for k in pred.params:
+        np.testing.assert_allclose(np.asarray(back.params[k], np.float32),
+                                   np.asarray(pred.params[k], np.float32),
+                                   rtol=1e-6, atol=1e-6)
+    assert [r.recall for r in back.reports] == [r.recall
+                                                for r in pred.reports]
+
+
+# ---------------------------------------------------------------------------
+# predictor-mode serving
+
+
+@pytest.mark.parametrize("name", ["tiny-relu", "tiny-opt"])
+def test_predictor_mode_exact_at_recall_one(name):
+    """Recall-1.0 calibration (full-precision sign probe) reproduces the
+    dense greedy stream exactly — asserted at f32 compute, where the
+    differently-shaped executables agree (the bf16 cross-executable
+    rounding gotcha documented on apply_block_decode_paged)."""
+    cfg, params = _setup(name, dtype="float32")
+    prompts = _prompts(cfg, [9, 14], seed=3)
+
+    dense = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=8,
+                                     max_blocks_per_seq=6)
+    uids_d = [dense.submit(p, max_new=7) for p in prompts]
+    ref = dense.run()
+
+    pred = calibrate(params, cfg, _calib_batch(cfg), kind="sign",
+                     probe_dtype="float32", target_recall=1.0, tile=1)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=8,
+                                   max_blocks_per_seq=6, predictor=pred)
+    uids_p = [eng.submit(p, max_new=7) for p in prompts]
+    res = eng.run()
+
+    for ud, up in zip(uids_d, uids_p):
+        np.testing.assert_array_equal(ref[ud].tokens, res[up].tokens)
+        np.testing.assert_allclose(ref[ud].logprobs, res[up].logprobs,
+                                   rtol=1e-5, atol=1e-6)
+    assert eng.predictor_recall() == 1.0
+    assert eng.weight_io_saved() > 0.0  # rows were actually skipped
+    for u in uids_p:
+        assert res[u].pred_misses == 0
+        assert res[u].realized_recall == 1.0
+        assert 0.0 < res[u].predicted_density < 1.0
+
+
+def test_predictor_telemetry_and_gamma_composition():
+    """Lossy (lowrank) predictor at default bf16: telemetry lands on
+    RequestResult, engine aggregates stay in range, and composing the
+    γ-window mask (reuse_window) keeps serving every request."""
+    cfg, params = _setup()
+    pred = calibrate(params, cfg, _calib_batch(cfg), kind="lowrank", rank=8,
+                     target_recall=0.9, tile=1)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=8,
+                                   max_blocks_per_seq=6, predictor=pred,
+                                   track_sparsity=True)
+    uids = [eng.submit(p, max_new=6, reuse_window=3)
+            for p in _prompts(cfg, [8, 11], seed=4)]
+    res = eng.run()
+    for u in uids:
+        r = res[u]
+        assert len(r.tokens) == 6
+        assert 0.0 < r.predicted_density <= 1.0
+        assert 0.0 <= r.realized_recall <= 1.0
+        assert (r.pred_misses == 0) == (r.realized_recall == 1.0)
+        assert 0.0 <= eng.trackers[u].aggregated_sparsity() <= 1.0
+    assert 0.0 <= eng.predictor_recall() <= 1.0
+    assert 0.0 < eng.predictor_density() <= 1.0
+
+
+def test_predictor_telemetry_off_same_stream_no_probe_metrics():
+    """predictor_telemetry=False (the production configuration: no dense
+    recall probe in the graph) must serve the identical token stream;
+    recall is then unmeasured and predictor_recall() says so."""
+    cfg, params = _setup(dtype="float32")
+    pred = calibrate(params, cfg, _calib_batch(cfg), kind="sign",
+                     probe_dtype="float32", target_recall=1.0, tile=1)
+    prompts = _prompts(cfg, [9], seed=6)
+    streams = []
+    for telemetry in (True, False):
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=8,
+                                       max_blocks_per_seq=6, predictor=pred,
+                                       predictor_telemetry=telemetry)
+        uid = eng.submit(prompts[0], max_new=6)
+        streams.append(eng.run()[uid].tokens)
+    np.testing.assert_array_equal(streams[0], streams[1])
+    assert eng.weight_io_saved() > 0.0  # density accounting still works
+    with pytest.raises(ValueError, match="not measured"):
+        eng.predictor_recall()
+
+
+def test_predictor_and_speculative_are_exclusive():
+    cfg, params = _setup()
+    pred = sign_predictor(params, cfg, tile=1)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ContinuousBatchingEngine(cfg, params, predictor=pred,
+                                 draft_cfg=cfg, draft_params=params)
+
+
+def test_sign_predictor_requires_sparse_activation():
+    cfg, params = _setup("tiny")  # silu
+    with pytest.raises(ValueError, match="firing threshold"):
+        sign_predictor(params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(-2.0, 2.0), st.floats(0.0, 2.0))
+def test_recall_monotone_in_threshold(seed, tau_lo, gap):
+    """Raising the threshold can only LOWER recall: the predicted set
+    shrinks monotonically in tau."""
+    rng = np.random.RandomState(seed % (2**31 - 1))
+    probe = rng.randn(16, 64).astype(np.float32)
+    active = rng.randn(16, 64) > 0.3
+    n_act = max(1, int(active.sum()))
+    tau_hi = tau_lo + gap
+
+    def recall(tau):
+        return float(((probe > tau) & active).sum() / n_act)
+
+    assert recall(tau_lo) >= recall(tau_hi)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 10),
+       st.floats(0.0, 1.0))
+def test_packed_tile_indices_always_in_range(seed, n_tiles, k, p_active):
+    """Padded/truncated tile indices never leave [0, n_tiles), whatever the
+    mask density or capacity — no gather can touch a tile that does not
+    exist (kernel index maps dereference these raw)."""
+    rng = np.random.RandomState(seed % (2**31 - 1))
+    mask = jnp.asarray(rng.rand(5, n_tiles) < p_active)
+    idx, nvalid = pack_tile_indices(mask, k)
+    idx, nvalid = np.asarray(idx), np.asarray(nvalid)
+    assert idx.shape == (5, min(k, n_tiles))
+    assert (idx >= 0).all() and (idx < n_tiles).all()
+    assert (nvalid <= min(k, n_tiles)).all() and (nvalid >= 0).all()
+    # every VALID index names a truly-masked tile, with no duplicates
+    m = np.asarray(mask)
+    for t in range(5):
+        sel = idx[t, : nvalid[t]]
+        assert len(set(sel.tolist())) == nvalid[t]
+        assert m[t, sel].all()
