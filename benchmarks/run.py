@@ -53,6 +53,49 @@ def run_module(mod_name: str) -> None:
         print(r, flush=True)
 
 
+PR_TAG = os.environ.get("BENCH_PR", "pr4")
+
+
+def write_trajectory(tag: str = PR_TAG) -> str:
+    """Collapse experiments/bench_*.json into a repo-root ``BENCH_<pr>.json``
+    so the perf trajectory is tracked PR-over-PR in git (the experiments/
+    files are gitignored run artifacts; this one is committed). Headline
+    numbers: serving throughput, the weight-I/O savings of every serving
+    mode, and the prefix cache's hit rate / prefill-tokens-saved."""
+    import glob
+    import json
+
+    sources = {}
+    for path in sorted(glob.glob("experiments/bench_*.json")):
+        try:
+            with open(path) as f:
+                sources[os.path.basename(path)] = json.load(f)
+        except (OSError, ValueError):  # a failed module's partial file
+            continue
+    serving = sources.get("bench_serving.json", {})
+    out = {
+        "pr": tag,
+        "headline": {
+            "legacy_tokens_per_s": serving.get("legacy_tokens_per_s"),
+            "serving_tokens_per_s": serving.get("cb_rate0_tokens_per_s"),
+            "cb_speedup_vs_legacy": serving.get("cb_rate0_speedup"),
+            "weight_io_saved_gamma4": serving.get("cb_gamma4_io_saved"),
+            "spec_s_agg_gamma4": serving.get("cb_spec_gamma4_s_agg"),
+            "weight_io_saved_predictor": serving.get("cb_predictor_io_saved"),
+            "prefix_cache_tokens_per_s":
+                serving.get("cb_prefix_cache_tokens_per_s"),
+            "prefix_hit_rate": serving.get("cb_prefix_cache_hit_rate"),
+            "prefill_tokens_saved":
+                serving.get("cb_prefix_cache_prefill_tokens_saved"),
+        },
+        "sources": sources,
+    }
+    fname = f"BENCH_{tag.upper()}.json"
+    with open(fname, "w") as f:
+        json.dump(out, f, indent=2)
+    return fname
+
+
 def main() -> None:
     os.makedirs("experiments", exist_ok=True)
     smoke = "--smoke" in sys.argv
@@ -80,6 +123,7 @@ def main() -> None:
             failures += 1
             print(f"# FAILED {mod_name}:\n{r.stderr[-2000:]}", file=sys.stderr)
         sys.stdout.flush()
+    print(f"# wrote {write_trajectory()}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

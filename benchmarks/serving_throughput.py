@@ -56,24 +56,23 @@ def _run_legacy(cfg, params, prompts, max_news, max_len):
 
 
 def _run_cb(cfg, params, prompts, max_news, *, arrival_every, gamma=0,
-            n_slots=4, draft=None, predictor=None):
+            n_slots=4, draft=None, predictor=None, max_blocks_per_seq=4,
+            **engine_kw):
     """draft=(dcfg, dparams) switches the engine to speculative mode (γ-token
     drafts verified in one target forward per step); gamma is then the draft
     length instead of the Fig. 7c reuse window. predictor=Predictor switches
     it to predictor mode (gathered up+down FFN matmuls over predicted-active
-    tiles)."""
+    tiles). Extra engine_kw (prefill_chunk, prefix_cache, ...) pass through.
+    Returns (tokens_per_s, engine) — metrics are read off the engine."""
     if draft is not None:
-        eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
-                                       block_size=16, max_blocks_per_seq=4,
-                                       draft_cfg=draft[0],
-                                       draft_params=draft[1], gamma=gamma)
+        engine_kw.update(draft_cfg=draft[0], draft_params=draft[1],
+                         gamma=gamma)
     elif predictor is not None:
-        eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
-                                       block_size=16, max_blocks_per_seq=4,
-                                       predictor=predictor)
-    else:
-        eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
-                                       block_size=16, max_blocks_per_seq=4)
+        engine_kw.update(predictor=predictor)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
+                                   block_size=16,
+                                   max_blocks_per_seq=max_blocks_per_seq,
+                                   **engine_kw)
     def serve():
         pending = list(zip(prompts, max_news))
         next_arrival = eng.t  # engine step counter keeps running across runs
@@ -94,10 +93,19 @@ def _run_cb(cfg, params, prompts, max_news, *, arrival_every, gamma=0,
         return sum(len(res[u].tokens) for u in uids)
     serve()  # warm (compile; the jit caches live on the engine instance)
     eng.scheduler.results.clear()
+    sched = eng.scheduler
+    if sched.prefix is not None:
+        # measure the prefix cache COLD: the warm run must not leak its
+        # trie (which would turn every timed admission into a full-prompt
+        # hit) or its hit counters into the reported workload — the timed
+        # numbers are the in-run sharing of the workload itself
+        sched.prefix.evict(sched.allocator, len(sched.prefix))
+        sched.prefill_tokens_total = 0
+        sched.prefill_tokens_saved = 0
     t0 = time.time()
     n = serve()
     dt = time.time() - t0
-    return n / dt, eng.weight_io_saved(), eng.tile_activity_rate()
+    return n / dt, eng
 
 
 def run():
@@ -116,16 +124,17 @@ def run():
 
     rates = [0, 2] if SMOKE else [0, 2, 6]
     for rate in rates:
-        tps, _, _ = _run_cb(cfg, params, prompts, max_news,
-                            arrival_every=rate)
+        tps, _ = _run_cb(cfg, params, prompts, max_news,
+                         arrival_every=rate)
         full[f"cb_rate{rate}_tokens_per_s"] = tps
         full[f"cb_rate{rate}_speedup"] = tps / tps_legacy
         rows.append(f"serving/cb_rate{rate},{1e6 / tps:.0f},"
                     f"toks_per_s={tps:.1f};speedup={tps / tps_legacy:.2f}x")
 
     # γ-window reuse: same workload, masked decode between refreshes
-    tps_g, io_saved, tiles = _run_cb(cfg, params, prompts, max_news,
-                                     arrival_every=0, gamma=4)
+    tps_g, eng_g = _run_cb(cfg, params, prompts, max_news,
+                           arrival_every=0, gamma=4)
+    io_saved, tiles = eng_g.weight_io_saved(), eng_g.tile_activity_rate()
     full["cb_gamma4_tokens_per_s"] = tps_g
     full["cb_gamma4_io_saved"] = io_saved
     full["cb_gamma4_tile_activity"] = tiles
@@ -139,9 +148,9 @@ def run():
     dcfg = cfg.replace(name="tiny-draft", n_layers=1)
     dparams = registry.get_family(dcfg).init_params(jax.random.PRNGKey(3),
                                                     dcfg)
-    tps_s, s_agg, tiles_s = _run_cb(cfg, params, prompts, max_news,
-                                    arrival_every=0, gamma=4,
-                                    draft=(dcfg, dparams))
+    tps_s, eng_s = _run_cb(cfg, params, prompts, max_news,
+                           arrival_every=0, gamma=4, draft=(dcfg, dparams))
+    s_agg, tiles_s = eng_s.weight_io_saved(), eng_s.tile_activity_rate()
     full["cb_spec_gamma4_tokens_per_s"] = tps_s
     full["cb_spec_gamma4_s_agg"] = s_agg
     full["cb_spec_gamma4_tile_activity"] = tiles_s
@@ -158,14 +167,37 @@ def run():
         np.random.RandomState(7).randint(0, cfg.vocab_size, (4, 32)))}
     pred = calibrate(params, cfg, calib, kind="sign", probe_dtype="float32",
                      target_recall=1.0, tile=1)
-    tps_p, io_p, tiles_p = _run_cb(cfg, params, prompts, max_news,
-                                   arrival_every=0, predictor=pred)
+    tps_p, eng_p = _run_cb(cfg, params, prompts, max_news,
+                           arrival_every=0, predictor=pred)
+    io_p, tiles_p = eng_p.weight_io_saved(), eng_p.tile_activity_rate()
     full["cb_predictor_tokens_per_s"] = tps_p
     full["cb_predictor_io_saved"] = io_p
     full["cb_predictor_tile_activity"] = tiles_p
     rows.append(f"serving/cb_predictor,{1e6 / tps_p:.0f},"
                 f"toks_per_s={tps_p:.1f};io_saved={io_p:.3f};"
                 f"tile_activity={tiles_p:.3f}")
+
+    # prefix caching + chunked prefill: every request shares a 2-block
+    # (32-token) system prompt. Arrivals are staggered over 2 slots (the
+    # trie only learns a prefix once its first request finishes prefilling,
+    # so a same-instant burst is all cold misses): the first admissions
+    # prefill the system prompt cold and register it, every later one maps
+    # it from the trie (refcount++) and chunk-prefills only its cold
+    # suffix, interleaved with decode
+    shared = np.random.RandomState(11).randint(0, cfg.vocab_size,
+                                               32).astype(np.int32)
+    pc_prompts = [np.concatenate([shared, p]) for p in prompts]
+    tps_pc, eng_pc = _run_cb(cfg, params, pc_prompts, max_news,
+                             arrival_every=2, n_slots=2,
+                             max_blocks_per_seq=6,
+                             prefill_chunk=16, prefix_cache=True)
+    hit, saved = eng_pc.prefix_hit_rate(), eng_pc.prefill_tokens_saved()
+    full["cb_prefix_cache_tokens_per_s"] = tps_pc
+    full["cb_prefix_cache_hit_rate"] = hit
+    full["cb_prefix_cache_prefill_tokens_saved"] = saved
+    rows.append(f"serving/cb_prefix_cache,{1e6 / tps_pc:.0f},"
+                f"toks_per_s={tps_pc:.1f};prefix_hit_rate={hit:.3f};"
+                f"prefill_tokens_saved={saved}")
 
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/bench_serving.json", "w") as f:

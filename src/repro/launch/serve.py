@@ -8,6 +8,8 @@ the paper's sparse-inference config (relufied weights, tile capacities).
   python -m repro.launch.serve --arch qwen3-4b --smoke --speculative # spec
   python -m repro.launch.serve --arch qwen3-4b --smoke \
       --predictor sign --target-recall 0.99                # predictor mode
+  python -m repro.launch.serve --arch qwen3-4b --smoke \
+      --prefill-chunk 16 --prefix-cache   # chunked prefill + prefix reuse
 """
 from __future__ import annotations
 
@@ -41,9 +43,20 @@ def main() -> None:
                          "relufies soft-activation archs first)")
     ap.add_argument("--target-recall", type=float, default=0.99,
                     help="calibration recall target for --predictor")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: admit prompts one fixed-size "
+                         "chunk per engine step, interleaved with decode "
+                         "(0 = whole-prompt prefill; implies --continuous)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="reuse KV blocks across requests sharing a "
+                         "block-aligned prompt prefix (the smoke workload "
+                         "then shares a system prompt; implies "
+                         "--prefill-chunk 16 unless set)")
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args()
-    if args.speculative or args.predictor != "none":
+    if args.prefix_cache and args.prefill_chunk == 0:
+        args.prefill_chunk = 16
+    if args.speculative or args.predictor != "none" or args.prefill_chunk:
         args.continuous = True
     if args.speculative and args.predictor != "none":
         ap.error("--speculative and --predictor are mutually exclusive "
@@ -78,12 +91,25 @@ def main() -> None:
                                        predictor_recall=args.target_recall)
         fam = registry.get_family(cfg)
         params = fam.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(1)
         lengths = (8, 13, 21)
-        max_bps = -(-(max(lengths) + args.tokens) // 16)  # fit any request
+        if args.prefix_cache:
+            # shared system prompt (two full 16-token blocks): request 1
+            # prefills it cold, every later admission maps it from the trie
+            system = rng.randint(0, cfg.vocab_size, 32)
+            prompts = [np.concatenate([system,
+                                       rng.randint(0, cfg.vocab_size, s)])
+                       for s in lengths]
+        else:
+            prompts = [rng.randint(0, cfg.vocab_size, s) for s in lengths]
+        max_bps = -(-(max(len(p) for p in prompts) + args.tokens) // 16)
         spec_kw = {}
+        if args.prefill_chunk:
+            spec_kw.update(prefill_chunk=args.prefill_chunk,
+                           prefix_cache=args.prefix_cache)
         if args.speculative:
             dcfg = cfg.replace(name=f"{cfg.name}-draft", n_layers=1)
-            spec_kw = dict(draft_cfg=dcfg,
+            spec_kw.update(draft_cfg=dcfg,
                            draft_params=fam.init_params(
                                jax.random.PRNGKey(2), dcfg),
                            gamma=args.gamma)
@@ -93,15 +119,13 @@ def main() -> None:
                 jax.random.PRNGKey(7), (4, 32), 0, cfg.vocab_size)}
             # tile=1 = exact row-skipping: observable savings on the tiny
             # smoke models (128-wide tiles are never all-zero at this size)
-            spec_kw = dict(predictor=calibrate_from_config(
+            spec_kw.update(predictor=calibrate_from_config(
                 params, cfg, calib, tile=1))
         eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=16,
                                        max_blocks_per_seq=max_bps,
                                        track_sparsity=True, **spec_kw)
-        rng = np.random.RandomState(1)
-        uids = [eng.submit(rng.randint(0, cfg.vocab_size, s), args.tokens,
-                           reuse_window=args.reuse_window)
-                for s in lengths]
+        uids = [eng.submit(p, args.tokens, reuse_window=args.reuse_window)
+                for p in prompts]
         res = eng.run()
         aggs = [eng.trackers[u].aggregated_sparsity() for u in uids]
         print(f"continuous batching served {len(uids)} requests "
@@ -109,6 +133,10 @@ def main() -> None:
               f"per-request aggregated FFN sparsity "
               f"{', '.join(f'{a:.3f}' for a in aggs)}; "
               f"weight I/O saved {eng.weight_io_saved():.1%}")
+        if args.prefix_cache:
+            print(f"prefix cache: hit rate {eng.prefix_hit_rate():.1%}; "
+                  f"prefill tokens saved {eng.prefill_tokens_saved()} "
+                  f"(chunked prefill, chunk={args.prefill_chunk})")
         if args.predictor != "none":
             print(f"predictor={args.predictor} "
                   f"(target recall {args.target_recall}): "

@@ -342,8 +342,11 @@ def paged_write_window(pages: jnp.ndarray, layer, table: jnp.ndarray,
     table: (b, nb); pos: (b, W) absolute write positions; val: (b, W, kvp,
     hd); enable: (b, W) bool — window tokens past a slot's valid window
     length (and every token of an idle slot) are routed to the scratch
-    block, so a speculative write can NEVER land outside the blocks a
-    request owns. A true scatter — no full-layer rewrite rides the loop.
+    block, so a write can NEVER land outside the blocks a request owns. A
+    true scatter — no full-layer rewrite rides the loop. Shared by the
+    speculative verify window AND chunked prefill (transformer.py
+    ``prefill_chunk_paged``), whose chunks resume at arbitrary block-
+    aligned positions over possibly prefix-cache-shared tables.
     """
     nb = table.shape[1]
     blk = jnp.take_along_axis(table, jnp.clip(pos // block_size, 0, nb - 1),

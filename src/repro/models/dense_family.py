@@ -42,6 +42,14 @@ def model_prefill_paged(params, batch, cfg: ModelConfig, pages, blocks,
                            block_size=block_size, true_len=true_len)
 
 
+def model_prefill_chunk_paged(params, batch, cfg: ModelConfig, pages, table,
+                              pos0, clen, ffn_masks, refresh,
+                              block_size: int):
+    return T.prefill_chunk_paged(params, pages, table, batch["tokens"],
+                                 pos0, clen, cfg, ffn_masks, refresh,
+                                 block_size=block_size)
+
+
 def model_decode_paged(params, pages, table, token, pos, cfg: ModelConfig,
                        ffn_masks, refresh, block_size: int):
     return T.decode_step_paged(params, pages, table, token, pos, cfg,

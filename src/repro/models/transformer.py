@@ -606,6 +606,38 @@ def verify_window_paged(params, pages, table, tokens, pos0, wlen,
                                                    udens)
 
 
+def prefill_chunk_paged(params, pages, table, tokens, pos0, clen,
+                        cfg: ModelConfig, ffn_masks, refresh, *,
+                        block_size: int):
+    """One fixed-shape CHUNK of paged prefill, batched over slots — the
+    admission path that replaces stop-the-world whole-prompt prefill.
+
+    A prefill chunk IS a W-token window step, so this delegates to
+    ``verify_window_paged``: every chunk token's K/V is scattered at its own
+    position through the block table (``paged_write_window``), attention is
+    causal within the chunk and over everything already in the cache
+    (earlier chunks AND prefix-cache blocks written by other requests), and
+    tokens at index >= clen are scratch-routed. The scheduler interleaves
+    one chunk per engine step with decode, so admission costs ONE compiled
+    shape (n_slots × chunk) with bounded per-step latency — instead of one
+    whole-prompt executable per prompt-block count, each stalling every
+    active decode for its full duration.
+
+    tokens: (b, C) the next C prompt tokens per slot (zero-padded past
+    clen); pos0: (b,) each slot's prefill resume position — block-aligned
+    for a prefix-cache hit's cold suffix; clen: (b,) valid chunk lengths
+    (0 = slot not prefilling this step).
+
+    Returns (logits (b, C, vocab_p), pages, new_masks, aux): on a request's
+    final chunk, logits[i, clen_i - 1] seed its first generated token; aux's
+    union FFN activity / tile scores are the free per-chunk harvest that
+    warms the request's first γ-window mask and predictor telemetry
+    (new_masks picks it up wherever ``refresh`` is set)."""
+    return verify_window_paged(params, pages, table, tokens, pos0, clen,
+                               cfg, ffn_masks, refresh,
+                               block_size=block_size)
+
+
 def _ffn_decode_predicted(pf, h, cfg: ModelConfig, pred_l, *, kind: str,
                           tile: int, k_tiles: int, mask, refresh,
                           measure: bool = True):

@@ -5,6 +5,7 @@ from repro.serving.engine import (  # noqa: F401
     ContinuousBatchingEngine, GenerationResult, ServeEngine,
 )
 from repro.serving.scheduler import (  # noqa: F401
-    BlockAllocator, Request, RequestQueue, RequestResult, Scheduler,
+    BlockAllocator, PrefixCache, Request, RequestQueue, RequestResult,
+    Scheduler,
 )
 from repro.serving.spec_decode import SpecResult, spec_metrics  # noqa: F401

@@ -10,7 +10,10 @@ Two tiers:
   (paper Fig. 7c) and per-request tile-activity scores (kernels/fused_ffn)
   through the batch dimension. One trace, no host round-trips in the loop —
   the only per-step host traffic is the (B,) next-token / logprob fetch the
-  scheduler needs.
+  scheduler needs. Admission can run CHUNKED (``prefill_chunk``): one
+  fixed-shape prompt chunk per step interleaved with decode, with shared
+  prompt prefixes mapped from a refcounted KV-block cache
+  (``prefix_cache``) so identical system prompts are prefilled once.
 
 * ``ServeEngine`` — the legacy single-batch path (fixed max_len contiguous
   cache, per-token python loop), kept as the compatibility surface for
@@ -88,6 +91,31 @@ class ContinuousBatchingEngine:
         False in production so the gathered tiles are the ONLY FFN weight
         traffic (recall telemetry then reads 0 and predictor_recall()
         raises instead of reporting a fake 1.0).
+    prefill_chunk: > 0 enables CHUNKED PREFILL: admission runs the prompt
+        through a fixed (n_slots, prefill_chunk) paged window step
+        (transformer.prefill_chunk_paged), ONE chunk per engine step,
+        interleaved with decode — bounded per-step admission latency and a
+        single compiled prefill shape instead of one per prompt-block
+        count. 0 (default) keeps the whole-prompt prefill executable, whose
+        bf16 rounding placement is frozen (cross-engine exactness tests pin
+        it); at f32 the two paths produce identical greedy streams
+        (tests/test_chunked_prefill.py). Composes with all three serving
+        modes (the draft pool is chunk-prefilled through the same windows).
+    prefix_cache: reuse KV blocks across requests sharing a token-aligned
+        full-block prompt prefix (system prompts, few-shot headers): the
+        scheduler's prefix trie maps the shared blocks at admission
+        (refcount++), only the cold suffix is prefilled, and retirement
+        drops references instead of freeing — cached prefixes persist until
+        pool pressure evicts them (LRU, unshared-only). Requires
+        prefill_chunk > 0 (the cold suffix resumes mid-prompt, which only
+        the chunked path can lower). A cache-hit request's greedy stream is
+        byte-identical to a cold prefill of the same prompt.
+    warm_masks: with chunked prefill, seed each request's first γ-window
+        FFN mask from the prefill chunks' harvested union activity and skip
+        the age-0 dense refresh — the request starts decoding with a warm
+        mask and one less full weight read (approximation, exactly like any
+        other γ-window; off by default so γ phase semantics match the
+        whole-prompt path bit for bit).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
@@ -96,7 +124,9 @@ class ContinuousBatchingEngine:
                  track_sparsity: bool = False,
                  draft_cfg: Optional[ModelConfig] = None,
                  draft_params=None, gamma: int = 4,
-                 predictor=None, predictor_telemetry: bool = True):
+                 predictor=None, predictor_telemetry: bool = True,
+                 prefill_chunk: int = 0, prefix_cache: bool = False,
+                 warm_masks: bool = False):
         fam = registry.get_family(cfg)
         if not hasattr(fam, "model_decode_paged"):
             raise ValueError(
@@ -107,13 +137,31 @@ class ContinuousBatchingEngine:
             n_blocks = 1 + n_slots * max_blocks_per_seq
         if n_blocks - 1 < max_blocks_per_seq:
             raise ValueError("pool smaller than one request's worst case")
+        if prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0")
+        if prefix_cache and not prefill_chunk:
+            raise ValueError(
+                "prefix_cache requires chunked prefill (prefill_chunk > 0): "
+                "a cache hit prefills only the cold suffix, which resumes "
+                "mid-prompt against cached blocks — the whole-prompt "
+                "executable always starts at position 0")
+        if warm_masks and not prefill_chunk:
+            raise ValueError("warm_masks requires chunked prefill "
+                             "(prefill_chunk > 0): the warm γ-mask is "
+                             "harvested from the prefill chunks")
+        if prefill_chunk and not hasattr(fam, "model_prefill_chunk_paged"):
+            raise ValueError(f"family {cfg.family!r} has no chunked-prefill "
+                             "serving support")
         self.cfg = cfg
         self.params = params
         self.fam = fam
         self.block_size = block_size
         self.track = track_sparsity
+        self.prefill_chunk = prefill_chunk
+        self.warm_masks = warm_masks
         self.scheduler = Scheduler(n_slots, n_blocks, block_size,
-                                   max_blocks_per_seq)
+                                   max_blocks_per_seq,
+                                   prefix_cache=prefix_cache)
         self.pages = fam.init_paged_cache(cfg, n_blocks, block_size)
         self.masks = jnp.zeros((cfg.n_layers, n_slots, cfg.d_ff), bool)
         self.trackers: Dict[int, AggregatedTracker] = {}
@@ -165,6 +213,26 @@ class ContinuousBatchingEngine:
         # prompts are padded to block multiples, so prefill compiles at most
         # max_blocks_per_seq distinct shapes (admission-path latency bound)
         self._prefill = jax.jit(prefill, donate_argnums=(2,))
+
+        if prefill_chunk:
+            def prefill_chunk_step(params, pages, table, tokens, pos0, clen,
+                                   masks, refresh, keep):
+                (logits, pages, new_masks,
+                 (act, _, _, _)) = fam.model_prefill_chunk_paged(
+                    params, {"tokens": tokens}, cfg, pages, table, pos0,
+                    clen, masks, refresh, block_size)
+                # warm-mask harvest accumulates over a request's chunks:
+                # the first chunk REPLACES the slot's row (clearing any
+                # stale previous occupant — via new_masks' refresh path),
+                # every later chunk ORs its union activity in, so the
+                # final mask covers the whole cold suffix
+                new_masks = jnp.where(keep[None, :, None], masks | act,
+                                      new_masks)
+                nxt, lp = greedy(logits)  # both (b, C); host reads clen-1
+                return nxt, lp, pages, new_masks
+
+            self._prefill_chunk = jax.jit(prefill_chunk_step,
+                                          donate_argnums=(1, 6))
 
         # -- predictor mode --------------------------------------------------
         self.predictor = predictor
@@ -247,6 +315,26 @@ class ContinuousBatchingEngine:
             self._verify = jax.jit(verify, donate_argnums=(1, 6))
             self._prefill_draft = jax.jit(prefill_draft, donate_argnums=(2,))
 
+            if prefill_chunk:
+                def prefill_chunk_draft(dparams, dpages, table, tokens,
+                                        pos0, clen):
+                    # the draft needs the prompt K/V in ITS pool too. Its
+                    # own γ-masks never persist (the returned masks are
+                    # discarded), but refresh MUST be on: refresh off with
+                    # zero masks silently zeroes the FFN (eff = mask |
+                    # refresh), corrupting the drafted prompt K/V — exact
+                    # output either way, but acceptance would collapse
+                    dmasks = jnp.zeros((draft_cfg.n_layers, n_slots,
+                                        draft_cfg.d_ff), bool)
+                    drefresh = jnp.ones((n_slots,), bool)
+                    _, dpages, _, _ = dfam.model_verify_window_paged(
+                        dparams, dpages, table, tokens, pos0, clen,
+                        draft_cfg, dmasks, drefresh, block_size)
+                    return dpages
+
+                self._prefill_chunk_draft = jax.jit(prefill_chunk_draft,
+                                                    donate_argnums=(1,))
+
     # -- request API --------------------------------------------------------
     def submit(self, prompt, max_new: int, reuse_window: int = 0) -> int:
         """Enqueue a request; returns its uid. Admission happens inside
@@ -258,28 +346,66 @@ class ContinuousBatchingEngine:
         self.scheduler.submit(req)
         return self._uid
 
-    def _admit(self) -> None:
-        """Retire finished requests and prefill newly admitted ones (into
-        the draft's page pool too, in speculative mode)."""
+    def _admit(self) -> bool:
+        """Retire finished requests, admit queued ones, and advance prefill
+        (into the draft's page pool too, in speculative mode).
+
+        Whole-prompt mode (prefill_chunk == 0): every newly admitted
+        request is prefilled to completion right here — the frozen legacy
+        lowering. Chunked mode: ONE fixed-shape (n_slots, prefill_chunk)
+        window step advances EVERY prefilling slot by one chunk, so
+        admission work is interleaved with (and latency-bounded like) the
+        decode step; slots whose prompt completes are seeded from that
+        chunk's logits. Returns True when any prefill work ran."""
         sched = self.scheduler
         sched.retire_finished(self.t)
-        for _, slot in sched.admit(self.t):
-            s = slot.request.prompt_len
-            nb_eff = -(-s // self.block_size)  # blocks the prompt occupies
-            toks = np.zeros((1, nb_eff * self.block_size), np.int32)
-            toks[0, :s] = slot.request.tokens
-            jt = jnp.asarray(toks)
-            blocks = jnp.asarray(slot.blocks[:nb_eff], jnp.int32)
-            true_len = jnp.asarray(s, jnp.int32)
-            nxt, lp, self.pages = self._prefill(self.params, jt, self.pages,
-                                                blocks, true_len)
-            if self.spec:
-                self.draft_pages = self._prefill_draft(
-                    self.draft_params, jt, self.draft_pages, blocks, true_len)
-            sched.seed(slot, int(nxt), float(lp))
-            if self.track:
+        newly = sched.admit(self.t)
+        if self.track:
+            for _, slot in newly:
                 self.trackers[slot.request.uid] = AggregatedTracker(
                     self.cfg.n_layers, self.cfg.d_ff)
+        if not self.prefill_chunk:
+            for _, slot in newly:
+                s = slot.request.prompt_len
+                nb_eff = -(-s // self.block_size)  # blocks the prompt holds
+                toks = np.zeros((1, nb_eff * self.block_size), np.int32)
+                toks[0, :s] = slot.request.tokens
+                jt = jnp.asarray(toks)
+                blocks = jnp.asarray(slot.blocks[:nb_eff], jnp.int32)
+                true_len = jnp.asarray(s, jnp.int32)
+                nxt, lp, self.pages = self._prefill(self.params, jt,
+                                                    self.pages, blocks,
+                                                    true_len)
+                if self.spec:
+                    self.draft_pages = self._prefill_draft(
+                        self.draft_params, jt, self.draft_pages, blocks,
+                        true_len)
+                sched.seed(slot, int(nxt), float(lp))
+            return bool(newly)
+        if not sched.prefill_indices():
+            return False
+        (tokens, pos0, table, clen,
+         first) = sched.prefill_batch(self.prefill_chunk)
+        # prefilling slots run DENSE (refresh on): the chunk records fresh
+        # union activity into their mask rows — the warm-mask harvest, and
+        # harmless otherwise (an age-0 decode refresh overwrites it).
+        # Decoding slots keep refresh off so their live γ-masks survive
+        # the shared (L, B, F) mask update; continuing chunks (keep) OR
+        # into the running union instead of replacing it.
+        refresh = clen > 0
+        keep = refresh & ~first
+        jt = jnp.asarray(table)
+        jtok, jp, jc = (jnp.asarray(tokens), jnp.asarray(pos0),
+                        jnp.asarray(clen))
+        nxt, lp, self.pages, self.masks = self._prefill_chunk(
+            self.params, self.pages, jt, jtok, jp, jc, self.masks,
+            jnp.asarray(refresh), jnp.asarray(keep))
+        if self.spec:
+            self.draft_pages = self._prefill_chunk_draft(
+                self.draft_params, self.draft_pages, jt, jtok, jp, jc)
+        sched.record_prefill(np.asarray(nxt), np.asarray(lp), clen,
+                             warm=self.warm_masks)
+        return True
 
     def _account(self, active, dens_np, tiles_np, act) -> None:
         """Per-(active slot, step) weight-I/O + sparsity-tracker updates."""
@@ -294,19 +420,28 @@ class ContinuousBatchingEngine:
                 self.trackers[uid].update(act_np[:, i, :])
 
     def step(self) -> bool:
-        """Retire finished requests, admit queued ones, then advance every
-        active slot: one decoded token each (autoregressive mode) or one
-        drafted-and-verified γ-window each (speculative mode). Returns False
-        when nothing decoded."""
-        if self.spec:
-            return self._step_spec()
-        if self.predictor is not None:
-            return self._step_pred()
-        sched = self.scheduler
-        self._admit()
-        active = sched.active_indices()
-        if not active:
+        """Retire finished requests, admit queued ones, advance prefill by
+        one chunk (chunked mode), then advance every active slot: one
+        decoded token each (autoregressive mode) or one drafted-and-verified
+        γ-window each (speculative mode). Returns False when NO work ran —
+        neither a prefill chunk nor a decode."""
+        prefilled = self._admit()
+        active = self.scheduler.active_indices()
+        if active:
+            if self.spec:
+                self._advance_spec(active)
+            elif self.predictor is not None:
+                self._advance_pred(active)
+            else:
+                self._advance(active)
+        elif not prefilled:
             return False
+        self.t += 1
+        return True
+
+    def _advance(self, active) -> None:
+        """Decode one token for every active slot."""
+        sched = self.scheduler
         tokens, pos, table, refresh = sched.batch_arrays()
         nxt, lp, self.pages, self.masks, tiles, dens, act = self._decode(
             self.params, self.pages, jnp.asarray(table),
@@ -314,18 +449,12 @@ class ContinuousBatchingEngine:
             jnp.asarray(refresh))
         self._account(active, np.asarray(dens), np.asarray(tiles), act)
         sched.record(np.asarray(nxt), np.asarray(lp))
-        self.t += 1
-        return True
 
-    def _step_pred(self) -> bool:
-        """One predictor-mode engine step: per-token predicted tile masks
-        drive gathered up+down FFN matmuls inside the single jitted decode
-        step; density / recall telemetry comes back with the batch."""
+    def _advance_pred(self, active) -> None:
+        """Predictor-mode decode: per-token predicted tile masks drive
+        gathered up+down FFN matmuls inside the single jitted decode step;
+        density / recall telemetry comes back with the batch."""
         sched = self.scheduler
-        self._admit()
-        active = sched.active_indices()
-        if not active:
-            return False
         tokens, pos, table, refresh = sched.batch_arrays()
         (nxt, lp, self.pages, self.masks, tiles, dens, act, n_act,
          n_miss) = self._decode_pred(
@@ -340,20 +469,14 @@ class ContinuousBatchingEngine:
             self._pred_miss += int(nm[i])
         sched.record(np.asarray(nxt), np.asarray(lp), pred_density=dens_np,
                      pred_active=na, pred_miss=nm)
-        self.t += 1
-        return True
 
-    def _step_spec(self) -> bool:
-        """One speculative engine step, batched across slots: γ draft tokens
-        per slot from ONE jitted draft scan, then every slot's whole γ+1
+    def _advance_spec(self, active) -> None:
+        """Speculative decode, batched across slots: γ draft tokens per
+        slot from ONE jitted draft scan, then every slot's whole γ+1
         window through ONE jitted target forward. The only host traffic is
         the (B, γ) proposal fetch and the (B, W) greedy/logprob fetch the
         acceptance bookkeeping needs — no per-token round-trips."""
         sched = self.scheduler
-        self._admit()
-        active = sched.active_indices()
-        if not active:
-            return False
         tokens, pos0, table, wlen = sched.spec_batch(self.gamma + 1)
         jt = jnp.asarray(table)
         jp, jw = jnp.asarray(pos0), jnp.asarray(wlen)
@@ -366,17 +489,35 @@ class ContinuousBatchingEngine:
             self.masks)
         self._account(active, np.asarray(udens), np.asarray(tiles), act)
         sched.record_spec(window, np.asarray(greedy), np.asarray(lp), wlen)
-        self.t += 1
-        return True
 
     def run(self, max_steps: int = 1_000_000) -> Dict[int, RequestResult]:
-        """Drive step() until every submitted request has finished."""
+        """Drive step() until every submitted request has finished.
+
+        Never drops work silently: if step() makes no progress while
+        requests remain queued (a head that can never be admitted — which
+        submit()'s validation should have rejected), or max_steps runs out
+        with work outstanding, this RAISES instead of returning a results
+        dict with uids quietly missing."""
         for _ in range(max_steps):
             progressed = self.step()
             if not self.scheduler.has_work():
                 break
-            if not progressed and len(self.scheduler.queue) == 0:
-                break
+            if not progressed:
+                # step() already retired + attempted admission: with no
+                # active slot, no prefill chunk, and the queue head still
+                # stuck, no internal event can ever unblock it
+                alloc = self.scheduler.allocator
+                raise RuntimeError(
+                    f"serving deadlock: queued requests "
+                    f"{self.scheduler.queue.uids()} can never be admitted "
+                    f"({alloc.available}/{alloc.n_blocks - 1} pool blocks "
+                    f"free, every slot idle)")
+        else:
+            if self.scheduler.has_work():
+                raise RuntimeError(
+                    f"run(max_steps={max_steps}) exhausted with "
+                    f"{len(self.scheduler.queue)} request(s) still queued "
+                    f"or in flight")
         self.scheduler.retire_finished(self.t)
         return dict(self.scheduler.results)
 
@@ -431,6 +572,20 @@ class ContinuousBatchingEngine:
         if not self._dens_n:
             return 1.0
         return self._tiles_sum / self._dens_n
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from the prefix cache
+        (their prefill — compute AND KV writes — was skipped entirely).
+        0.0 when the cache is off or nothing was admitted yet."""
+        s = self.scheduler
+        if not s.prefill_tokens_total:
+            return 0.0
+        return s.prefill_tokens_saved / s.prefill_tokens_total
+
+    def prefill_tokens_saved(self) -> int:
+        """Total prompt tokens whose prefill was skipped via cached prefix
+        blocks, across every admitted request."""
+        return self.scheduler.prefill_tokens_saved
 
 
 # ---------------------------------------------------------------------------

@@ -1,17 +1,49 @@
-"""Continuous-batching scheduler: request queue, block allocator, and slot
-bookkeeping for the paged KV cache (models/common.py).
+"""Continuous-batching scheduler: request queue, refcounted block allocator,
+prompt-prefix cache, and slot bookkeeping for the paged KV cache
+(models/common.py).
 
 Pure host-side logic — no jax — so admission/retirement policy is unit-
 testable without a model. The engine (serving/engine.py) owns the device
 state (page pool, γ-window masks) and calls into this scheduler every step:
 
-  1. retire slots whose requests finished, returning their blocks;
+  1. retire slots whose requests finished, dropping their block references;
   2. admit queued requests into free slots while blocks last (strict FIFO);
-  3. build the fixed-shape slot batch the jitted decode step consumes.
+  3. advance chunked prefill for admitted-but-not-yet-decoding slots;
+  4. build the fixed-shape slot batch the jitted decode step consumes.
 
 A request is admitted only if its *entire* lifetime block need fits now
 (ceil((prompt + max_new) / block_size)), so decode never stalls mid-flight
 on allocation failure.
+
+Admission state machine (one request's lifecycle)
+-------------------------------------------------
+
+    submit()            queued      validated against max_blocks_per_seq AND
+       |                            the pool itself (a request the pool could
+       v                            never hold is rejected, not starved)
+    admit()             prefilling  head-of-line FIFO: a free slot + the full
+       |                            lifetime block need, with any cached
+       |                            full-block prompt prefix mapped from the
+       |                            prefix trie (refcount++, prefilled jumps
+       |                            to the cached length) and only the cold
+       |                            suffix left to compute
+       v
+    record_prefill()    prefilling  one fixed-shape chunk per engine step,
+       | (xN chunks)                interleaved with the decode step, until
+       |                            ``prefilled == prompt_len``; whole-prompt
+       |                            mode (prefill_chunk=0) collapses this to
+       |                            a single jump
+       v
+    seed()              decoding    first generated token recorded from the
+       |                            final chunk's logits; the prompt's full
+       |                            blocks are registered in the prefix trie
+       v
+    record()/record_spec()  ...     one token (or one accepted window) per
+       |                            step; ``age`` drives the γ-refresh phase
+       v
+    retire_finished()   retired     block refcounts dropped — blocks shared
+                                    with the trie or other slots survive;
+                                    RequestResult lands in ``results``
 """
 from __future__ import annotations
 
@@ -56,6 +88,8 @@ class RequestResult:
     predicted_density: float = 1.0  # mean fraction of FFN weight tiles read
     realized_recall: float = 1.0    # 1 - misses/actives, measured in-graph
     pred_misses: int = 0            # masked-out-but-active neurons (count)
+    # prompt tokens served from the prefix cache (prefill skipped for them)
+    cached_prompt_tokens: int = 0
 
     @property
     def accept_rate(self) -> float:
@@ -80,31 +114,193 @@ class RequestQueue:
     def pop(self) -> Request:
         return self._q.popleft()
 
+    def uids(self) -> List[int]:
+        return [r.uid for r in self._q]
+
     def __len__(self) -> int:
         return len(self._q)
 
 
 class BlockAllocator:
-    """Free-list over the shared page pool. Block 0 (SCRATCH_BLOCK) is never
-    handed out — idle slots and table padding point at it."""
+    """Refcounted free-list over the shared page pool. Block 0
+    (SCRATCH_BLOCK) is never handed out — idle slots and table padding point
+    at it.
+
+    ``alloc`` hands a block out with one reference; requests sharing a
+    cached prompt prefix and the prefix trie each take an extra reference
+    (``ref``). ``free`` DROPS one reference and returns the block to the
+    free list only when the last one is gone, so a shared prefix block
+    survives the request that prefilled it. Double-frees and negative
+    refcounts trip assertions instead of corrupting the pool.
+    """
 
     def __init__(self, n_blocks: int):
         self.n_blocks = n_blocks
         self._free: List[int] = list(range(n_blocks - 1, SCRATCH_BLOCK, -1))
+        self._refs: Dict[int, int] = {}
 
     @property
     def available(self) -> int:
         return len(self._free)
 
+    @property
+    def allocated(self) -> int:
+        """Distinct blocks currently held (any refcount > 0)."""
+        return len(self._refs)
+
+    def refcount(self, block: int) -> int:
+        return self._refs.get(block, 0)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self._refs[b] = 1
+        return out
+
+    def ref(self, blocks: List[int]) -> None:
+        """Take an extra reference on already-allocated blocks."""
+        for b in blocks:
+            assert self._refs.get(b, 0) > 0, f"ref of unallocated block {b}"
+            self._refs[b] += 1
 
     def free(self, blocks: List[int]) -> None:
         for b in blocks:
             assert b != SCRATCH_BLOCK
-            self._free.append(b)
+            n = self._refs.get(b, 0)
+            assert n > 0, f"double free of block {b}"
+            if n == 1:
+                del self._refs[b]
+                self._free.append(b)
+            else:
+                self._refs[b] = n - 1
+
+
+class _TrieNode:
+    __slots__ = ("key", "block", "children", "parent", "last_used")
+
+    def __init__(self, key, block: int, parent: Optional["_TrieNode"]):
+        self.key = key
+        self.block = block
+        self.children: Dict[tuple, "_TrieNode"] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Prompt-prefix → KV-block trie, keyed on token-aligned FULL blocks.
+
+    Each node caches one full block of prompt K/V, keyed by that block's
+    ``block_size`` tokens at depth = block index, so a root path spells a
+    prompt prefix. Full prompt blocks are immutable once prefilled (decode
+    writes start at ``prompt_len``, inside the first partial block), which
+    is what makes them shareable. Nodes hold their own allocator reference:
+    cached blocks survive the requests that wrote them and are reclaimed
+    LRU-leaf-first (``evict``) only under pool pressure — and only when no
+    live request still shares them (refcount == 1).
+    """
+
+    def __init__(self):
+        self._children: Dict[tuple, _TrieNode] = {}
+        self._clock = 0
+        self.lookups = 0
+        self.hits = 0
+
+    @staticmethod
+    def _keys(tokens, n_full: int, block_size: int) -> List[tuple]:
+        toks = np.asarray(tokens)
+        return [tuple(int(t) for t in toks[i * block_size:(i + 1) * block_size])
+                for i in range(n_full)]
+
+    @staticmethod
+    def _shareable_blocks(prompt_len: int, block_size: int) -> int:
+        """Full blocks of a prompt that may be cached/matched. Capped one
+        token short of the prompt so at least one token always prefills
+        cold — the final chunk's logits seed the first generated token."""
+        return (prompt_len - 1) // block_size
+
+    def lookup(self, tokens, block_size: int) -> List[int]:
+        """Longest cached full-block prefix of ``tokens`` (strictly shorter
+        than the prompt). Returns block ids in sequence order; the caller
+        takes its own reference on them before using or evicting."""
+        self._clock += 1
+        self.lookups += 1
+        children = self._children
+        blocks: List[int] = []
+        for key in self._keys(tokens, self._shareable_blocks(len(tokens),
+                                                             block_size),
+                              block_size):
+            node = children.get(key)
+            if node is None:
+                break
+            node.last_used = self._clock
+            blocks.append(node.block)
+            children = node.children
+        if blocks:
+            self.hits += 1
+        return blocks
+
+    def insert(self, tokens, blocks: List[int], block_size: int,
+               allocator: BlockAllocator) -> None:
+        """Register a fully prefilled prompt's full blocks. Insert-if-absent:
+        an existing node keeps its block (two identical prompts admitted
+        concurrently both prefill cold; the loser's copy stays private and
+        is freed at retirement). New nodes take a trie reference."""
+        self._clock += 1
+        children = self._children
+        parent: Optional[_TrieNode] = None
+        keys = self._keys(tokens, self._shareable_blocks(len(tokens),
+                                                         block_size),
+                          block_size)
+        for i, key in enumerate(keys):
+            node = children.get(key)
+            if node is None:
+                node = _TrieNode(key, blocks[i], parent)
+                allocator.ref([node.block])
+                children[key] = node
+            node.last_used = self._clock
+            parent = node
+            children = node.children
+
+    def evict(self, allocator: BlockAllocator, n_needed: int) -> int:
+        """Return up to ``n_needed`` cached blocks to the pool, dropping
+        LRU leaves no live request shares. Leaves-first keeps every
+        surviving root path dense (a partial path would be unmatchable)."""
+        freed = 0
+        while freed < n_needed:
+            leaf = self._lru_unshared_leaf(allocator)
+            if leaf is None:
+                break
+            siblings = (leaf.parent.children if leaf.parent is not None
+                        else self._children)
+            del siblings[leaf.key]
+            allocator.free([leaf.block])
+            freed += 1
+        return freed
+
+    def _iter_nodes(self):
+        stack = list(self._children.values())
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
+    def _lru_unshared_leaf(self, allocator: BlockAllocator):
+        best = None
+        for node in self._iter_nodes():
+            if node.children or allocator.refcount(node.block) != 1:
+                continue  # interior, or a live request still shares it
+            if best is None or node.last_used < best.last_used:
+                best = node
+        return best
+
+    def blocks(self) -> List[int]:
+        """Every block id the trie currently holds a reference on."""
+        return [n.block for n in self._iter_nodes()]
+
+    def __len__(self) -> int:
+        return len(self.blocks())
 
 
 @dataclasses.dataclass
@@ -113,6 +309,11 @@ class _Slot:
     blocks: List[int]
     admitted_step: int
     age: int = 0  # decoded tokens since admission (drives the γ phase)
+    # prompt tokens whose K/V is already in the pool: starts at the cached
+    # prefix length, advances chunk by chunk, reaches prompt_len at seed()
+    prefilled: int = 0
+    cached_tokens: int = 0  # of those, mapped from the prefix cache
+    warm: bool = False  # γ-mask seeded from the prefill activity harvest
     out: List[int] = dataclasses.field(default_factory=list)
     lps: List[float] = dataclasses.field(default_factory=list)
     # speculative-decoding bookkeeping
@@ -130,6 +331,10 @@ class _Slot:
         return len(self.out) >= self.request.max_new
 
     @property
+    def prefilling(self) -> bool:
+        return self.prefilled < self.request.prompt_len
+
+    @property
     def next_pos(self) -> int:
         """Write position of the current token (prompt occupies 0..s-1)."""
         return self.request.prompt_len + self.age
@@ -140,8 +345,11 @@ class _Slot:
 
 
 class Scheduler:
+    """Admission/retirement policy over the slot batch — see the module
+    docstring for the request state machine this drives."""
+
     def __init__(self, n_slots: int, n_blocks: int, block_size: int,
-                 max_blocks_per_seq: int):
+                 max_blocks_per_seq: int, prefix_cache: bool = False):
         self.n_slots = n_slots
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
@@ -149,6 +357,11 @@ class Scheduler:
         self.queue = RequestQueue()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.results: Dict[int, RequestResult] = {}
+        self.prefix: Optional[PrefixCache] = (PrefixCache() if prefix_cache
+                                              else None)
+        # prompt-token accounting behind the engine's prefix_hit_rate()
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_saved = 0
 
     # -- lifecycle ----------------------------------------------------------
     def blocks_needed(self, req: Request) -> int:
@@ -166,6 +379,15 @@ class Scheduler:
             raise ValueError(
                 f"request {req.uid}: needs {need} blocks > "
                 f"max_blocks_per_seq={self.max_blocks_per_seq}")
+        # also validate against the pool itself: a request bigger than every
+        # allocatable block combined would sit at the head of the FIFO
+        # forever (admit() breaks on it, run() sees no progress) — reject it
+        # here instead of silently starving it and everything behind it
+        if need > self.allocator.n_blocks - 1:
+            raise ValueError(
+                f"request {req.uid}: needs {need} blocks but the pool holds "
+                f"only {self.allocator.n_blocks - 1} allocatable blocks — "
+                f"it could never be admitted")
         self.queue.push(req)
 
     def retire_finished(self, step: int) -> List[int]:
@@ -189,6 +411,7 @@ class Scheduler:
                     realized_recall=(1.0 - slot.pred_miss / slot.pred_active
                                      if slot.pred_active else 1.0),
                     pred_misses=slot.pred_miss,
+                    cached_prompt_tokens=slot.cached_tokens,
                 )
                 retired.append(slot.request.uid)
                 self.slots[i] = None
@@ -196,7 +419,12 @@ class Scheduler:
 
     def admit(self, step: int) -> List[Tuple[int, _Slot]]:
         """Fill free slots from the queue while blocks last (strict FIFO).
-        Returns (slot_index, slot) pairs needing prefill."""
+
+        With a prefix cache, the request's longest cached full-block prompt
+        prefix is mapped from the trie (refcount++ — no prefill, no new
+        blocks) and only the cold suffix is allocated; under pool pressure,
+        LRU cached prefixes nobody currently shares are evicted first.
+        Returns (slot_index, slot) pairs needing (suffix) prefill."""
         admitted = []
         for i in range(self.n_slots):
             if self.slots[i] is not None:
@@ -204,24 +432,54 @@ class Scheduler:
             req = self.queue.peek()
             if req is None:
                 break
-            blocks = self.allocator.alloc(self.blocks_needed(req))
-            if blocks is None:
+            need = self.blocks_needed(req)
+            cached: List[int] = []
+            if self.prefix is not None:
+                cached = self.prefix.lookup(req.tokens, self.block_size)
+                if cached:
+                    # pin before any eviction below can consider them
+                    self.allocator.ref(cached)
+            cold = self.allocator.alloc(need - len(cached))
+            if cold is None and self.prefix is not None:
+                self.prefix.evict(self.allocator, need - len(cached)
+                                  - self.allocator.available)
+                cold = self.allocator.alloc(need - len(cached))
+            if cold is None:
+                if cached:
+                    self.allocator.free(cached)  # drop our pins
                 break  # head of line doesn't fit yet — wait for retirements
             self.queue.pop()
-            slot = _Slot(request=req, blocks=blocks, admitted_step=step)
+            n_cached = len(cached) * self.block_size
+            slot = _Slot(request=req, blocks=cached + cold,
+                         admitted_step=step, prefilled=n_cached,
+                         cached_tokens=n_cached)
+            self.prefill_tokens_total += req.prompt_len
+            self.prefill_tokens_saved += n_cached
             self.slots[i] = slot
             admitted.append((i, slot))
         return admitted
 
     def seed(self, slot: _Slot, token: int, logprob: float) -> None:
-        """Record the first generated token (from the prefill logits)."""
+        """Record the first generated token (from the prefill logits),
+        marking prefill complete and registering the prompt's full blocks
+        in the prefix cache."""
+        slot.prefilled = slot.request.prompt_len
         slot.out.append(int(token))
         slot.lps.append(float(logprob))
+        if self.prefix is not None:
+            self.prefix.insert(slot.request.tokens, slot.blocks,
+                               self.block_size, self.allocator)
 
     # -- batch assembly -----------------------------------------------------
     def active_indices(self) -> List[int]:
+        """Slots currently DECODING (fully prefilled, not finished)."""
         return [i for i, s in enumerate(self.slots)
-                if s is not None and not s.done]
+                if s is not None and not s.done and not s.prefilling]
+
+    def prefill_indices(self) -> List[int]:
+        """Slots admitted but still prefilling their (cold) prompt suffix."""
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.prefilling]
 
     def has_work(self) -> bool:
         return bool(self.active_indices()) or len(self.queue) > 0 or any(
@@ -234,7 +492,9 @@ class Scheduler:
         tokens = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
         table = np.full((B, nb), SCRATCH_BLOCK, np.int32)
-        refresh = np.ones((B,), bool)  # idle slots refresh (mask unused)
+        # idle slots keep their masks: a prefilling slot's row is its warm
+        # harvest in progress and must survive interleaved decode steps
+        refresh = np.zeros((B,), bool)
         for i in self.active_indices():
             s = self.slots[i]
             tokens[i] = s.out[-1]
@@ -242,7 +502,54 @@ class Scheduler:
             table[i, : len(s.blocks)] = s.blocks
             gamma = s.request.reuse_window
             refresh[i] = gamma <= 1 or (s.age % gamma == 0)
+            if s.warm and s.age == 0 and gamma > 1:
+                # γ-mask already seeded from the prefill activity harvest
+                # (engine warm_masks mode): the first window rides it
+                # instead of a dense refresh
+                refresh[i] = False
         return tokens, pos, table, refresh
+
+    def prefill_batch(self, chunk: int):
+        """Fixed-shape arrays for one chunked-prefill step: the next
+        ``chunk`` prompt tokens of every prefilling slot, written at its
+        own resume position. Idle/decoding slots get clen 0 (their window
+        tokens are scratch-routed in-graph). Returns (tokens (B, C),
+        pos0 (B,), table (B, nb), clen (B,), first (B,)) — ``first`` marks
+        a slot's FIRST chunk, whose harvest must replace (not OR into) any
+        stale mask left by the slot's previous occupant."""
+        B, nb = self.n_slots, self.max_blocks_per_seq
+        tokens = np.zeros((B, chunk), np.int32)
+        pos0 = np.zeros((B,), np.int32)
+        table = np.full((B, nb), SCRATCH_BLOCK, np.int32)
+        clen = np.zeros((B,), np.int32)
+        first = np.zeros((B,), bool)
+        for i in self.prefill_indices():
+            s = self.slots[i]
+            p = s.prefilled
+            n = min(chunk, s.request.prompt_len - p)
+            tokens[i, :n] = s.request.tokens[p:p + n]
+            pos0[i] = p
+            clen[i] = n
+            first[i] = p == s.cached_tokens
+            table[i, : len(s.blocks)] = s.blocks
+        return tokens, pos0, table, clen, first
+
+    def record_prefill(self, nxt: np.ndarray, lp: np.ndarray,
+                       clen: np.ndarray, *, warm: bool = False) -> None:
+        """Advance every prefilling slot by its chunk; a slot whose prompt
+        just completed is seeded from the logits at its last valid chunk
+        position (nxt/lp are the (B, C) per-position greedy outputs).
+        ``warm`` marks completed slots to skip their age-0 γ-refresh — the
+        harvested prefill activity IS their first window mask."""
+        for i in self.prefill_indices():
+            s = self.slots[i]
+            n = int(clen[i])
+            if n <= 0:
+                continue
+            s.prefilled += n
+            if s.prefilled >= s.request.prompt_len:
+                s.warm = bool(warm)
+                self.seed(s, int(nxt[i, n - 1]), float(lp[i, n - 1]))
 
     def record(self, next_tokens: np.ndarray, logprobs: np.ndarray,
                pred_density: Optional[np.ndarray] = None,

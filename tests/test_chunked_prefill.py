@@ -1,0 +1,327 @@
+"""Chunked prefill + prefix caching through the continuous-batching engine
+(ISSUE 4 tentpole): chunked prefill must reproduce whole-prompt prefill
+greedy tokens exactly (f32), a prefix-cache hit must decode byte-identical
+to a cold prefill of the same prompt — in all three serving modes — plus
+the admission bugfixes (submit pool validation, run() never silently
+dropping queued requests)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.serving import ContinuousBatchingEngine
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _setup(name="tiny-relu", dtype="float32"):
+    cfg = get_config(name)
+    if dtype is not None:
+        cfg = cfg.replace(compute_dtype=dtype)
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=1):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, s).astype(np.int32)
+            for s in lengths]
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("max_blocks_per_seq", 6)
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+def _serve(cfg, params, prompts, max_new, reuse_window=0, **kw):
+    eng = _engine(cfg, params, **kw)
+    uids = [eng.submit(p, max_new, reuse_window=reuse_window)
+            for p in prompts]
+    res = eng.run()
+    return [res[u].tokens for u in uids], eng
+
+
+def _serve_serial(eng, prompt, max_new):
+    """Submit one request and drain — serial traffic through a persistent
+    engine, so later requests can hit the prefix cache the earlier ones
+    populated."""
+    uid = eng.submit(prompt, max_new)
+    eng.run()
+    return eng.scheduler.results[uid].tokens
+
+
+def _spec_kw(cfg, fam, seed=9):
+    dcfg = cfg.replace(name=f"{cfg.name}-draft", n_layers=1)
+    return dict(draft_cfg=dcfg,
+                draft_params=fam.init_params(jax.random.PRNGKey(seed), dcfg),
+                gamma=3)
+
+
+def _predictor_kw(cfg, params):
+    from repro.predictor import calibrate
+    calib = {"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 24),
+                                          0, cfg.vocab_size)}
+    return dict(predictor=calibrate(params, cfg, calib, kind="sign",
+                                    probe_dtype="float32",
+                                    target_recall=1.0, tile=1))
+
+
+def _mode_kw(mode, cfg, params):
+    if mode == "spec":
+        return _spec_kw(cfg, registry.get_family(cfg))
+    if mode == "predictor":
+        return _predictor_kw(cfg, params)
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# exactness: chunked prefill == whole-prompt prefill (acceptance criterion)
+
+
+@pytest.mark.parametrize("name", ["tiny-relu", "tiny-opt"])
+@pytest.mark.parametrize("chunk", [4, 8, 64])
+def test_chunked_prefill_matches_whole_prompt(name, chunk):
+    """Chunk sizes that split mid-block, align with blocks, and swallow the
+    whole prompt in one window must all reproduce the whole-prompt greedy
+    stream exactly at f32."""
+    cfg, params = _setup(name)
+    prompts = _prompts(cfg, [9, 14, 6])
+    ref, _ = _serve(cfg, params, prompts, 10)
+    got, _ = _serve(cfg, params, prompts, 10, prefill_chunk=chunk)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("mode", ["spec", "predictor"])
+def test_chunked_prefill_matches_whole_prompt_other_modes(mode):
+    cfg, params = _setup("tiny-relu")
+    kw = _mode_kw(mode, cfg, params)
+    prompts = _prompts(cfg, [9, 14, 6], seed=2)
+    ref, _ = _serve(cfg, params, prompts, 11, **kw)
+    got, _ = _serve(cfg, params, prompts, 11, prefill_chunk=4, **kw)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_chunked_prefill_gamma_requests_exact():
+    """γ-window requests are unaffected by HOW the prompt was prefilled
+    (warm_masks off): the age-0 dense refresh anchors the same phase."""
+    cfg, params = _setup("tiny-relu")
+    prompts = _prompts(cfg, [10, 13], seed=3)
+    ref, _ = _serve(cfg, params, prompts, 9, reuse_window=3)
+    got, _ = _serve(cfg, params, prompts, 9, reuse_window=3, prefill_chunk=4)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A request admitted while another is mid-decode chunk-prefills in the
+    same engine steps that keep decoding the first — and both streams stay
+    exactly their solo streams."""
+    cfg, params = _setup("tiny-relu")
+    p1, p2 = _prompts(cfg, [9, 14], seed=4)
+    eng = _engine(cfg, params, prefill_chunk=4)
+    u1 = eng.submit(p1, max_new=12)
+    for _ in range(5):
+        eng.step()
+    out_before = len(eng.scheduler.slots[0].out)
+    u2 = eng.submit(p2, max_new=8)
+    eng.step()  # prefills u2's first chunk AND decodes u1
+    s1 = [s for s in eng.scheduler.slots if s and s.request.uid == u1][0]
+    s2 = [s for s in eng.scheduler.slots if s and s.request.uid == u2][0]
+    assert len(s1.out) == out_before + 1  # u1 kept decoding
+    assert 0 < s2.prefilled < s2.request.prompt_len  # u2 mid-prefill
+    res = eng.run()
+    ref1, _ = _serve(cfg, params, [p1], 12, prefill_chunk=4)
+    ref2, _ = _serve(cfg, params, [p2], 8, prefill_chunk=4)
+    np.testing.assert_array_equal(res[u1].tokens, ref1[0])
+    np.testing.assert_array_equal(res[u2].tokens, ref2[0])
+
+
+# ---------------------------------------------------------------------------
+# exactness: prefix-cache hit == cold prefill (acceptance criterion)
+
+
+@pytest.mark.parametrize("mode", ["plain", "spec", "predictor"])
+def test_prefix_cache_hit_byte_identical(mode):
+    cfg, params = _setup("tiny-relu")
+    kw = _mode_kw(mode, cfg, params)
+    rng = np.random.RandomState(5)
+    shared = rng.randint(0, cfg.vocab_size, 16).astype(np.int32)  # 2 blocks
+    pa = np.concatenate([shared,
+                         rng.randint(0, cfg.vocab_size, 3).astype(np.int32)])
+    pb = np.concatenate([shared,
+                         rng.randint(0, cfg.vocab_size, 5).astype(np.int32)])
+    cold = _engine(cfg, params, prefill_chunk=4, **kw)
+    hot = _engine(cfg, params, prefill_chunk=4, prefix_cache=True, **kw)
+    for p in (pa, pb, pa):  # third request re-hits pa's full shareable run
+        np.testing.assert_array_equal(_serve_serial(hot, p, 8),
+                                      _serve_serial(cold, p, 8))
+    assert hot.prefill_tokens_saved() == 16 + 16  # pb hit + pa re-hit
+    assert hot.prefix_hit_rate() > 0.0
+    assert cold.prefill_tokens_saved() == 0
+
+
+def test_prefix_blocks_shared_and_refcounted():
+    """A later request sharing the prefix maps the SAME pool blocks
+    (refcount++), and retirement drops references without freeing blocks
+    out from under the trie."""
+    cfg, params = _setup("tiny-relu")
+    rng = np.random.RandomState(6)
+    shared = rng.randint(0, cfg.vocab_size, 16).astype(np.int32)
+    pa = np.concatenate([shared,
+                         rng.randint(0, cfg.vocab_size, 3).astype(np.int32)])
+    pb = np.concatenate([shared,
+                         rng.randint(0, cfg.vocab_size, 5).astype(np.int32)])
+    eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=True)
+    ua = eng.submit(pa, max_new=10)
+    for _ in range(6):  # pa prefills (5 chunks) and starts decoding
+        eng.step()
+    ub = eng.submit(pb, max_new=10)
+    eng.step()  # pb admitted: prefix mapped from the trie
+    sched = eng.scheduler
+    sa = [s for s in sched.slots if s and s.request.uid == ua][0]
+    sb = [s for s in sched.slots if s and s.request.uid == ub][0]
+    assert sb.blocks[:2] == sa.blocks[:2]  # shared prefix blocks
+    assert sb.cached_tokens == 16
+    for b in sa.blocks[:2]:
+        # slot a + slot b + the trie each hold one reference
+        assert sched.allocator.refcount(b) == 3
+    res = eng.run()
+    assert res[ub].cached_prompt_tokens == 16
+    # both retired: only the trie still references the cached blocks
+    for b in sa.blocks[:2]:
+        assert sched.allocator.refcount(b) == 1
+    n_cached = len(sched.prefix)
+    assert sched.allocator.available == (
+        sched.allocator.n_blocks - 1 - n_cached)
+
+
+def test_prefix_cache_evicts_under_pool_pressure():
+    """Serial distinct prompts through a minimal pool: cached prefixes of
+    retired requests must be evicted to admit new work — nothing deadlocks,
+    every request completes."""
+    cfg, params = _setup("tiny-relu")
+    prompts = _prompts(cfg, [17, 18, 17, 19], seed=7)
+    # pool = one request's worst case: admission must reclaim trie blocks
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=1, block_size=8,
+                                   max_blocks_per_seq=4, n_blocks=5,
+                                   prefill_chunk=8, prefix_cache=True)
+    uids = [eng.submit(p, max_new=8) for p in prompts]
+    res = eng.run()
+    assert sorted(res) == sorted(uids)
+    assert all(len(res[u].tokens) == 8 for u in uids)
+
+
+def test_spec_target_as_draft_chunked_prefill_accepts_everything():
+    """Target-as-draft through CHUNKED prefill must still accept every
+    proposal: the draft pool's chunk prefill has to produce the same prompt
+    K/V the target pool got (a draft prefill that e.g. dropped the FFN
+    contribution would silently collapse acceptance while leaving the
+    output stream exact)."""
+    cfg, params = _setup("tiny-relu")
+    eng = _engine(cfg, params, prefill_chunk=4, draft_cfg=cfg,
+                  draft_params=params, gamma=3)
+    uids = [eng.submit(p, max_new=9) for p in _prompts(cfg, [9, 14], seed=8)]
+    res = eng.run()
+    for u in uids:
+        assert res[u].accept_rate == 1.0
+
+
+def test_warm_masks_skip_age0_refresh_and_cover_prompt_harvest():
+    """warm_masks seeds the first γ-window from the prefill chunks'
+    accumulated union activity: the age-0 dense refresh is skipped (the
+    mask binds immediately) and some weight I/O is saved on that step.
+    Output may differ from the cold-first-window stream — it is a γ-style
+    approximation either way."""
+    cfg, params = _setup("tiny-relu")
+    (p,) = _prompts(cfg, [13], seed=8)  # 4 chunks of 4: accumulation binds
+    eng = _engine(cfg, params, prefill_chunk=4, warm_masks=True)
+    uid = eng.submit(p, max_new=10, reuse_window=4)
+    while not eng.scheduler.active_indices():
+        eng._admit()  # chunk-prefill to completion, no decode in between
+    sched = eng.scheduler
+    (i,) = sched.active_indices()
+    assert sched.slots[i].warm and sched.slots[i].age == 0
+    _, _, _, refresh = sched.batch_arrays()
+    assert not refresh[i]  # the age-0 dense refresh is skipped...
+    mask0 = np.asarray(eng.masks[:, i, :])
+    assert 0 < mask0.sum() < mask0.size  # ...because a real mask is bound
+    res = eng.run()
+    assert len(res[uid].tokens) == 10
+    assert eng.weight_io_saved() > 0.0
+    # a COLD engine refreshes densely at age 0 on the same request
+    cold = _engine(cfg, params, prefill_chunk=4)
+    cold.submit(p, max_new=10, reuse_window=4)
+    while not cold.scheduler.active_indices():
+        cold._admit()
+    (j,) = cold.scheduler.active_indices()
+    assert not cold.scheduler.slots[j].warm
+    _, _, _, refresh_c = cold.scheduler.batch_arrays()
+    assert refresh_c[j]
+
+
+# ---------------------------------------------------------------------------
+# admission bugfixes (satellites)
+
+
+def test_submit_rejects_request_larger_than_pool():
+    """A request needing more blocks than the pool could EVER free must be
+    rejected at submit — previously it queued forever: admit() broke at the
+    head, run() drained everything else, and the uid silently vanished."""
+    sched = Scheduler(n_slots=2, n_blocks=4, block_size=4,
+                      max_blocks_per_seq=8)
+    ok = Request(uid=1, tokens=np.zeros(4, np.int32), max_new=4)  # 2 blocks
+    sched.submit(ok)
+    bad = Request(uid=2, tokens=np.zeros(12, np.int32), max_new=8)  # 5 > 3
+    with pytest.raises(ValueError, match="pool"):
+        sched.submit(bad)
+    assert len(sched.queue) == 1  # the valid request is unaffected
+
+
+def test_run_raises_on_unadmittable_head_instead_of_silent_drop():
+    """If an unadmittable request reaches the queue anyway (emulating a
+    policy bug), run() must raise — not return a results dict with the uid
+    quietly missing after spinning to max_steps."""
+    cfg, params = _setup("tiny-relu")
+    eng = _engine(cfg, params)
+    good = eng.submit(_prompts(cfg, [6], seed=9)[0], max_new=4)
+    # bypass submit()'s validation: 200 tokens needs 50 blocks > pool 12
+    eng.scheduler.queue.push(
+        Request(uid=999, tokens=np.zeros(200, np.int32), max_new=200))
+    with pytest.raises(RuntimeError, match="deadlock"):
+        eng.run()
+    # the admissible request ahead of it was still served, not dropped
+    assert good in eng.scheduler.results
+
+
+@pytest.mark.parametrize("engine_kw", [
+    {},
+    {"prefill_chunk": 4},
+    {"prefill_chunk": 4, "prefix_cache": True},
+])
+def test_every_submitted_uid_lands_in_results(engine_kw):
+    cfg, params = _setup("tiny-relu", dtype=None)  # default bf16 path too
+    rng = np.random.RandomState(10)
+    shared = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+    prompts = [np.concatenate([shared, p]) for p in
+               _prompts(cfg, [5, 9, 2, 7, 4, 11], seed=10)]
+    eng = _engine(cfg, params, **engine_kw)
+    uids = [eng.submit(p, max_new=5) for p in prompts]
+    res = eng.run()
+    assert sorted(res) == sorted(uids)
+    assert all(len(res[u].tokens) == 5 for u in uids)
+    assert eng.scheduler.allocator.available == (
+        eng.scheduler.allocator.n_blocks - 1
+        - (len(eng.scheduler.prefix) if eng.scheduler.prefix else 0))
+
+
+def test_engine_flag_validation():
+    cfg, params = _setup("tiny-relu")
+    with pytest.raises(ValueError, match="prefix_cache"):
+        _engine(cfg, params, prefix_cache=True)
+    with pytest.raises(ValueError, match="warm_masks"):
+        _engine(cfg, params, warm_masks=True)

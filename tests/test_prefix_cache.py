@@ -1,0 +1,209 @@
+"""Property tests (hypothesis; stub-compatible) for the refcounted block
+allocator and the prompt-prefix trie (ISSUE 4): no double-free, refcounts
+never negative, the scratch block never handed out or freed, and arbitrary
+interleaved admit/prefill/decode/retire sequences conserve the pool —
+every one of the n_blocks - 1 allocatable blocks is at all times either on
+the free list or accounted for by exactly refcount(b) holders (slots
+sharing it + the trie)."""
+from collections import Counter
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.common import SCRATCH_BLOCK
+from repro.serving.scheduler import (BlockAllocator, PrefixCache, Request,
+                                     Scheduler)
+
+
+# ---------------------------------------------------------------------------
+# allocator-level properties
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 10_000))
+def test_allocator_refcount_conservation(n_blocks, seed):
+    """Random alloc/ref/free interleavings: the allocator's refcounts track
+    an independently maintained ledger exactly, the scratch block is never
+    handed out, and free-list + live blocks always partition the pool."""
+    rng = np.random.RandomState(seed)
+    al = BlockAllocator(n_blocks)
+    ledger = {}  # block -> refcount we believe it has
+    for _ in range(200):
+        op = rng.randint(3)
+        if op == 0:
+            n = rng.randint(1, n_blocks + 1)
+            got = al.alloc(n)
+            if n > (n_blocks - 1) - len(ledger):
+                assert got is None  # over-ask fails atomically
+            else:
+                assert got is not None and len(got) == len(set(got)) == n
+                assert SCRATCH_BLOCK not in got
+                assert not set(got) & set(ledger)  # never double-handed-out
+                for b in got:
+                    ledger[b] = 1
+        elif op == 1 and ledger:
+            b = list(ledger)[rng.randint(len(ledger))]
+            al.ref([b])
+            ledger[b] += 1
+        elif op == 2 and ledger:
+            b = list(ledger)[rng.randint(len(ledger))]
+            al.free([b])
+            ledger[b] -= 1
+            if ledger[b] == 0:
+                del ledger[b]
+        assert al.available + len(ledger) == n_blocks - 1
+        assert al.allocated == len(ledger)
+        for b, n_refs in ledger.items():
+            assert al.refcount(b) == n_refs > 0
+
+
+def test_allocator_double_free_guarded():
+    al = BlockAllocator(4)
+    (b,) = al.alloc(1)
+    al.free([b])
+    with pytest.raises(AssertionError, match="double free"):
+        al.free([b])
+    assert al.available == 3  # the guard fired before corrupting the pool
+
+
+def test_allocator_scratch_never_handed_out_or_freed():
+    al = BlockAllocator(3)
+    assert SCRATCH_BLOCK not in al.alloc(2)
+    assert al.alloc(1) is None  # pool exhausted without touching scratch
+    with pytest.raises(AssertionError):
+        al.free([SCRATCH_BLOCK])
+
+
+def test_allocator_ref_of_free_block_guarded():
+    al = BlockAllocator(4)
+    with pytest.raises(AssertionError, match="unallocated"):
+        al.ref([1])
+
+
+# ---------------------------------------------------------------------------
+# scheduler + trie properties under interleaved admit/prefill/decode/retire
+
+
+def _check_invariants(sched: Scheduler, n_blocks: int):
+    """refcount(b) == (#slots holding b) + (#trie nodes holding b), for
+    every block; pool partition; scratch reserved."""
+    owners = Counter(b for s in sched.slots if s is not None
+                     for b in s.blocks)
+    trie = Counter(sched.prefix.blocks()) if sched.prefix else Counter()
+    assert SCRATCH_BLOCK not in owners and SCRATCH_BLOCK not in trie
+    live = set(owners) | set(trie)
+    assert sched.allocator.allocated == len(live)
+    assert sched.allocator.available + len(live) == n_blocks - 1
+    for b in live:
+        assert sched.allocator.refcount(b) == owners[b] + trie[b]
+    for count in trie.values():
+        assert count == 1  # a block backs at most one trie node
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 10_000))
+def test_interleaved_admit_retire_conserves_pool(n_slots, seed):
+    """Random request mixes — many sharing block-aligned prefixes — driven
+    through admit / chunked prefill / decode / retire with the invariants
+    checked at every step. Afterwards only the trie may still hold blocks,
+    and evicting it returns the pool to exactly n_blocks - 1 free."""
+    rng = np.random.RandomState(seed)
+    bs, max_bps = 4, 4
+    n_blocks = 1 + n_slots * max_bps
+    sched = Scheduler(n_slots, n_blocks, bs, max_bps, prefix_cache=True)
+
+    # shared-prefix library: full-block token runs (1 or 2 blocks)
+    lib = [rng.randint(0, 50, bs * k).astype(np.int32) for k in (1, 2, 1)]
+    n_req = rng.randint(3, 9)
+    for uid in range(1, n_req + 1):
+        parts = []
+        if rng.rand() < 0.7:
+            parts.append(lib[rng.randint(len(lib))])
+        parts.append(rng.randint(0, 50, rng.randint(1, 5)).astype(np.int32))
+        tokens = np.concatenate(parts)
+        max_new = rng.randint(1, max_bps * bs - len(tokens) + 1)
+        sched.submit(Request(uid=uid, tokens=tokens, max_new=int(max_new)))
+
+    chunk = 3
+    for step in range(1000):
+        sched.retire_finished(step)
+        if not sched.has_work():
+            break
+        sched.admit(step)
+        _check_invariants(sched, n_blocks)
+        if sched.prefill_indices():
+            _, _, _, clen, _ = sched.prefill_batch(chunk)
+            sched.record_prefill(
+                np.zeros((n_slots, chunk), np.int64),
+                np.zeros((n_slots, chunk), np.float32), clen)
+            _check_invariants(sched, n_blocks)  # seeding inserts trie nodes
+        if sched.active_indices():
+            sched.record(np.zeros(n_slots, np.int64),
+                         np.zeros(n_slots, np.float32))
+    else:
+        raise AssertionError("scheduler failed to drain")
+
+    sched.retire_finished(step)
+    assert len(sched.results) == n_req
+    for res in sched.results.values():
+        assert res.cached_prompt_tokens % bs == 0
+        assert res.cached_prompt_tokens < res.prompt_len
+    _check_invariants(sched, n_blocks)
+    # only the trie still holds blocks; evicting everything frees the pool
+    n_cached = len(sched.prefix)
+    assert sched.allocator.available == n_blocks - 1 - n_cached
+    assert sched.prefix.evict(sched.allocator, n_cached) == n_cached
+    assert sched.allocator.available == n_blocks - 1
+    assert len(sched.prefix) == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 10_000))
+def test_trie_lookup_is_longest_block_aligned_proper_prefix(bs, seed):
+    """Trie semantics directly: a hit returns blocks for the longest cached
+    full-block prefix, capped one token short of the querying prompt, and
+    holds exactly one reference per cached node."""
+    rng = np.random.RandomState(seed)
+    al = BlockAllocator(16)
+    trie = PrefixCache()
+    prompt = rng.randint(0, 9, 3 * bs + 1).astype(np.int32)  # 3 full blocks
+    blocks = al.alloc(3)
+    trie.insert(prompt, blocks, bs, al)
+    assert len(trie) == 3 and all(al.refcount(b) == 2 for b in blocks)
+
+    # identical prompt: full 3-block hit
+    assert trie.lookup(prompt, bs) == blocks
+    # same tokens but EXACTLY 3 blocks long: the last block must stay cold
+    assert trie.lookup(prompt[: 3 * bs], bs) == blocks[:2]
+    # diverging inside block 2: only block 0 matches
+    q = prompt.copy()
+    q[bs] = (q[bs] + 1) % 9
+    assert trie.lookup(q, bs) == blocks[:1]
+    # shorter than one block: nothing can match
+    assert trie.lookup(prompt[: bs - 1], bs) == []
+
+    # the original owner releases its references; eviction returns all 3
+    al.free(blocks)
+    assert trie.evict(al, 99) == 3
+    assert al.available == 15 and len(trie) == 0
+
+
+def test_trie_eviction_spares_shared_blocks():
+    """evict() must never reclaim a cached block a live request shares
+    (refcount > 1), however stale its LRU stamp."""
+    al = BlockAllocator(8)
+    trie = PrefixCache()
+    bs = 2
+    old = np.asarray([1, 2, 9], np.int32)  # 1 full block, stale
+    hot = np.asarray([3, 4, 9], np.int32)  # 1 full block, shared by a slot
+    b_old = al.alloc(1)
+    trie.insert(old, b_old, bs, al)
+    b_hot = al.alloc(1)
+    trie.insert(hot, b_hot, bs, al)
+    al.ref(b_hot)  # a live request maps the hot prefix
+    al.free(b_old)  # its owner retired: only the trie holds it
+    al.free(b_hot)  # hot owner retired too, but the sharer remains
+    assert trie.evict(al, 2) == 1  # only the stale, unshared block moved
+    assert al.refcount(b_hot[0]) == 2 and al.refcount(b_old[0]) == 0
