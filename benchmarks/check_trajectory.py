@@ -1,0 +1,113 @@
+"""Bench-regression gate for CI: compare the fresh ``--smoke`` trajectory
+JSON (benchmarks/run.py writes repo-root BENCH_<pr>.json) against the last
+committed baseline and FAIL the job when serving throughput drops more than
+the tolerance or a sparsity-machinery metric silently collapses to zero.
+
+    python benchmarks/check_trajectory.py                 # auto-pick files
+    python benchmarks/check_trajectory.py \
+        --fresh BENCH_PR5.json --baseline BENCH_PR4.json --tolerance 0.2
+
+Auto-pick: the fresh file is BENCH_<BENCH_PR env, default pr tag>.json (the
+one the smoke run just wrote); the baseline is the highest-numbered other
+BENCH_*.json in the repo root — the committed PR-over-PR trajectory.
+
+Two failure classes (exit code 1, one line per violation):
+
+* throughput: ``serving_tokens_per_s`` (and the prefix-cache case) dropping
+  > tolerance (default 20%) vs baseline — CI runners are noisy, a real
+  engine regression is not.
+* zero-collapse: any ``weight_io_saved*`` / ``prefix_hit_rate`` /
+  ``prefill_tokens_saved`` headline that was positive in the baseline
+  reading 0 (or missing) now — the sparsity machinery silently rotted even
+  if throughput looks fine.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+THROUGHPUT_KEYS = ("serving_tokens_per_s", "prefix_cache_tokens_per_s")
+ZERO_COLLAPSE_KEYS = ("weight_io_saved_gamma4", "spec_s_agg_gamma4",
+                      "weight_io_saved_predictor", "prefix_hit_rate",
+                      "prefill_tokens_saved")
+
+
+def _pr_num(path: str) -> int:
+    m = re.search(r"BENCH_PR(\d+)\.json$", os.path.basename(path))
+    return int(m.group(1)) if m else -1
+
+
+def autodetect(fresh: str | None, baseline: str | None):
+    if fresh is None:
+        tag = os.environ.get("BENCH_PR")
+        if tag is None:
+            sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+            from run import PR_TAG  # the tag run.py just wrote with
+            tag = PR_TAG
+        fresh = f"BENCH_{tag.upper()}.json"
+    if baseline is None:
+        others = [p for p in glob.glob("BENCH_*.json")
+                  if os.path.basename(p) != os.path.basename(fresh)]
+        if not others:
+            raise SystemExit(f"no baseline BENCH_*.json besides {fresh} — "
+                             "commit one before gating on it")
+        baseline = max(others, key=_pr_num)
+    return fresh, baseline
+
+
+def check(fresh: dict, baseline: dict, tolerance: float):
+    """Returns a list of violation strings (empty = gate passes)."""
+    fh = fresh.get("headline") or {}
+    bh = baseline.get("headline") or {}
+    bad = []
+    for key in THROUGHPUT_KEYS:
+        b, f = bh.get(key), fh.get(key)
+        if not b:  # baseline never measured it — nothing to regress from
+            continue
+        if not f:
+            bad.append(f"{key}: missing/0 in fresh run (baseline {b:.1f})")
+        elif f < b * (1.0 - tolerance):
+            bad.append(f"{key}: {f:.1f} tok/s is {1 - f / b:.0%} below "
+                       f"baseline {b:.1f} (tolerance {tolerance:.0%})")
+    for key in ZERO_COLLAPSE_KEYS:
+        b, f = bh.get(key), fh.get(key)
+        if b and not f:
+            bad.append(f"{key}: was {b} in baseline, now "
+                       f"{'missing' if f is None else f} — sparsity "
+                       "machinery silently collapsed")
+    return bad
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default=None,
+                    help="fresh trajectory JSON (default: BENCH_<tag>.json "
+                         "for the current BENCH_PR tag)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline (default: highest-numbered "
+                         "other BENCH_*.json)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional throughput drop (default 0.2)")
+    args = ap.parse_args()
+    fresh_path, base_path = autodetect(args.fresh, args.baseline)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(base_path) as f:
+        baseline = json.load(f)
+    bad = check(fresh, baseline, args.tolerance)
+    print(f"bench gate: {fresh_path} (pr={fresh.get('pr')}) vs "
+          f"{base_path} (pr={baseline.get('pr')}), "
+          f"tolerance {args.tolerance:.0%}")
+    for line in bad:
+        print(f"  REGRESSION {line}")
+    if bad:
+        sys.exit(1)
+    print("  ok — no throughput regression, no zero-collapsed metric")
+
+
+if __name__ == "__main__":
+    main()

@@ -53,7 +53,7 @@ def run_module(mod_name: str) -> None:
         print(r, flush=True)
 
 
-PR_TAG = os.environ.get("BENCH_PR", "pr4")
+PR_TAG = os.environ.get("BENCH_PR", "pr5")
 
 
 def write_trajectory(tag: str = PR_TAG) -> str:

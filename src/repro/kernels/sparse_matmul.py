@@ -27,6 +27,15 @@ Three variants:
 
 ``interpret=None`` (the default) autodetects: interpret mode on CPU (this
 container), compiled on TPU. Pass an explicit bool to override.
+
+Tensor-parallel serving (engine ``mesh=``): the weight's F axis is sharded
+over the "model" mesh axis, and the caller packs the tile lists
+MODEL-AXIS-LOCALLY (predictors.pack_tile_indices ``n_groups=TP`` — each
+shard's indices name only tiles in its own F slice, capacity balanced per
+shard), so every gather a shard issues is against weight tiles it already
+owns: no cross-shard weight traffic, and per-device HBM reads shrink by
+sparsity x 1/TP. The kernels themselves are unchanged — index locality is
+a property of the lists they are handed.
 """
 from __future__ import annotations
 

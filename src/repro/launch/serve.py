@@ -10,6 +10,8 @@ the paper's sparse-inference config (relufied weights, tile capacities).
       --predictor sign --target-recall 0.99                # predictor mode
   python -m repro.launch.serve --arch qwen3-4b --smoke \
       --prefill-chunk 16 --prefix-cache   # chunked prefill + prefix reuse
+  python -m repro.launch.serve --arch qwen3-4b --smoke --continuous \
+      --mesh 1,8    # tensor-parallel sharded serving on a (data,model) mesh
 """
 from __future__ import annotations
 
@@ -52,12 +54,28 @@ def main() -> None:
                          "block-aligned prompt prefix (the smoke workload "
                          "then shares a system prompt; implies "
                          "--prefill-chunk 16 unless set)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve the continuous-batching engine on a "
+                         "(data, model) device mesh: weights TP-sharded "
+                         "over 'model' via the serve-mode rules, paged KV "
+                         "pool blocks over 'data' (implies --continuous; "
+                         "RAISES if the shape needs more devices than "
+                         "exist — no silent single-device fallback)")
     ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args()
     if args.prefix_cache and args.prefill_chunk == 0:
         args.prefill_chunk = 16
-    if args.speculative or args.predictor != "none" or args.prefill_chunk:
+    if (args.speculative or args.predictor != "none" or args.prefill_chunk
+            or args.mesh):
         args.continuous = True
+    mesh_shape = None
+    if args.mesh:
+        try:
+            mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+            assert len(mesh_shape) == 2 and min(mesh_shape) >= 1
+        except (ValueError, AssertionError):
+            ap.error(f"--mesh expects DATA,MODEL (two positive ints), "
+                     f"got {args.mesh!r}")
     if args.speculative and args.predictor != "none":
         ap.error("--speculative and --predictor are mutually exclusive "
                  "serving modes")
@@ -121,6 +139,11 @@ def main() -> None:
             # smoke models (128-wide tiles are never all-zero at this size)
             spec_kw.update(predictor=calibrate_from_config(
                 params, cfg, calib, tile=1))
+        if mesh_shape is not None:
+            from repro.launch.mesh import make_host_mesh
+            # strict: an unsatisfiable --mesh shape is an operator error —
+            # raise instead of quietly serving single-device
+            spec_kw["mesh"] = make_host_mesh(*mesh_shape, strict=True)
         eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=16,
                                        max_blocks_per_seq=max_bps,
                                        track_sparsity=True, **spec_kw)
@@ -133,6 +156,12 @@ def main() -> None:
               f"per-request aggregated FFN sparsity "
               f"{', '.join(f'{a:.3f}' for a in aggs)}; "
               f"weight I/O saved {eng.weight_io_saved():.1%}")
+        if mesh_shape is not None:
+            print(f"sharded serving on mesh {dict(eng.mesh.shape)}: "
+                  f"TP={eng.tp}; per-device FFN weight read "
+                  f"{eng.weight_io_bytes_per_step():.0f} B/step "
+                  f"(= {eng.weight_io_bytes_per_step(per_device=False):.0f} "
+                  f"B total x 1/{eng.ffn_tp})")
         if args.prefix_cache:
             print(f"prefix cache: hit rate {eng.prefix_hit_rate():.1%}; "
                   f"prefill tokens saved {eng.prefill_tokens_saved()} "

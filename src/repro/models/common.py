@@ -311,12 +311,20 @@ SCRATCH_BLOCK = 0
 
 
 def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
-                     dtype=None) -> PyTree:
-    """Block pool, head-major within a block (decode reads it untransposed)."""
+                     dtype=None, sharding=None) -> PyTree:
+    """Block pool, head-major within a block (decode reads it untransposed).
+
+    ``sharding`` (an optional jax Sharding, e.g. NamedSharding over the
+    serving mesh from rules.paged_cache_pspec) allocates the pool directly
+    into its distributed layout — a production pool is sized to fill HBM
+    across the mesh and must never materialize on one device first. Still
+    mesh-agnostic: the layout decision lives with the caller."""
     g = HeadGeometry(cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
     shape = (cfg.n_layers, n_blocks, g.kvp, block_size, g.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    kw = {} if sharding is None else {"device": sharding}
+    return {"k": jnp.zeros(shape, dtype, **kw),
+            "v": jnp.zeros(shape, dtype, **kw)}
 
 
 def paged_gather(pages_l: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:

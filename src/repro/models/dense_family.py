@@ -32,8 +32,9 @@ def model_decode(params, cache, token, pos, cfg: ModelConfig, stats=None,
 
 # -- continuous-batching (paged-cache) serving interface --------------------
 
-def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int):
-    return cm.init_paged_cache(cfg, n_blocks, block_size)
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     sharding=None):
+    return cm.init_paged_cache(cfg, n_blocks, block_size, sharding=sharding)
 
 
 def model_prefill_paged(params, batch, cfg: ModelConfig, pages, blocks,
@@ -60,13 +61,13 @@ def model_decode_paged_predicted(params, pages, table, token, pos,
                                  cfg: ModelConfig, ffn_masks, refresh,
                                  pred_params, kind: str, tile: int,
                                  k_tiles: int, block_size: int,
-                                 measure: bool = True):
+                                 measure: bool = True, shards: int = 1):
     return T.decode_step_paged_predicted(params, pages, table, token, pos,
                                          cfg, ffn_masks, refresh, pred_params,
                                          kind=kind, tile=tile,
                                          k_tiles=k_tiles,
                                          block_size=block_size,
-                                         measure=measure)
+                                         measure=measure, shards=shards)
 
 
 def model_verify_window_paged(params, pages, table, tokens, pos0, wlen,

@@ -531,6 +531,9 @@ def apply_ffn_window(p, x, cfg: ModelConfig, *, mask, refresh, valid):
     else:
         h = act_fn(cm.maybe_sparse_matmul(x2, p["wu"], cfg, dens_in))
     h = h.reshape(b, W, h.shape[-1])
+    # TP serving: window activations / union masks live on shard-local d_ff
+    # slices (no-op single-device — constrain is identity without a mesh)
+    h = rules.constrain(h, "dp", None, "model")
     eff = mask | refresh[:, None]  # refresh ⇒ all rows participate
     h = h * eff[:, None, :].astype(h.dtype)
     hv = h * valid[:, :, None].astype(h.dtype)
@@ -585,7 +588,8 @@ def verify_window_paged(params, pages, table, tokens, pos0, wlen,
     b, W = tokens.shape
     pos = pos0[:, None] + jnp.arange(W, dtype=pos0.dtype)[None, :]
     valid = jnp.arange(W)[None, :] < wlen[:, None]
-    x = embed_tokens(params, tokens, cfg, pos)
+    x = rules.constrain(embed_tokens(params, tokens, cfg, pos),
+                        "dp", None, None)
 
     def body(carry, xs):
         x, kp, vp = carry
@@ -598,7 +602,9 @@ def verify_window_paged(params, pages, table, tokens, pos0, wlen,
     xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks)
     (x, kp, vp), (act, scores, density, udens) = jax.lax.scan(
         body, (x, pages["k"], pages["v"]), xs)
-    new_masks = jnp.where(refresh[None, :, None], act, ffn_masks)
+    new_masks = rules.constrain(
+        jnp.where(refresh[None, :, None], act, ffn_masks),
+        None, "dp", "model")
 
     x = cm.apply_norm(params["final_norm"], x, cfg)
     logits = logits_from(params, x, cfg)
@@ -640,7 +646,7 @@ def prefill_chunk_paged(params, pages, table, tokens, pos0, clen,
 
 def _ffn_decode_predicted(pf, h, cfg: ModelConfig, pred_l, *, kind: str,
                           tile: int, k_tiles: int, mask, refresh,
-                          measure: bool = True):
+                          measure: bool = True, shards: int = 1):
     """Predictor-gathered decode FFN (predictor serving mode): the
     activity predictor (repro.predictor) names each token's active tiles
     BEFORE any FFN weight is read, and both the up- and down-projections
@@ -661,6 +667,14 @@ def _ffn_decode_predicted(pf, h, cfg: ModelConfig, pred_l, *, kind: str,
     probe (n_active/n_miss come back 0), making the gathered reads the
     ONLY FFN weight traffic — the production-serving configuration.
 
+    ``shards`` (the engine passes its mesh's TP degree; 1 = today's
+    single-device lowering, bit-frozen) makes the packed tile lists
+    model-axis-local: each TP shard packs its own capacity from its local
+    d_ff slice (predictors.pack_tile_indices n_groups), the probe /
+    union-mask composition runs on "model"-sharded (B, F) tensors, and
+    the per-token density/recall telemetry is reduced across shards once
+    per step by the returned sums — no host round-trips.
+
     Returns (f (B, d), act (B, F), scores (B, F // _ffn_tile),
              density (B,) fraction of weight tiles READ (up AND down),
              n_active (B,), n_miss (B,))."""
@@ -671,9 +685,11 @@ def _ffn_decode_predicted(pf, h, cfg: ModelConfig, pred_l, *, kind: str,
     act_fn = acts.get(cfg.activation, shift=cfg.sparsity.shift)
     n_tiles = cfg.d_ff // tile
     unit_pred = preds.predict_units(kind, pred_l, h)  # (B, F)
+    unit_pred = rules.constrain(unit_pred, "dp", "model")
     eff_units = unit_pred | (mask & ~refresh[:, None])
     tile_mask = preds.units_to_tiles(eff_units, tile)
-    idx, nvalid = preds.pack_tile_indices(tile_mask, k_tiles)
+    idx, nvalid = preds.pack_tile_indices(tile_mask, k_tiles,
+                                          n_groups=shards)
     cov_units = preds.tiles_to_units(
         preds.covered_tiles(idx, nvalid, n_tiles), tile)  # (B, F)
 
@@ -705,7 +721,7 @@ def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
                              pos, *, layer, block_size: int, mask, refresh,
                              pred=None, pred_kind: Optional[str] = None,
                              pred_tile: int = 128, k_tiles: int = 0,
-                             pred_measure: bool = True):
+                             pred_measure: bool = True, pred_shards: int = 1):
     """Single-token specialization of ``apply_block_window_paged``.
 
     Mathematically the W = 1 case, but kept as its own lowering: the decode
@@ -744,7 +760,7 @@ def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
         f, act, scores, density, n_active, n_miss = _ffn_decode_predicted(
             p["ffn"], h, cfg, pred, kind=pred_kind, tile=pred_tile,
             k_tiles=k_tiles, mask=mask, refresh=refresh,
-            measure=pred_measure)
+            measure=pred_measure, shards=pred_shards)
         x = x + f
         return x, k_pages, v_pages, act, scores, density, n_active, n_miss
     act_fn = acts.get(cfg.activation, shift=cfg.sparsity.shift)
@@ -756,6 +772,10 @@ def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
         hh = act_fn(pre) * cm.maybe_sparse_matmul(h, pf["wu"], cfg, dens_in)
     else:
         hh = act_fn(cm.maybe_sparse_matmul(h, pf["wu"], cfg, dens_in))
+    # TP serving (rules.use_mesh installed): keep the hidden activation and
+    # the γ-mask composition sharded on each shard's d_ff slice; no-op (and
+    # bit-frozen lowering) single-device
+    hh = rules.constrain(hh, "dp", "model")
     eff = mask | refresh[:, None]  # refresh ⇒ all rows participate
     hh = hh * eff.astype(hh.dtype)
     act = hh != 0
@@ -781,6 +801,7 @@ def decode_step_paged(params, pages, table, token, pos, cfg: ModelConfig,
     (L, b, F//tile), density (L, b))."""
     params = cm.cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg, pos[:, None])[:, 0]
+    x = rules.constrain(x, "dp", None)
 
     def body(carry, xs):
         x, kp, vp = carry
@@ -793,7 +814,9 @@ def decode_step_paged(params, pages, table, token, pos, cfg: ModelConfig,
     xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks)
     (x, kp, vp), (act, scores, density) = jax.lax.scan(
         body, (x, pages["k"], pages["v"]), xs)
-    new_masks = jnp.where(refresh[None, :, None], act, ffn_masks)
+    new_masks = rules.constrain(
+        jnp.where(refresh[None, :, None], act, ffn_masks),
+        None, "dp", "model")
 
     x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
     logits = logits_from(params, x, cfg)
@@ -803,7 +826,8 @@ def decode_step_paged(params, pages, table, token, pos, cfg: ModelConfig,
 def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConfig,
                                 ffn_masks, refresh, pred_params, *,
                                 kind: str, tile: int, k_tiles: int,
-                                block_size: int, measure: bool = True):
+                                block_size: int, measure: bool = True,
+                                shards: int = 1):
     """Predictor-mode continuous-batching decode step: like
     ``decode_step_paged`` but every layer's FFN runs tile-gathered over the
     activity predictor's per-token mask (up- AND down-projection reads are
@@ -816,9 +840,14 @@ def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConf
     Returns (logits (b, vocab_p), pages, new_masks (L, b, F), aux) with
     aux = (act (L, b, F), scores (L, b, F//tile'), density (L, b) fraction
     of FFN weight tiles read, n_active (L, b), n_miss (L, b) in-graph
-    recall telemetry; zeros when measure=False)."""
+    recall telemetry; zeros when measure=False).
+
+    ``shards`` (static; the engine's mesh TP degree) switches the per-token
+    packed tile lists to model-axis-local packing — see
+    ``_ffn_decode_predicted``. 1 keeps the frozen single-device lowering."""
     params = cm.cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg, pos[:, None])[:, 0]
+    x = rules.constrain(x, "dp", None)
 
     def body(carry, xs):
         x, kp, vp = carry
@@ -828,13 +857,15 @@ def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConf
                 pl_i, x, cfg, kp, vp, table, pos, layer=li,
                 block_size=block_size, mask=fm, refresh=refresh,
                 pred=pred_l, pred_kind=kind, pred_tile=tile, k_tiles=k_tiles,
-                pred_measure=measure)
+                pred_measure=measure, pred_shards=shards)
         return (x, kp, vp), (act, scores, density, n_act, n_miss)
 
     xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks, pred_params)
     (x, kp, vp), (act, scores, density, n_act, n_miss) = jax.lax.scan(
         body, (x, pages["k"], pages["v"]), xs)
-    new_masks = jnp.where(refresh[None, :, None], act, ffn_masks)
+    new_masks = rules.constrain(
+        jnp.where(refresh[None, :, None], act, ffn_masks),
+        None, "dp", "model")
 
     x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
     logits = logits_from(params, x, cfg)

@@ -140,24 +140,55 @@ def tiles_to_units(tiles: jnp.ndarray, tile: int = TILE) -> jnp.ndarray:
     return jnp.repeat(tiles, tile, axis=-1)
 
 
-def pack_tile_indices(tile_mask: jnp.ndarray, k: int):
-    """Fixed-capacity packing: (T, nT) bool -> (idx (T, k) int32,
-    nvalid (T,) int32).
+def pack_tile_indices(tile_mask: jnp.ndarray, k: int, n_groups: int = 1):
+    """Fixed-capacity packing: (T, nT) bool -> (idx (T, k') int32,
+    nvalid (T,) int32) with k' = k (n_groups rounds it up to a multiple).
 
     Active tiles come first (ascending tile id); padding repeats each row's
     first entry so every index stays in [0, nT) and padded DMAs revisit an
     already-fetched block. If a row has more than k active tiles the excess
     is dropped — a *recorded* recall event, never an out-of-range index.
+
+    ``n_groups > 1`` makes the packing MODEL-AXIS-LOCAL for a TP-sharded
+    FFN: the tile axis is cut into n_groups contiguous shard slices and
+    each group selects (and truncates) its own ceil(k / n_groups) capacity
+    from its local slice — so every shard's gather touches only tiles it
+    owns, and truncation is load-balanced across shards instead of biased
+    toward low tile ids. Because groups are contiguous ascending ranges,
+    the valid-first flattened index list is still globally ascending: at
+    full capacity (k == nT) the packed set — and the f32 accumulation
+    order of the gathered matmuls — is identical to n_groups == 1, which
+    is what keeps sharded-engine streams byte-identical to single-device.
     """
     T, nT = tile_mask.shape
     k = min(k, nT)
-    # top_k on {0,1} scores is stable: equal scores keep ascending index
-    # order, so actives (1.0) land first, each group id-ordered.
-    _, idx = jax.lax.top_k(tile_mask.astype(jnp.float32), k)
-    nvalid = jnp.minimum(jnp.sum(tile_mask.astype(jnp.int32), axis=-1),
-                         k).astype(jnp.int32)
-    pad = idx[:, :1]  # row's first selected tile (always in range)
-    idx = jnp.where(jnp.arange(k)[None, :] < nvalid[:, None], idx, pad)
+    if n_groups <= 1:
+        # top_k on {0,1} scores is stable: equal scores keep ascending index
+        # order, so actives (1.0) land first, each group id-ordered.
+        _, idx = jax.lax.top_k(tile_mask.astype(jnp.float32), k)
+        nvalid = jnp.minimum(jnp.sum(tile_mask.astype(jnp.int32), axis=-1),
+                             k).astype(jnp.int32)
+        pad = idx[:, :1]  # row's first selected tile (always in range)
+        idx = jnp.where(jnp.arange(k)[None, :] < nvalid[:, None], idx, pad)
+        return idx.astype(jnp.int32), nvalid
+    if nT % n_groups:
+        raise ValueError(f"n_tiles={nT} not divisible by "
+                         f"n_groups={n_groups} shards")
+    gsz = nT // n_groups
+    k_g = min(gsz, -(-k // n_groups))
+    mg = tile_mask.reshape(T, n_groups, gsz).astype(jnp.float32)
+    _, idx_l = jax.lax.top_k(mg, k_g)  # (T, G, k_g) group-local, stable
+    idx = idx_l + (jnp.arange(n_groups) * gsz)[None, :, None]  # global ids
+    ng = jnp.minimum(jnp.sum(mg.astype(jnp.int32), axis=-1), k_g)  # (T, G)
+    valid = jnp.arange(k_g)[None, None, :] < ng[:, :, None]
+    # compact valid-first across groups (kernels expect actives, then pads);
+    # stable top_k keeps group-major = globally ascending order
+    kt = n_groups * k_g
+    _, order = jax.lax.top_k(valid.reshape(T, kt).astype(jnp.float32), kt)
+    idx = jnp.take_along_axis(idx.reshape(T, kt), order, axis=-1)
+    nvalid = jnp.sum(ng, axis=-1).astype(jnp.int32)
+    pad = idx[:, :1]
+    idx = jnp.where(jnp.arange(kt)[None, :] < nvalid[:, None], idx, pad)
     return idx.astype(jnp.int32), nvalid
 
 

@@ -28,12 +28,14 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig
 from repro.core.sparsity import AggregatedTracker
 from repro.models import common as cm
 from repro.models import registry
 from repro.serving.scheduler import Request, RequestResult, Scheduler
+from repro.sharding import rules
 
 
 @dataclasses.dataclass
@@ -47,6 +49,14 @@ class GenerationResult:
 
 # ---------------------------------------------------------------------------
 # continuous batching
+
+
+def _place_serve_params(params, mesh):
+    """Distribute a param pytree per the serve-mode logical-axis rules
+    (weights TP-resident over "model"; sharding/rules.py)."""
+    shapes = jax.eval_shape(lambda: params)
+    return jax.device_put(params,
+                          rules.params_shardings(shapes, mesh, "serve"))
 
 
 class ContinuousBatchingEngine:
@@ -116,6 +126,22 @@ class ContinuousBatchingEngine:
         mask and one less full weight read (approximation, exactly like any
         other γ-window; off by default so γ phase semantics match the
         whole-prompt path bit for bit).
+    mesh: a ("data", "model") jax Mesh makes the engine MESH-NATIVE
+        (tensor-parallel sharded serving): params (target, draft, and
+        predictor probes) are placed via the serve-mode logical-axis rules
+        (sharding/rules.py — FFN wu/wg/wd, attention heads and the vocab
+        all split over "model"), the paged KV pool is allocated sharded
+        (blocks over "data", kv heads over "model"), the per-slot γ-mask /
+        activity buffers split d_ff over "model", and every jitted paged
+        step traces under the mesh so its NamedSharding constraints keep
+        the sparse FFN machinery shard-local (predictor tile lists pack
+        per model shard; telemetry is all-reduced once per step). The
+        memory-bound decode reads shrink multiplicatively: sparsity x
+        1/TP per device — see ``weight_io_bytes_per_step``. None (the
+        default) is today's single-device engine, whose jitted lowerings
+        are bit-frozen (bf16 exactness pins); at f32 the sharded engine's
+        greedy streams are byte-identical to it in all three serving
+        modes (tests/test_sharded_serving.py).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
@@ -126,7 +152,7 @@ class ContinuousBatchingEngine:
                  draft_params=None, gamma: int = 4,
                  predictor=None, predictor_telemetry: bool = True,
                  prefill_chunk: int = 0, prefix_cache: bool = False,
-                 warm_masks: bool = False):
+                 warm_masks: bool = False, mesh=None):
         fam = registry.get_family(cfg)
         if not hasattr(fam, "model_decode_paged"):
             raise ValueError(
@@ -152,6 +178,19 @@ class ContinuousBatchingEngine:
         if prefill_chunk and not hasattr(fam, "model_prefill_chunk_paged"):
             raise ValueError(f"family {cfg.family!r} has no chunked-prefill "
                              "serving support")
+        self.mesh = mesh
+        self.tp = rules.tp_size(mesh)
+        # effective TP of the FFN weights: the divisibility guard REPLICATES
+        # wu/wg/wd over "model" when d_ff does not divide, and then every
+        # device reads the full weight — per-device I/O accounting must not
+        # claim a 1/TP split that physically did not happen
+        self.ffn_tp = self.tp if cfg.d_ff % max(1, self.tp) == 0 else 1
+        if mesh is not None:
+            missing = {"data", "model"} - set(mesh.axis_names)
+            if missing:
+                raise ValueError("serving mesh needs ('data', 'model') "
+                                 f"axes; missing {sorted(missing)}")
+            params = _place_serve_params(params, mesh)
         self.cfg = cfg
         self.params = params
         self.fam = fam
@@ -162,8 +201,11 @@ class ContinuousBatchingEngine:
         self.scheduler = Scheduler(n_slots, n_blocks, block_size,
                                    max_blocks_per_seq,
                                    prefix_cache=prefix_cache)
-        self.pages = fam.init_paged_cache(cfg, n_blocks, block_size)
-        self.masks = jnp.zeros((cfg.n_layers, n_slots, cfg.d_ff), bool)
+        self.pages = fam.init_paged_cache(
+            cfg, n_blocks, block_size,
+            sharding=self._pool_sharding(cfg, n_blocks))
+        self.masks = jnp.zeros((cfg.n_layers, n_slots, cfg.d_ff), bool,
+                               **self._masks_alloc_kw(n_slots))
         self.trackers: Dict[int, AggregatedTracker] = {}
         self.t = 0  # engine step counter
         self._uid = 0
@@ -209,10 +251,10 @@ class ContinuousBatchingEngine:
 
         # donate the page pool + masks: decode/prefill update them in place
         # instead of copying the whole pool every token
-        self._decode = jax.jit(decode, donate_argnums=(1, 5))
+        self._decode = self._jit(decode, donate_argnums=(1, 5))
         # prompts are padded to block multiples, so prefill compiles at most
         # max_blocks_per_seq distinct shapes (admission-path latency bound)
-        self._prefill = jax.jit(prefill, donate_argnums=(2,))
+        self._prefill = self._jit(prefill, donate_argnums=(2,))
 
         if prefill_chunk:
             def prefill_chunk_step(params, pages, table, tokens, pos0, clen,
@@ -231,8 +273,8 @@ class ContinuousBatchingEngine:
                 nxt, lp = greedy(logits)  # both (b, C); host reads clen-1
                 return nxt, lp, pages, new_masks
 
-            self._prefill_chunk = jax.jit(prefill_chunk_step,
-                                          donate_argnums=(1, 6))
+            self._prefill_chunk = self._jit(prefill_chunk_step,
+                                            donate_argnums=(1, 6))
 
         # -- predictor mode --------------------------------------------------
         self.predictor = predictor
@@ -248,8 +290,30 @@ class ContinuousBatchingEngine:
                 raise ValueError(
                     f"predictor geometry {predictor.n_tiles}x"
                     f"{predictor.tile} does not cover d_ff={cfg.d_ff}")
+            if mesh is not None:
+                # place the probe weights alongside the FFN weights they
+                # shadow (d_ff over "model"); never mutate the caller's
+                # Predictor — it may drive other (single-device) engines
+                predictor = dataclasses.replace(
+                    predictor, params=jax.device_put(
+                        predictor.params,
+                        rules.predictor_shardings(predictor.params, mesh)))
+                self.predictor = predictor
             kind, tile_w = predictor.kind, predictor.tile
             k_tiles = predictor.k_tiles
+            # model-axis-local tile packing: each TP shard packs its own
+            # capacity from its local d_ff slice (exact at full capacity)
+            pred_shards = (self.tp
+                           if (cfg.d_ff // tile_w) % self.tp == 0 else 1)
+            if self.tp > 1 and pred_shards == 1:
+                import warnings
+                warnings.warn(
+                    f"predictor tile count {cfg.d_ff // tile_w} is not "
+                    f"divisible by the {self.tp}-way model axis: packed "
+                    "tile lists fall back to GLOBAL packing, so predictor "
+                    "gathers will cross shards (correct, but the "
+                    "shard-local weight-I/O property is lost)",
+                    stacklevel=2)
 
             def decode_pred(params, pages, table, token, pos, masks, refresh,
                             pred_params):
@@ -258,7 +322,7 @@ class ContinuousBatchingEngine:
                     fam.model_decode_paged_predicted(
                         params, pages, table, token, pos, cfg, masks,
                         refresh, pred_params, kind, tile_w, k_tiles,
-                        block_size, predictor_telemetry)
+                        block_size, predictor_telemetry, pred_shards)
                 nxt, lp = greedy(logits)
                 tiles = jnp.mean((scores > 0).astype(jnp.float32),
                                  axis=(0, 2))
@@ -266,7 +330,7 @@ class ContinuousBatchingEngine:
                         jnp.mean(density, 0), act,
                         jnp.sum(n_act, 0), jnp.sum(n_miss, 0))
 
-            self._decode_pred = jax.jit(decode_pred, donate_argnums=(1, 5))
+            self._decode_pred = self._jit(decode_pred, donate_argnums=(1, 5))
 
         # -- speculative mode ------------------------------------------------
         self.spec = draft_cfg is not None
@@ -280,13 +344,16 @@ class ContinuousBatchingEngine:
             if not hasattr(dfam, "model_draft_gamma_paged"):
                 raise ValueError(f"family {draft_cfg.family!r} cannot draft "
                                  "over a paged cache")
+            if mesh is not None:
+                draft_params = _place_serve_params(draft_params, mesh)
             self.draft_cfg = draft_cfg
             self.draft_params = draft_params
             self.dfam = dfam
             # the draft shares the slots' block TABLES but has its own pool
             # (its layer count / head geometry differ from the target's)
-            self.draft_pages = dfam.init_paged_cache(draft_cfg, n_blocks,
-                                                     block_size)
+            self.draft_pages = dfam.init_paged_cache(
+                draft_cfg, n_blocks, block_size,
+                sharding=self._pool_sharding(draft_cfg, n_blocks))
 
             def draft(dparams, dpages, table, token, pos0, wlen):
                 return dfam.model_draft_gamma_paged(
@@ -311,9 +378,9 @@ class ContinuousBatchingEngine:
                     block_size, true_len=true_len)
                 return dpages
 
-            self._draft = jax.jit(draft, donate_argnums=(1,))
-            self._verify = jax.jit(verify, donate_argnums=(1, 6))
-            self._prefill_draft = jax.jit(prefill_draft, donate_argnums=(2,))
+            self._draft = self._jit(draft, donate_argnums=(1,))
+            self._verify = self._jit(verify, donate_argnums=(1, 6))
+            self._prefill_draft = self._jit(prefill_draft, donate_argnums=(2,))
 
             if prefill_chunk:
                 def prefill_chunk_draft(dparams, dpages, table, tokens,
@@ -332,8 +399,46 @@ class ContinuousBatchingEngine:
                         draft_cfg, dmasks, drefresh, block_size)
                     return dpages
 
-                self._prefill_chunk_draft = jax.jit(prefill_chunk_draft,
-                                                    donate_argnums=(1,))
+                self._prefill_chunk_draft = self._jit(prefill_chunk_draft,
+                                                      donate_argnums=(1,))
+
+    # -- mesh plumbing -------------------------------------------------------
+    def _jit(self, fn, **kw):
+        """jax.jit whose *calls* run under the engine's mesh: constraints in
+        the paged steps (rules.constrain) bind at trace time, so the mesh
+        must be installed exactly while a sharded engine traces — and never
+        while a single-device engine does (mesh=None skips the wrapper
+        entirely: the frozen lowerings stay byte-identical)."""
+        jf = jax.jit(fn, **kw)
+        if self.mesh is None:
+            return jf
+        mesh = self.mesh
+
+        def call(*args):
+            with rules.use_mesh(mesh):
+                return jf(*args)
+        return call
+
+    def _pool_sharding(self, cfg_: ModelConfig, n_blocks: int):
+        """NamedSharding for a paged KV pool (None single-device): blocks
+        over "data", kv heads over "model" — allocated in place, a
+        production pool must never materialize on one device first."""
+        if self.mesh is None:
+            return None
+        g = cm.HeadGeometry(cfg_.n_heads, cfg_.n_kv_heads,
+                            cfg_.resolved_head_dim)
+        shape = (cfg_.n_layers, n_blocks, g.kvp, self.block_size, g.head_dim)
+        return NamedSharding(self.mesh,
+                             rules.paged_cache_pspec(shape, self.mesh))
+
+    def _masks_alloc_kw(self, n_slots: int) -> Dict:
+        """Allocation kwargs for the (L, n_slots, d_ff) γ-mask buffer:
+        d_ff over "model" so mask updates stay shard-local."""
+        if self.mesh is None:
+            return {}
+        shape = (self.cfg.n_layers, n_slots, self.cfg.d_ff)
+        return {"device": NamedSharding(
+            self.mesh, rules.serve_masks_pspec(shape, self.mesh))}
 
     # -- request API --------------------------------------------------------
     def submit(self, prompt, max_new: int, reuse_window: int = 0) -> int:
@@ -409,6 +514,7 @@ class ContinuousBatchingEngine:
 
     def _account(self, active, dens_np, tiles_np, act) -> None:
         """Per-(active slot, step) weight-I/O + sparsity-tracker updates."""
+        self.scheduler.record_io(active, dens_np)
         for i in active:
             self._dens_sum += float(dens_np[i])
             self._tiles_sum += float(tiles_np[i])
@@ -533,6 +639,35 @@ class ContinuousBatchingEngine:
         if not self._dens_n:
             return 0.0
         return 1.0 - self._dens_sum / self._dens_n
+
+    def _mode_ffn_bytes(self) -> int:
+        """Per-layer-pass FFN weight bytes in the serving mode's SKIPPABLE
+        scope, per token, dense: the down-projection for γ-reuse /
+        speculative serving (their density metric covers wd rows), up-,
+        gate- AND down-projection for predictor serving (the predictor
+        gathers all of them)."""
+        itemsize = jnp.dtype(self.cfg.compute_dtype).itemsize
+        proj = self.cfg.d_ff * self.cfg.d_model * itemsize
+        if self.predictor is not None:
+            n_proj = 3 if self.cfg.ffn_kind == "glu" else 2
+            return self.cfg.n_layers * n_proj * proj
+        return self.cfg.n_layers * proj
+
+    def weight_io_bytes_per_step(self, per_device: bool = True) -> float:
+        """Mean FFN weight bytes actually READ per (active slot, step) over
+        the mode's skippable projections (``_mode_ffn_bytes``). With a mesh
+        the default is the PER-DEVICE figure: TP shards the d_ff axis of
+        exactly the tiles the sparsity machinery masks, so each device
+        reads measured_density x dense_bytes / TP — the multiplicative
+        sparsity x 1/TP shrink of the memory-bound decode step. The
+        divisor is ``ffn_tp``, NOT the raw mesh TP: when d_ff does not
+        divide the model axis the guard replicated the FFN weights and
+        every device really reads them whole. per_device=False reports the
+        mesh-wide total (== the single-device engine's figure at equal
+        density)."""
+        dens = 1.0 if not self._dens_n else self._dens_sum / self._dens_n
+        total = dens * self._mode_ffn_bytes()
+        return total / self.ffn_tp if per_device else total
 
     def predictor_density(self) -> float:
         """Mean fraction of FFN weight tiles gathered per (active slot,

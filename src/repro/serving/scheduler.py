@@ -90,6 +90,10 @@ class RequestResult:
     pred_misses: int = 0            # masked-out-but-active neurons (count)
     # prompt tokens served from the prefix cache (prefill skipped for them)
     cached_prompt_tokens: int = 0
+    # mean fraction of the mode's skippable FFN weights this request's steps
+    # actually read (1.0 = dense) — the per-request half of the engine's
+    # weight_io_bytes_per_step() per-device accounting
+    ffn_read_fraction: float = 1.0
 
     @property
     def accept_rate(self) -> float:
@@ -325,6 +329,9 @@ class _Slot:
     pred_steps: int = 0
     pred_active: int = 0
     pred_miss: int = 0
+    # per-step FFN weight-read fraction (all modes; engine._account feeds it)
+    io_dens_sum: float = 0.0
+    io_steps: int = 0
 
     @property
     def done(self) -> bool:
@@ -412,6 +419,8 @@ class Scheduler:
                                      if slot.pred_active else 1.0),
                     pred_misses=slot.pred_miss,
                     cached_prompt_tokens=slot.cached_tokens,
+                    ffn_read_fraction=(slot.io_dens_sum / slot.io_steps
+                                       if slot.io_steps else 1.0),
                 )
                 retired.append(slot.request.uid)
                 self.slots[i] = None
@@ -550,6 +559,17 @@ class Scheduler:
             if s.prefilled >= s.request.prompt_len:
                 s.warm = bool(warm)
                 self.seed(s, int(nxt[i, n - 1]), float(lp[i, n - 1]))
+
+    def record_io(self, active, dens: np.ndarray) -> None:
+        """Accumulate each active slot's per-step FFN weight-read fraction
+        (the engine's measured density for this step) so RequestResult can
+        report a per-request ``ffn_read_fraction`` — requests co-scheduled
+        in one batch see different γ phases / predicted sets, so the
+        engine-wide mean hides real per-request variance."""
+        for i in active:
+            s = self.slots[i]
+            s.io_dens_sum += float(dens[i])
+            s.io_steps += 1
 
     def record(self, next_tokens: np.ndarray, logprobs: np.ndarray,
                pred_density: Optional[np.ndarray] = None,

@@ -18,6 +18,7 @@ Modes:
 """
 from __future__ import annotations
 
+import contextlib
 import re
 from typing import Any, Optional, Tuple
 
@@ -25,6 +26,15 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any
+
+
+def tp_size(mesh: Optional[Mesh]) -> int:
+    """Tensor-parallel degree of a mesh (1 when mesh is None / no "model"
+    axis) — the 1/TP factor in the serving engine's per-device weight-I/O
+    accounting."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["model"])
 
 # (regex on '/'-joined param path) -> logical axes for the trailing dims.
 # Leading stacked-layer dims are detected by ndim surplus and mapped to None.
@@ -164,6 +174,47 @@ def cache_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
     return P(None, baxis, None, saxis, None)
 
 
+def paged_cache_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Paged KV block pool (L, n_blocks, kvp, bs, hd) for the continuous-
+    batching engine: block axis over "data" (each data shard owns a slice of
+    the pool — block tables index across shards, GSPMD inserts the gathers),
+    kv heads over "model" (the TP split that keeps decode attention
+    shard-local). The divisibility guard replicates either axis when it
+    doesn't fit (e.g. GQA kvp=2 on an 8-way model axis)."""
+    L, nb, kvp, bs, hd = shape
+    baxis = "data" if _fits(nb, mesh, "data") else None
+    haxis = "model" if _fits(kvp, mesh, "model") else None
+    return P(None, baxis, haxis, None, None)
+
+
+def serve_masks_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Per-slot γ-window FFN mask / activity buffers (L, n_slots, d_ff) or
+    (n_slots, d_ff): d_ff over "model" so the union-mask updates stay
+    shard-local elementwise ops on each shard's d_ff slice, and the slot
+    axis over "data" when it fits — matching the constrain(..., "dp",
+    "model") the decode steps put on new_masks, so the donated buffer's
+    sharding is stable step-over-step (a mismatch would reshard + retrace
+    on every data>1 mesh)."""
+    faxis = "model" if _fits(shape[-1], mesh, "model") else None
+    saxis = "data" if _fits(shape[-2], mesh, "data") else None
+    return P(*([None] * (len(shape) - 2)), saxis, faxis)
+
+
+def predictor_shardings(pred_params: PyTree, mesh: Mesh) -> PyTree:
+    """Shardings for a stacked predictor pytree (repro.predictor): probe
+    weights whose trailing axis is d_ff ("w" for sign, "b" for lowrank)
+    shard that axis over "model" — each shard probes only its local d_ff
+    slice; taus and low-rank input factors are replicated."""
+    def f(path, leaf):
+        name = _path_str(path)
+        axes = [None] * leaf.ndim
+        if name.rsplit("/", 1)[-1] in ("w", "b") and leaf.ndim >= 2 \
+                and _fits(leaf.shape[-1], mesh, "model"):
+            axes[-1] = "model"
+        return NamedSharding(mesh, P(*axes))
+    return jax.tree_util.tree_map_with_path(f, pred_params)
+
+
 def ssm_cache_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
     """SSM state (L, b, inner, state) / conv state (L, b, k, inner)."""
     dp = dp_axes(mesh)
@@ -197,6 +248,22 @@ def set_mesh(mesh: Optional[Mesh]) -> None:
 
 def get_mesh() -> Optional[Mesh]:
     return _ENV["mesh"]
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Scoped mesh install: constrain() binds ``mesh`` inside the block and
+    the previous environment is restored on exit. The serving engine wraps
+    its jitted-step *calls* in this (constraints bind at trace time), so a
+    sharded engine never leaks a mesh into single-device engines traced
+    later in the same process — their frozen lowerings must stay
+    constraint-free."""
+    prev = _ENV["mesh"]
+    _ENV["mesh"] = mesh
+    try:
+        yield mesh
+    finally:
+        _ENV["mesh"] = prev
 
 
 def constrain_params_tree(tree: PyTree, mode: str = "train") -> PyTree:

@@ -1,0 +1,35 @@
+"""Shared forced-multi-device subprocess runner for distribution tests.
+
+Tests that need N (fake) host devices run their body in a subprocess so the
+main pytest process keeps its single-device view. One copy of this helper:
+it is environment-sensitive (the XLA_FLAGS prelude must precede the jax
+import, and JAX_PLATFORMS must survive into the stripped child env or jax
+hangs probing non-CPU backends on containers that ship them), so fixes must
+not have to be applied to per-file clones.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+
+def run_forced_devices(src: str, devices: int = 8, timeout: int = 560) -> str:
+    """Run dedented ``src`` in a child python with ``devices`` fake host
+    devices; returns its stdout, asserting a clean exit."""
+    prog = (f"import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(src))
+    r = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        timeout=timeout,
+        # minimal env, but HOME/PATH from the caller — hardcoding this dev
+        # container's /root breaks on CI runners whose HOME is elsewhere
+        env={"PYTHONPATH": "src",
+             "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/root"),
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout

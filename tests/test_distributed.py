@@ -1,31 +1,15 @@
 """Distribution tests that need multiple (fake) devices — run in
 subprocesses so the main pytest process keeps its single-device view."""
-import json
-import subprocess
-import sys
-import textwrap
-
 import jax
 import pytest
+
+from subproc import run_forced_devices as _run
 
 # these tests build explicit-axis-type meshes, an API newer than the jax
 # this environment may pin; skip (not fail) where it's absent
 pytestmark = pytest.mark.skipif(
     not hasattr(jax.sharding, "AxisType"),
     reason="requires jax.sharding.AxisType (jax >= 0.6)")
-
-
-def _run(src: str, devices: int = 8, timeout: int = 560) -> str:
-    prog = (f"import os\n"
-            f"os.environ['XLA_FLAGS'] = "
-            f"'--xla_force_host_platform_device_count={devices}'\n"
-            + textwrap.dedent(src))
-    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                       text=True, timeout=timeout,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
-    assert r.returncode == 0, r.stderr[-3000:]
-    return r.stdout
 
 
 def test_ddp_shard_map_8dev():

@@ -1,0 +1,122 @@
+"""Property tests for the logical-axis sharding rules (sharding/rules.py):
+the divisibility guard must never emit a PartitionSpec axis that does not
+divide its dimension, and mesh-divisible PADDED dimensions (vocab, d_ff,
+d_model — padded to multiples of the production TP degree by construction)
+must actually be sharded over "model" in serve mode, never silently
+replicated.
+
+Uses a lightweight stand-in mesh (only ``.shape`` and ``.axis_names`` are
+consulted by the rules) so arbitrary mesh sizes are testable on the
+single-CPU container without forcing device counts."""
+from types import SimpleNamespace
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.common import padded_vocab
+from repro.sharding import rules
+
+# every param-rule path pattern, exercised with representative shapes built
+# from (d_model, d_ff, heads, kv, head_dim, vocab_p) below
+_PATHS = (
+    ("layers/attn/wq", lambda d, f, h, kv, hd, v: (d, h, hd)),
+    ("layers/attn/wk", lambda d, f, h, kv, hd, v: (d, kv, hd)),
+    ("layers/attn/wv", lambda d, f, h, kv, hd, v: (d, kv, hd)),
+    ("layers/attn/wo", lambda d, f, h, kv, hd, v: (h, hd, d)),
+    ("layers/ffn/wu", lambda d, f, h, kv, hd, v: (d, f)),
+    ("layers/ffn/wg", lambda d, f, h, kv, hd, v: (d, f)),
+    ("layers/ffn/wd", lambda d, f, h, kv, hd, v: (f, d)),
+    ("layers/moe/wu", lambda d, f, h, kv, hd, v: (8, d, f)),
+    ("layers/moe/wd", lambda d, f, h, kv, hd, v: (8, f, d)),
+    ("embed", lambda d, f, h, kv, hd, v: (v, d)),
+    ("unembed", lambda d, f, h, kv, hd, v: (v, d)),
+    ("pos_embed", lambda d, f, h, kv, hd, v: (64, d)),
+    ("layers/ln1/scale", lambda d, f, h, kv, hd, v: (d,)),
+    ("layers/ssm/in_proj", lambda d, f, h, kv, hd, v: (d, 2 * f)),
+    ("layers/ssm/out_proj", lambda d, f, h, kv, hd, v: (f, d)),
+)
+
+
+def _mesh(data: int, model: int, pod: int = 0):
+    if pod:
+        return SimpleNamespace(shape={"pod": pod, "data": data,
+                                      "model": model},
+                               axis_names=("pod", "data", "model"))
+    return SimpleNamespace(shape={"data": data, "model": model},
+                           axis_names=("data", "model"))
+
+
+def _axis_size(mesh, ax) -> int:
+    size = 1
+    for a in (ax if isinstance(ax, tuple) else (ax,)):
+        size *= mesh.shape[a]
+    return size
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, len(_PATHS) - 1), st.integers(0, 4), st.integers(0, 4),
+       st.sampled_from(["train", "serve"]), st.integers(1, 64),
+       st.integers(1, 12), st.booleans())
+def test_param_pspec_divisibility(pi, dpow, mpow, mode, dm_mult, kv,
+                                  multi_pod):
+    """Every axis a derived PartitionSpec assigns divides its dimension, and
+    no mesh axis is used twice."""
+    mesh = _mesh(2 ** dpow, 2 ** mpow, pod=2 if multi_pod else 0)
+    d, f = 8 * dm_mult, 16 * dm_mult
+    h, hd = 16, 8
+    path, shape_fn = _PATHS[pi]
+    shape = shape_fn(d, f, h, kv, hd, padded_vocab(1000))
+    spec = rules.param_pspec(path, shape, mesh, mode)
+    assert len(spec) == len(shape)
+    used = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            continue
+        size = _axis_size(mesh, ax)
+        assert dim % size == 0 and dim >= size, (path, shape, spec, mesh.shape)
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            assert a not in used, f"mesh axis {a} assigned twice: {spec}"
+            used.append(a)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 4), st.integers(1, 32), st.integers(1, 40))
+def test_padded_dims_never_replicated_on_model(mpow, ff_mult, vk):
+    """Serve mode: mesh-divisible padded dims — the (2048-multiple) vocab,
+    d_ff and the FFN weights' d_ff axis — take the "model" axis; the guard
+    may only *replicate* where divisibility genuinely fails."""
+    model = 2 ** mpow  # 1..16: every production TP degree
+    mesh = _mesh(1, model)
+    vp = padded_vocab(vk * 777)       # 2048-multiple >= any model size
+    f = 128 * ff_mult * model         # d_ff padded mesh-divisible
+    d = 64 * model
+    assert rules.param_pspec("embed", (vp, d), mesh, "serve")[0] == "model"
+    assert rules.param_pspec("unembed", (vp, d), mesh, "serve")[0] == "model"
+    wu = rules.param_pspec("layers/ffn/wu", (d, f), mesh, "serve")
+    assert wu[1] == "model", (wu, f, model)
+    wd = rules.param_pspec("layers/ffn/wd", (f, d), mesh, "serve")
+    assert wd[0] == "model", (wd, f, model)
+    # γ-mask buffers and the paged pool follow the same guard
+    assert rules.serve_masks_pspec((2, 4, f), mesh)[-1] == "model"
+    pool = rules.paged_cache_pspec((2, 17, 16, 8, 8), mesh)
+    if 16 % model == 0:
+        assert pool[2] == "model"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64), st.integers(0, 3), st.integers(0, 3),
+       st.integers(1, 6))
+def test_batch_and_cache_pspec_divisibility(b, dpow, mpow, s_mult):
+    mesh = _mesh(2 ** dpow, 2 ** mpow)
+    bp = rules.batch_pspec(b, mesh, extra_dims=1)
+    if bp[0] is not None:
+        assert b % _axis_size(mesh, bp[0]) == 0
+    shape = (2, b, 16, 128 * s_mult, 8)
+    cp = rules.cache_pspec(shape, mesh)
+    for dim, ax in zip(shape, cp):
+        if ax is not None:
+            assert dim % _axis_size(mesh, ax) == 0
+    pp = rules.paged_cache_pspec(shape, mesh)
+    for dim, ax in zip(shape, pp):
+        if ax is not None:
+            assert dim % _axis_size(mesh, ax) == 0
