@@ -11,7 +11,7 @@ Auto-pick: the fresh file is BENCH_<BENCH_PR env, default pr tag>.json (the
 one the smoke run just wrote); the baseline is the highest-numbered other
 BENCH_*.json in the repo root — the committed PR-over-PR trajectory.
 
-Two failure classes (exit code 1, one line per violation):
+Three failure classes (exit code 1, one line per violation):
 
 * throughput: ``serving_tokens_per_s`` (and the prefix-cache case) dropping
   > tolerance (default 20%) vs baseline — CI runners are noisy, a real
@@ -20,6 +20,9 @@ Two failure classes (exit code 1, one line per violation):
   ``prefill_tokens_saved`` headline that was positive in the baseline
   reading 0 (or missing) now — the sparsity machinery silently rotted even
   if throughput looks fine.
+* streaming latency: ``api_ttft_ms`` / ``api_tpot_ms`` rising more than
+  the latency tolerance (default 50%) vs baseline — a serve-loop
+  pathology, gated only once a baseline records the keys.
 """
 from __future__ import annotations
 
@@ -30,10 +33,17 @@ import os
 import re
 import sys
 
-THROUGHPUT_KEYS = ("serving_tokens_per_s", "prefix_cache_tokens_per_s")
+THROUGHPUT_KEYS = ("serving_tokens_per_s", "prefix_cache_tokens_per_s",
+                   "api_stream_tokens_per_s")
 ZERO_COLLAPSE_KEYS = ("weight_io_saved_gamma4", "spec_s_agg_gamma4",
                       "weight_io_saved_predictor", "prefix_hit_rate",
                       "prefill_tokens_saved")
+# streaming-latency headlines (lower is better): gate on INCREASES. The
+# tolerance is generous (latency on shared CI runners is far noisier than
+# throughput) — this catches a serve-loop pathology (an extra barrier per
+# step, a lost wakeup), not a 10% scheduling wobble. Only active once a
+# committed baseline records the key.
+LATENCY_KEYS = ("api_ttft_ms", "api_tpot_ms")
 
 
 def _pr_num(path: str) -> int:
@@ -59,11 +69,23 @@ def autodetect(fresh: str | None, baseline: str | None):
     return fresh, baseline
 
 
-def check(fresh: dict, baseline: dict, tolerance: float):
+def check(fresh: dict, baseline: dict, tolerance: float,
+          latency_tolerance: float = 0.5):
     """Returns a list of violation strings (empty = gate passes)."""
     fh = fresh.get("headline") or {}
     bh = baseline.get("headline") or {}
     bad = []
+    for key in LATENCY_KEYS:
+        b, f = bh.get(key), fh.get(key)
+        if not b:  # baseline never measured it — nothing to regress from
+            continue
+        if not f:
+            bad.append(f"{key}: missing/0 in fresh run "
+                       f"(baseline {b:.1f} ms)")
+        elif f > b * (1.0 + latency_tolerance):
+            bad.append(f"{key}: {f:.1f} ms is {f / b - 1:.0%} above "
+                       f"baseline {b:.1f} ms (tolerance "
+                       f"{latency_tolerance:.0%})")
     for key in THROUGHPUT_KEYS:
         b, f = bh.get(key), fh.get(key)
         if not b:  # baseline never measured it — nothing to regress from
@@ -92,13 +114,16 @@ def main() -> None:
                          "other BENCH_*.json)")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="allowed fractional throughput drop (default 0.2)")
+    ap.add_argument("--latency-tolerance", type=float, default=0.5,
+                    help="allowed fractional TTFT/TPOT increase "
+                         "(default 0.5 — CI latency is noisy)")
     args = ap.parse_args()
     fresh_path, base_path = autodetect(args.fresh, args.baseline)
     with open(fresh_path) as f:
         fresh = json.load(f)
     with open(base_path) as f:
         baseline = json.load(f)
-    bad = check(fresh, baseline, args.tolerance)
+    bad = check(fresh, baseline, args.tolerance, args.latency_tolerance)
     print(f"bench gate: {fresh_path} (pr={fresh.get('pr')}) vs "
           f"{base_path} (pr={baseline.get('pr')}), "
           f"tolerance {args.tolerance:.0%}")

@@ -53,7 +53,7 @@ def run_module(mod_name: str) -> None:
         print(r, flush=True)
 
 
-PR_TAG = os.environ.get("BENCH_PR", "pr5")
+PR_TAG = os.environ.get("BENCH_PR", "pr6")
 
 
 def write_trajectory(tag: str = PR_TAG) -> str:
@@ -87,6 +87,10 @@ def write_trajectory(tag: str = PR_TAG) -> str:
             "prefix_hit_rate": serving.get("cb_prefix_cache_hit_rate"),
             "prefill_tokens_saved":
                 serving.get("cb_prefix_cache_prefill_tokens_saved"),
+            "api_stream_tokens_per_s":
+                serving.get("cb_api_stream_tokens_per_s"),
+            "api_ttft_ms": serving.get("cb_api_stream_ttft_ms"),
+            "api_tpot_ms": serving.get("cb_api_stream_tpot_ms"),
         },
         "sources": sources,
     }

@@ -108,6 +108,43 @@ def _run_cb(cfg, params, prompts, max_news, *, arrival_every, gamma=0,
     return n / dt, eng
 
 
+def _run_api_stream(cfg, params, prompts, max_news):
+    """Serve the workload through the async streaming API (serving/api.py)
+    with one concurrent client per request, measuring what an online
+    caller feels: TTFT (submit -> first streamed token, queueing included)
+    and TPOT (mean gap between consecutive streamed tokens), plus the
+    aggregate streamed tokens/s. Returns (tokens_per_s, ttft_s, tpot_s)."""
+    import asyncio
+
+    from repro.serving import AsyncServingEngine
+
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=4, block_size=16,
+                                   max_blocks_per_seq=4)
+
+    async def client(api, p, m):
+        t0 = time.time()
+        stamps = []
+        async for ev in api.stream(p, m):
+            if not ev.finished:
+                stamps.append(time.time())
+        return t0, stamps
+
+    async def serve():
+        async with AsyncServingEngine(eng) as api:
+            return await asyncio.gather(*[client(api, p, m)
+                                          for p, m in zip(prompts, max_news)])
+
+    asyncio.run(serve())  # warm (compile)
+    t0 = time.time()
+    per_client = asyncio.run(serve())
+    wall = time.time() - t0
+    n = sum(len(stamps) for _, stamps in per_client)
+    ttfts = [stamps[0] - t for t, stamps in per_client if stamps]
+    gaps = [(stamps[-1] - stamps[0]) / (len(stamps) - 1)
+            for _, stamps in per_client if len(stamps) > 1]
+    return n / wall, float(np.mean(ttfts)), float(np.mean(gaps))
+
+
 def run():
     cfg = get_config("tiny-relu")
     fam = registry.get_family(cfg)
@@ -198,6 +235,17 @@ def run():
     rows.append(f"serving/cb_prefix_cache,{1e6 / tps_pc:.0f},"
                 f"toks_per_s={tps_pc:.1f};prefix_hit_rate={hit:.3f};"
                 f"prefill_tokens_saved={saved}")
+
+    # async streaming API: the same engine behind AsyncServingEngine with
+    # one concurrent SSE-style client per request — the latency numbers
+    # (TTFT / TPOT) are what check_trajectory.py gates PR-over-PR
+    tps_api, ttft, tpot = _run_api_stream(cfg, params, prompts, max_news)
+    full["cb_api_stream_tokens_per_s"] = tps_api
+    full["cb_api_stream_ttft_ms"] = ttft * 1e3
+    full["cb_api_stream_tpot_ms"] = tpot * 1e3
+    rows.append(f"serving/cb_api_stream,{1e6 / tps_api:.0f},"
+                f"toks_per_s={tps_api:.1f};ttft_ms={ttft * 1e3:.1f};"
+                f"tpot_ms={tpot * 1e3:.2f}")
 
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/bench_serving.json", "w") as f:

@@ -1,0 +1,289 @@
+"""HTTP/SSE front door for the async streaming serving engine.
+
+A deliberately dependency-free server (stdlib asyncio only — the repo's
+serving path must run from the ``repro[test]`` install) exposing
+``AsyncServingEngine`` over two endpoints:
+
+  GET  /healthz          -> {"ok": true, "mode": ...}
+  POST /v1/generate      -> token stream (SSE) or one JSON body
+
+Request body (JSON)::
+
+    {"prompt": [1, 2, 3],        # token ids (required)
+     "max_new": 16,              # generation budget (required)
+     "stream": true,             # default true: SSE; false: one JSON reply
+     "temperature": 0.8,         # 0 = greedy (default)
+     "top_k": 40, "top_p": 0.95,
+     "seed": 7,                  # omit -> the engine's --base-seed
+     "stop": [[5, 9]],           # stop sequences (token ids)
+     "reuse_window": 0}          # γ-window weight reuse (plain mode)
+
+Streaming responses are standard SSE: one ``data: {json}`` line per token,
+a terminal ``data:`` object with ``"done": true`` plus the finish reason,
+full token list, and serving latency (ttft_s / total_s), then
+``data: [DONE]``. A client that disconnects mid-stream cancels its
+request — the engine slot is reclaimed for other traffic.
+
+Run (tiny smoke model, f32)::
+
+    python -m repro.launch.serve_api --arch tiny-relu --f32 --port 8151
+
+The launcher prints one ``READY {...}`` JSON line to stdout once the
+socket is bound — process supervisors (launch/serve_smoke_client.py, the
+serve-smoke CI job) wait on it and read the bound port from it.
+``build_engine(args)`` is importable so drivers can construct a
+bit-identical offline reference engine for byte-identity checks.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+from typing import Optional
+
+
+def parse_args(argv=None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="tiny-relu")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink --arch via configs.smoke_config")
+    ap.add_argument("--mode", choices=["plain", "spec", "predictor"],
+                    default="plain")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="draft length γ (spec mode)")
+    ap.add_argument("--prefill-chunk", type=int, default=0)
+    ap.add_argument("--prefix-cache", action="store_true")
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--max-blocks", type=int, default=6)
+    ap.add_argument("--f32", action="store_true",
+                    help="force float32 compute (exactness smoke runs)")
+    ap.add_argument("--init-seed", type=int, default=0,
+                    help="PRNG seed for the (random) smoke weights")
+    ap.add_argument("--base-seed", type=int, default=0,
+                    help="engine base seed for unseeded sampled requests")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8151)
+    return ap.parse_args(argv)
+
+
+def build_engine(args: argparse.Namespace):
+    """Construct the serving engine the launcher fronts. Deterministic in
+    ``args`` (random weights keyed on --init-seed), so a driver calling
+    this again gets a reference engine producing byte-identical greedy
+    streams — the serve-smoke CI assertion."""
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.models import registry
+    from repro.serving import ContinuousBatchingEngine
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.f32:
+        cfg = cfg.replace(compute_dtype="float32")
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(args.init_seed), cfg)
+    kw = dict(n_slots=args.n_slots, block_size=args.block_size,
+              max_blocks_per_seq=args.max_blocks,
+              base_seed=args.base_seed)
+    if args.prefill_chunk:
+        kw.update(prefill_chunk=args.prefill_chunk,
+                  prefix_cache=args.prefix_cache)
+    if args.mode == "spec":
+        dcfg = cfg.replace(name=f"{cfg.name}-draft", n_layers=1)
+        kw.update(draft_cfg=dcfg, gamma=args.gamma,
+                  draft_params=fam.init_params(jax.random.PRNGKey(2), dcfg))
+    elif args.mode == "predictor":
+        from repro.core import relufication
+        from repro.core.activations import is_sparse_activation
+        from repro.predictor import calibrate_from_config
+        if not is_sparse_activation(cfg.activation):
+            cfg = relufication.relufy_stage1(cfg)
+            params = fam.init_params(jax.random.PRNGKey(args.init_seed), cfg)
+        cfg = cfg.replace_sparsity(predictor="sign", predictor_recall=0.99)
+        calib = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(7), (4, 32), 0, cfg.vocab_size)}
+        # tile=1 = exact row-skipping, observable on the tiny smoke models
+        kw.update(predictor=calibrate_from_config(params, cfg, calib,
+                                                  tile=1))
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+def _sampling_from(body: dict):
+    from repro.serving import SamplingParams
+    return SamplingParams(
+        temperature=float(body.get("temperature", 0.0)),
+        top_k=int(body.get("top_k", 0)),
+        top_p=float(body.get("top_p", 1.0)),
+        seed=(int(body["seed"]) if body.get("seed") is not None else None),
+        stop=tuple(tuple(int(t) for t in s) for s in body.get("stop", [])))
+
+
+async def _read_request(reader) -> Optional[tuple]:
+    """Minimal HTTP/1.1 request parse: (method, path, body-bytes)."""
+    line = await reader.readline()
+    if not line:
+        return None
+    try:
+        method, path, _ = line.decode("latin-1").split(None, 2)
+    except ValueError:
+        return None
+    length = 0
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        name, _, value = h.decode("latin-1").partition(":")
+        if name.strip().lower() == "content-length":
+            length = int(value.strip())
+    body = await reader.readexactly(length) if length else b""
+    return method.upper(), path, body
+
+
+def _response(status: str, body: bytes, ctype: str = "application/json",
+              stream: bool = False) -> bytes:
+    head = [f"HTTP/1.1 {status}", f"Content-Type: {ctype}",
+            "Connection: close"]
+    if not stream:
+        head.append(f"Content-Length: {len(body)}")
+    return ("\r\n".join(head) + "\r\n\r\n").encode() + body
+
+
+class ApiServer:
+    """One engine, one asyncio TCP server. Kept as a class so in-process
+    tests can drive the exact wire path without a subprocess."""
+
+    def __init__(self, api, mode: str = "plain"):
+        self.api = api
+        self.mode = mode
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    @property
+    def port(self) -> int:
+        return self._server.sockets[0].getsockname()[1]
+
+    async def start(self, host: str = "127.0.0.1", port: int = 0) -> None:
+        self._server = await asyncio.start_server(self._handle, host, port)
+
+    async def aclose(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    async def _handle(self, reader, writer) -> None:
+        try:
+            req = await _read_request(reader)
+            if req is None:
+                return
+            method, path, raw = req
+            if method == "GET" and path == "/healthz":
+                writer.write(_response("200 OK", json.dumps(
+                    {"ok": True, "mode": self.mode}).encode()))
+                await writer.drain()
+                return
+            if method != "POST" or path != "/v1/generate":
+                writer.write(_response("404 Not Found",
+                                       b'{"error": "not found"}'))
+                await writer.drain()
+                return
+            try:
+                body = json.loads(raw or b"{}")
+                prompt = [int(t) for t in body["prompt"]]
+                max_new = int(body["max_new"])
+                sampling = _sampling_from(body)
+                reuse_window = int(body.get("reuse_window", 0))
+            except (KeyError, TypeError, ValueError) as e:
+                writer.write(_response("400 Bad Request", json.dumps(
+                    {"error": f"bad request: {e}"}).encode()))
+                await writer.drain()
+                return
+            await self._generate(writer, prompt, max_new, sampling,
+                                 reuse_window, stream=body.get("stream",
+                                                               True))
+        except (ConnectionResetError, BrokenPipeError, asyncio.IncompleteReadError):
+            pass  # client went away; any in-flight uid is cancelled below
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    async def _generate(self, writer, prompt, max_new, sampling,
+                        reuse_window, stream: bool) -> None:
+        try:
+            uid = await self.api.submit(prompt, max_new, sampling=sampling,
+                                        reuse_window=reuse_window)
+        except Exception as e:  # validation errors surface as 400s
+            writer.write(_response("400 Bad Request", json.dumps(
+                {"error": str(e)}).encode()))
+            await writer.drain()
+            return
+        print(f"serve_api: uid={uid} prompt_len={len(prompt)} "
+              f"max_new={max_new} greedy={sampling.is_greedy} "
+              f"stream={stream}", file=sys.stderr, flush=True)
+        tokens, lps = [], []
+        if stream:
+            writer.write(_response("200 OK", b"", ctype="text/event-stream",
+                                   stream=True))
+        try:
+            async for ev in self.api.events(uid):
+                if ev.finished:
+                    final = {"uid": uid, "done": True,
+                             "n_tokens": len(ev.result.tokens),
+                             "finish_reason": ev.finish_reason,
+                             "tokens": [int(t) for t in ev.result.tokens],
+                             "logprobs": [float(x)
+                                          for x in ev.result.logprobs],
+                             "ttft_s": ev.ttft_s, "total_s": ev.total_s}
+                    if stream:
+                        writer.write(b"data: " + json.dumps(final).encode()
+                                     + b"\n\ndata: [DONE]\n\n")
+                    else:
+                        writer.write(_response("200 OK",
+                                               json.dumps(final).encode()))
+                    await writer.drain()
+                    return
+                tokens.append(ev.token)
+                lps.append(ev.logprob)
+                if stream:
+                    writer.write(b"data: " + json.dumps(
+                        {"uid": uid, "index": ev.index, "token": ev.token,
+                         "logprob": ev.logprob}).encode() + b"\n\n")
+                    # drain per event: a disconnected client raises here,
+                    # freeing its slot instead of decoding to a dead socket
+                    await writer.drain()
+        except (ConnectionResetError, BrokenPipeError):
+            print(f"serve_api: uid={uid} client disconnected after "
+                  f"{len(tokens)} tokens — cancelling", file=sys.stderr,
+                  flush=True)
+            self.api.cancel(uid)
+            raise
+
+
+async def _amain(args: argparse.Namespace) -> None:
+    from repro.serving import AsyncServingEngine
+
+    engine = build_engine(args)
+    async with AsyncServingEngine(engine) as api:
+        server = ApiServer(api, mode=args.mode)
+        await server.start(args.host, args.port)
+        print("READY " + json.dumps({"host": args.host, "port": server.port,
+                                     "mode": args.mode}), flush=True)
+        try:
+            await asyncio.Event().wait()  # serve until killed
+        finally:
+            await server.aclose()
+
+
+def main() -> None:
+    args = parse_args()
+    try:
+        asyncio.run(_amain(args))
+    except KeyboardInterrupt:
+        pass
+
+
+if __name__ == "__main__":
+    main()

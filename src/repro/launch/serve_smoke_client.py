@@ -1,0 +1,240 @@
+"""serve-smoke driver: boot the API server, hammer it, verify exactness.
+
+The CI serve-smoke job runs this module (launch/serve_api.py is the system
+under test, spawned as a real subprocess speaking real HTTP):
+
+  1. start ``python -m repro.launch.serve_api`` with the given mode,
+     logging the server's stdout/stderr to ``--log``;
+  2. drive 8 concurrent streaming clients — 5 greedy, 3 sampled (distinct
+     seeds), one of which disconnects mid-stream;
+  3. assert every completed greedy stream is byte-identical to an offline
+     ``engine.run()`` over a reference engine built with the SAME args
+     (serve_api.build_engine — same random weights, same config);
+  4. assert the server survives the disconnect: /healthz still answers
+     and a post-disconnect greedy request still matches the reference.
+
+Exit code 0 = pass. Any mismatch/timeout prints a diagnosis and exits 1;
+the CI job uploads ``--log`` as an artifact on failure.
+
+  python -m repro.launch.serve_smoke_client --mode plain --log server.log
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import shutil
+import subprocess
+import sys
+import threading
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+CLIENT_TIMEOUT_S = 420  # generous: first stream pays the jit compiles
+
+
+def server_args(mode: str) -> List[str]:
+    """CLI args shared by the server subprocess and the in-driver
+    reference engine — byte-identity depends on them matching."""
+    return ["--arch", "tiny-relu", "--f32", "--mode", mode,
+            "--n-slots", "4", "--block-size", "8", "--max-blocks", "6",
+            "--gamma", "3"]
+
+
+def workload(vocab: int) -> List[dict]:
+    """8 deterministic client requests: 5 greedy, 3 sampled; request 5
+    (sampled) disconnects after 3 streamed tokens."""
+    rng = np.random.RandomState(0)
+    reqs = []
+    for i in range(8):
+        prompt = [int(t) for t in rng.randint(0, vocab, 4 + 2 * i)]
+        r = {"prompt": prompt, "max_new": 6 + (i % 3), "stream": True}
+        if i in (2, 5, 7):  # the sampled cohort
+            r.update(temperature=0.8 + 0.1 * i, top_k=50, top_p=0.95,
+                     seed=i)
+        reqs.append(r)
+    return reqs
+
+
+async def stream_client(port: int, body: dict,
+                        disconnect_after: Optional[int] = None
+                        ) -> Tuple[List[int], Optional[dict]]:
+    """One SSE client; returns (streamed tokens, final event or None when
+    it disconnected early)."""
+    raw = json.dumps(body).encode()
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write(b"POST /v1/generate HTTP/1.1\r\nHost: smoke\r\n"
+                 b"Content-Length: " + str(len(raw)).encode()
+                 + b"\r\n\r\n" + raw)
+    await writer.drain()
+    tokens: List[int] = []
+    final = None
+    buf = b""
+    try:
+        while True:
+            chunk = await reader.read(4096)
+            if not chunk:
+                break
+            buf += chunk
+            done = False
+            while b"\n\n" in buf:
+                frame, buf = buf.split(b"\n\n", 1)
+                for line in frame.splitlines():
+                    if not line.startswith(b"data: "):
+                        continue
+                    payload = line[6:]
+                    if payload == b"[DONE]":
+                        done = True
+                        break
+                    ev = json.loads(payload)
+                    if ev.get("done"):
+                        final = ev
+                    else:
+                        tokens.append(ev["token"])
+                        if (disconnect_after is not None
+                                and len(tokens) >= disconnect_after):
+                            return tokens, None  # finally closes the socket
+                if done:
+                    break
+            if done:
+                break
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+    return tokens, final
+
+
+async def healthz(port: int) -> bool:
+    try:
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        writer.write(b"GET /healthz HTTP/1.1\r\nHost: smoke\r\n\r\n")
+        await writer.drain()
+        data = await reader.read()
+        writer.close()
+        return b'"ok": true' in data
+    except OSError:
+        return False
+
+
+def reference_streams(mode: str, reqs: List[dict]) -> dict:
+    """Offline greedy ground truth from engine.run() on an identically
+    built engine (greedy requests only — sampled exactness is pinned by
+    the pytest tier; here we check the greedy byte-identity contract)."""
+    from repro.launch.serve_api import build_engine, parse_args
+    eng = build_engine(parse_args(server_args(mode)))
+    uids = {}
+    for i, r in enumerate(reqs):
+        if "temperature" not in r:
+            uids[i] = eng.submit(r["prompt"], r["max_new"])
+    res = eng.run()
+    return {i: [int(t) for t in res[u].tokens] for i, u in uids.items()}
+
+
+async def drive(port: int, mode: str) -> None:
+    from repro.configs import get_config
+    vocab = get_config("tiny-relu").vocab_size
+    reqs = workload(vocab)
+    ref = reference_streams(mode, reqs)
+
+    async def run_one(i: int):
+        return await asyncio.wait_for(
+            stream_client(port, reqs[i],
+                          disconnect_after=3 if i == 5 else None),
+            CLIENT_TIMEOUT_S)
+
+    results = await asyncio.gather(*[run_one(i) for i in range(len(reqs))])
+
+    failures = []
+    for i, (tokens, final) in enumerate(results):
+        if i == 5:
+            if final is not None:
+                failures.append(f"client {i}: expected mid-stream "
+                                f"disconnect, got a final event")
+            continue
+        if final is None:
+            failures.append(f"client {i}: stream ended without a final "
+                            f"event (got {len(tokens)} tokens)")
+            continue
+        if tokens != final["tokens"]:
+            failures.append(f"client {i}: streamed tokens {tokens} != "
+                            f"final event tokens {final['tokens']}")
+        if len(tokens) != reqs[i]["max_new"]:
+            failures.append(f"client {i}: {len(tokens)} tokens, wanted "
+                            f"max_new={reqs[i]['max_new']}")
+        if i in ref and tokens != ref[i]:
+            failures.append(f"client {i}: greedy stream {tokens} != "
+                            f"offline engine.run() {ref[i]}")
+        if final.get("ttft_s") is None:
+            failures.append(f"client {i}: final event missing ttft_s")
+    # the server must have survived client 5 vanishing mid-stream
+    if not await healthz(port):
+        failures.append("healthz failed after mid-stream disconnect")
+    post = reqs[0]
+    tokens, final = await asyncio.wait_for(stream_client(port, post),
+                                           CLIENT_TIMEOUT_S)
+    if tokens != ref[0]:
+        failures.append(f"post-disconnect greedy stream {tokens} != "
+                        f"reference {ref[0]}")
+    if failures:
+        raise AssertionError("serve-smoke failures:\n  "
+                             + "\n  ".join(failures))
+    n_sampled = sum(1 for i in range(len(reqs)) if i in (2, 7))
+    print(f"serve-smoke PASS [{mode}]: {len(ref)} greedy streams "
+          f"byte-identical to engine.run(), {n_sampled} sampled streams "
+          f"completed, 1 mid-stream disconnect survived")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["plain", "spec", "predictor"],
+                    default="plain")
+    ap.add_argument("--log", default="serve_smoke_server.log")
+    ap.add_argument("--boot-timeout", type=float, default=300.0)
+    args = ap.parse_args()
+
+    cmd = [sys.executable, "-u", "-m", "repro.launch.serve_api",
+           "--port", "0"] + server_args(args.mode)
+    log = open(args.log, "w")
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=log,
+                            text=True)
+    port = None
+    try:
+        deadline = time.monotonic() + args.boot_timeout
+        while time.monotonic() < deadline:
+            line = proc.stdout.readline()
+            if not line:
+                raise RuntimeError(
+                    f"server exited during boot (rc={proc.poll()}) — "
+                    f"see {args.log}")
+            log.write(line)
+            log.flush()
+            if line.startswith("READY "):
+                port = json.loads(line[6:])["port"]
+                break
+        if port is None:
+            raise RuntimeError(f"server did not print READY within "
+                               f"{args.boot_timeout}s — see {args.log}")
+        # keep draining server stdout into the log while clients run
+        t = threading.Thread(target=shutil.copyfileobj,
+                             args=(proc.stdout, log), daemon=True)
+        t.start()
+        asyncio.run(drive(port, args.mode))
+    except BaseException as e:
+        print(f"serve-smoke FAIL [{args.mode}]: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=30)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+        log.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -79,6 +79,8 @@ def model_verify_window_paged(params, pages, table, tokens, pos0, wlen,
 
 
 def model_draft_gamma_paged(params, pages, table, token, pos0, wlen,
-                            cfg: ModelConfig, gamma: int, block_size: int):
+                            cfg: ModelConfig, gamma: int, block_size: int,
+                            next_fn=None):
     return T.draft_gamma_paged(params, pages, table, token, pos0, wlen, cfg,
-                               gamma=gamma, block_size=block_size)
+                               gamma=gamma, block_size=block_size,
+                               next_fn=next_fn)

@@ -874,9 +874,10 @@ def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConf
 
 
 def draft_gamma_paged(params, pages, table, token, pos0, wlen,
-                      cfg: ModelConfig, *, gamma: int, block_size: int):
-    """Draft γ greedy tokens per slot in one jitted scan over the paged pool
-    — the proposer half of speculative decoding, batched across slots with
+                      cfg: ModelConfig, *, gamma: int, block_size: int,
+                      next_fn=None):
+    """Draft γ tokens per slot in one jitted scan over the paged pool —
+    the proposer half of speculative decoding, batched across slots with
     NO host round-trips.
 
     token: (b,) each slot's current (verified) token; pos0: (b,) its write
@@ -886,6 +887,11 @@ def draft_gamma_paged(params, pages, table, token, pos0, wlen,
     the final proposal's own K/V is already in the draft cache when every
     draft is accepted (no hole to back-fill next round); the extra step's
     logits are discarded.
+
+    next_fn(logits (b, vocab_p), g) -> (b,) int32 selects each step's
+    proposal from the step's logits — the logits-out hook the serving
+    engine uses to draft with per-slot sampling (sampling head + the
+    shared key schedule). None keeps the frozen greedy argmax lowering.
 
     Returns (proposals (b, γ), pages)."""
     b = token.shape[0]
@@ -898,8 +904,11 @@ def draft_gamma_paged(params, pages, table, token, pos0, wlen,
         logits, pages, _, _ = verify_window_paged(
             params, pages, table, tok[:, None], pos0 + g, wl, cfg,
             masks, refresh, block_size=block_size)
-        nxt = jnp.argmax(logits[:, 0, : cfg.vocab_size],
-                         -1).astype(jnp.int32)
+        if next_fn is None:
+            nxt = jnp.argmax(logits[:, 0, : cfg.vocab_size],
+                             -1).astype(jnp.int32)
+        else:
+            nxt = next_fn(logits[:, 0], g)
         return (nxt, pages), nxt
 
     (_, pages), props = jax.lax.scan(

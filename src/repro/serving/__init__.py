@@ -1,9 +1,12 @@
 """Serving stack: continuous-batching engine over a paged KV cache (with a
-first-class speculative-decoding mode), the legacy single-batch engine,
-scheduler, and speculative-decoding metrics."""
+first-class speculative-decoding mode), the async streaming API layer with
+per-request sampling, the legacy single-batch engine, scheduler, and
+speculative-decoding metrics."""
+from repro.serving.api import AsyncServingEngine, TokenEvent  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
     ContinuousBatchingEngine, GenerationResult, ServeEngine,
 )
+from repro.serving.sampling import SamplingParams  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     BlockAllocator, PrefixCache, Request, RequestQueue, RequestResult,
     Scheduler,

@@ -34,6 +34,8 @@ from repro.configs.base import ModelConfig
 from repro.core.sparsity import AggregatedTracker
 from repro.models import common as cm
 from repro.models import registry
+from repro.serving import sampling as smp
+from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Request, RequestResult, Scheduler
 from repro.sharding import rules
 
@@ -111,6 +113,10 @@ class ContinuousBatchingEngine:
         it); at f32 the two paths produce identical greedy streams
         (tests/test_chunked_prefill.py). Composes with all three serving
         modes (the draft pool is chunk-prefilled through the same windows).
+    base_seed: PRNG seed behind requests that sample (temperature > 0)
+        without their own ``SamplingParams.seed``. Greedy requests never
+        consume randomness. See serving/sampling.py for the key-schedule
+        contract (restart-deterministic, admission-order independent).
     prefix_cache: reuse KV blocks across requests sharing a token-aligned
         full-block prompt prefix (system prompts, few-shot headers): the
         scheduler's prefix trie maps the shared blocks at admission
@@ -152,7 +158,7 @@ class ContinuousBatchingEngine:
                  draft_params=None, gamma: int = 4,
                  predictor=None, predictor_telemetry: bool = True,
                  prefill_chunk: int = 0, prefix_cache: bool = False,
-                 warm_masks: bool = False, mesh=None):
+                 warm_masks: bool = False, mesh=None, base_seed: int = 0):
         fam = registry.get_family(cfg)
         if not hasattr(fam, "model_decode_paged"):
             raise ValueError(
@@ -222,31 +228,40 @@ class ContinuousBatchingEngine:
         self._pred_miss = 0
 
         vocab = cfg.vocab_size
+        self.base_seed = base_seed
 
-        def greedy(logits):
-            """(..., vocab_p) -> greedy next token + its logprob."""
-            lv = logits[..., :vocab].astype(jnp.float32)
-            nxt = jnp.argmax(lv, axis=-1).astype(jnp.int32)
-            lp = jnp.take_along_axis(jax.nn.log_softmax(lv, axis=-1),
-                                     nxt[..., None], -1)[..., 0]
-            return nxt, lp
+        # one jitted sampling head for every closure below: per-slot
+        # temperature / top-k / top-p / PRNG keys arrive as TRACED arrays,
+        # so mixing greedy and sampled requests in a batch never retraces,
+        # and temperature-0 rows reproduce the historical greedy outputs
+        # bit for bit (sampling.sample_head's greedy branch is the old
+        # argmax + log_softmax formula verbatim)
+        def head(logits, temps, tks, tps, keys):
+            """(..., vocab_p) -> next token + its logprob per position."""
+            return smp.sample_head(logits, vocab, temps, tks, tps, keys)
 
-        def decode(params, pages, table, token, pos, masks, refresh):
+        def decode(params, pages, table, token, pos, masks, refresh,
+                   temps, tks, tps, keys, gen):
             logits, pages, new_masks, (act, scores, density) = \
                 fam.model_decode_paged(params, pages, table, token, pos, cfg,
                                        masks, refresh, block_size)
-            nxt, lp = greedy(logits)
+            nxt, lp = head(logits, temps, tks, tps,
+                           smp.position_keys(keys, gen))
             # per-request fraction of active d_ff tiles this step — the
             # granularity the tile-gathered kernels load weights at
             tiles = jnp.mean((scores > 0).astype(jnp.float32), axis=(0, 2))
             return nxt, lp, pages, new_masks, tiles, jnp.mean(density, 0), act
 
-        def prefill(params, tokens, pages, blocks, true_len):
+        def prefill(params, tokens, pages, blocks, true_len,
+                    temps, tks, tps, keys):
             last, pages = fam.model_prefill_paged(params, {"tokens": tokens},
                                                   cfg, pages, blocks,
                                                   block_size,
                                                   true_len=true_len)
-            nxt, lp = greedy(last)
+            # the prompt-seeded token is generated index 0 of the schedule
+            nxt, lp = head(last, temps, tks, tps,
+                           smp.position_keys(keys, jnp.zeros((1,),
+                                                             jnp.int32)))
             return nxt[0], lp[0], pages
 
         # donate the page pool + masks: decode/prefill update them in place
@@ -258,7 +273,8 @@ class ContinuousBatchingEngine:
 
         if prefill_chunk:
             def prefill_chunk_step(params, pages, table, tokens, pos0, clen,
-                                   masks, refresh, keep):
+                                   masks, refresh, keep, temps, tks, tps,
+                                   keys):
                 (logits, pages, new_masks,
                  (act, _, _, _)) = fam.model_prefill_chunk_paged(
                     params, {"tokens": tokens}, cfg, pages, table, pos0,
@@ -270,7 +286,15 @@ class ContinuousBatchingEngine:
                 # final mask covers the whole cold suffix
                 new_masks = jnp.where(keep[None, :, None], masks | act,
                                       new_masks)
-                nxt, lp = greedy(logits)  # both (b, C); host reads clen-1
+                # every chunk position samples with the slot's gen-0 key —
+                # only clen-1 (the seed token) is read on the host
+                B, C = logits.shape[:2]
+                k0 = smp.position_keys(keys, jnp.zeros((B,), jnp.int32))
+                nxt, lp = head(logits,
+                               jnp.broadcast_to(temps[:, None], (B, C)),
+                               jnp.broadcast_to(tks[:, None], (B, C)),
+                               jnp.broadcast_to(tps[:, None], (B, C)),
+                               jnp.broadcast_to(k0[:, None, :], (B, C, 2)))
                 return nxt, lp, pages, new_masks
 
             self._prefill_chunk = self._jit(prefill_chunk_step,
@@ -316,14 +340,15 @@ class ContinuousBatchingEngine:
                     stacklevel=2)
 
             def decode_pred(params, pages, table, token, pos, masks, refresh,
-                            pred_params):
+                            pred_params, temps, tks, tps, keys, gen):
                 logits, pages, new_masks, (act, scores, density, n_act,
                                            n_miss) = \
                     fam.model_decode_paged_predicted(
                         params, pages, table, token, pos, cfg, masks,
                         refresh, pred_params, kind, tile_w, k_tiles,
                         block_size, predictor_telemetry, pred_shards)
-                nxt, lp = greedy(logits)
+                nxt, lp = head(logits, temps, tks, tps,
+                               smp.position_keys(keys, gen))
                 tiles = jnp.mean((scores > 0).astype(jnp.float32),
                                  axis=(0, 2))
                 return (nxt, lp, pages, new_masks, tiles,
@@ -355,18 +380,36 @@ class ContinuousBatchingEngine:
                 draft_cfg, n_blocks, block_size,
                 sharding=self._pool_sharding(draft_cfg, n_blocks))
 
-            def draft(dparams, dpages, table, token, pos0, wlen):
+            def draft(dparams, dpages, table, token, pos0, wlen,
+                      temps, tks, tps, keys, gen0):
+                # the draft proposes with the SAME per-position key schedule
+                # the verify step samples with (key-coupled acceptance —
+                # see sampling.py): proposal g uses the key of generated
+                # index gen0 + g. Greedy slots fall through to the frozen
+                # argmax inside the head.
+                def next_fn(logits, g):
+                    nxt, _ = smp.sample_head(
+                        logits, vocab, temps, tks, tps,
+                        smp.position_keys(keys, gen0 + g))
+                    return nxt
+
                 return dfam.model_draft_gamma_paged(
                     dparams, dpages, table, token, pos0, wlen, draft_cfg,
-                    gamma, block_size)
+                    gamma, block_size, next_fn=next_fn)
 
-            def verify(params, pages, table, window, pos0, wlen, masks):
+            def verify(params, pages, table, window, pos0, wlen, masks,
+                       temps, tks, tps, keys, gen0):
                 refresh = jnp.ones((n_slots,), bool)
                 logits, pages, new_masks, (act, scores, density, udens) = \
                     fam.model_verify_window_paged(
                         params, pages, table, window, pos0, wlen, cfg,
                         masks, refresh, block_size)
-                nxt, lp = greedy(logits)  # both (b, W)
+                B, W = logits.shape[:2]
+                nxt, lp = head(logits,  # both (b, W)
+                               jnp.broadcast_to(temps[:, None], (B, W)),
+                               jnp.broadcast_to(tks[:, None], (B, W)),
+                               jnp.broadcast_to(tps[:, None], (B, W)),
+                               smp.window_keys(keys, gen0, W))
                 tiles = jnp.mean((scores > 0).astype(jnp.float32),
                                  axis=(0, 2))
                 return (nxt, lp, pages, new_masks, tiles,
@@ -441,15 +484,33 @@ class ContinuousBatchingEngine:
             self.mesh, rules.serve_masks_pspec(shape, self.mesh))}
 
     # -- request API --------------------------------------------------------
-    def submit(self, prompt, max_new: int, reuse_window: int = 0) -> int:
+    def submit(self, prompt, max_new: int, reuse_window: int = 0,
+               sampling: Optional[SamplingParams] = None) -> int:
         """Enqueue a request; returns its uid. Admission happens inside
-        step() when a slot and enough KV blocks are free."""
+        step() when a slot and enough KV blocks are free.
+
+        ``sampling`` (None = greedy) selects this request's decoding
+        distribution and stop sequences. A sampled request's PRNG key is
+        derived here from (seed, request fingerprint) — never from the
+        uid, slot, or admission order — so its stream replays identically
+        whatever else is co-scheduled (serving/sampling.py)."""
         self._uid += 1
+        key = None
+        if sampling is not None and not sampling.is_greedy:
+            key = smp.request_prng_key(prompt, sampling, self.base_seed)
         req = Request(uid=self._uid,
                       tokens=np.asarray(prompt, np.int32).reshape(-1),
-                      max_new=max_new, reuse_window=reuse_window)
+                      max_new=max_new, reuse_window=reuse_window,
+                      sampling=sampling, key=key)
         self.scheduler.submit(req)
         return self._uid
+
+    def cancel(self, uid: int) -> bool:
+        """Abandon a request (client disconnect). Queued requests are
+        withdrawn immediately; in-flight ones finish this step and retire
+        with their partial output and finish_reason "cancelled". Returns
+        False for unknown/finished uids."""
+        return self.scheduler.cancel(uid)
 
     def _admit(self) -> bool:
         """Retire finished requests, admit queued ones, and advance prefill
@@ -478,9 +539,15 @@ class ContinuousBatchingEngine:
                 jt = jnp.asarray(toks)
                 blocks = jnp.asarray(slot.blocks[:nb_eff], jnp.int32)
                 true_len = jnp.asarray(s, jnp.int32)
-                nxt, lp, self.pages = self._prefill(self.params, jt,
-                                                    self.pages, blocks,
-                                                    true_len)
+                sp = slot.request.sampling or smp.GREEDY
+                rkey = (slot.request.key if slot.request.key is not None
+                        else np.zeros((2,), np.uint32))
+                nxt, lp, self.pages = self._prefill(
+                    self.params, jt, self.pages, blocks, true_len,
+                    jnp.asarray([sp.temperature], jnp.float32),
+                    jnp.asarray([sp.top_k], jnp.int32),
+                    jnp.asarray([sp.top_p], jnp.float32),
+                    jnp.asarray(rkey[None, :]))
                 if self.spec:
                     self.draft_pages = self._prefill_draft(
                         self.draft_params, jt, self.draft_pages, blocks,
@@ -491,6 +558,7 @@ class ContinuousBatchingEngine:
             return False
         (tokens, pos0, table, clen,
          first) = sched.prefill_batch(self.prefill_chunk)
+        temps, tks, tps, skeys, _ = sched.sampling_arrays()
         # prefilling slots run DENSE (refresh on): the chunk records fresh
         # union activity into their mask rows — the warm-mask harvest, and
         # harmless otherwise (an age-0 decode refresh overwrites it).
@@ -504,7 +572,8 @@ class ContinuousBatchingEngine:
                         jnp.asarray(clen))
         nxt, lp, self.pages, self.masks = self._prefill_chunk(
             self.params, self.pages, jt, jtok, jp, jc, self.masks,
-            jnp.asarray(refresh), jnp.asarray(keep))
+            jnp.asarray(refresh), jnp.asarray(keep), jnp.asarray(temps),
+            jnp.asarray(tks), jnp.asarray(tps), jnp.asarray(skeys))
         if self.spec:
             self.draft_pages = self._prefill_chunk_draft(
                 self.draft_params, self.draft_pages, jt, jtok, jp, jc)
@@ -549,10 +618,12 @@ class ContinuousBatchingEngine:
         """Decode one token for every active slot."""
         sched = self.scheduler
         tokens, pos, table, refresh = sched.batch_arrays()
+        temps, tks, tps, keys, gen = sched.sampling_arrays()
         nxt, lp, self.pages, self.masks, tiles, dens, act = self._decode(
             self.params, self.pages, jnp.asarray(table),
             jnp.asarray(tokens), jnp.asarray(pos), self.masks,
-            jnp.asarray(refresh))
+            jnp.asarray(refresh), jnp.asarray(temps), jnp.asarray(tks),
+            jnp.asarray(tps), jnp.asarray(keys), jnp.asarray(gen))
         self._account(active, np.asarray(dens), np.asarray(tiles), act)
         sched.record(np.asarray(nxt), np.asarray(lp))
 
@@ -562,11 +633,13 @@ class ContinuousBatchingEngine:
         density / recall telemetry comes back with the batch."""
         sched = self.scheduler
         tokens, pos, table, refresh = sched.batch_arrays()
+        temps, tks, tps, keys, gen = sched.sampling_arrays()
         (nxt, lp, self.pages, self.masks, tiles, dens, act, n_act,
          n_miss) = self._decode_pred(
             self.params, self.pages, jnp.asarray(table), jnp.asarray(tokens),
             jnp.asarray(pos), self.masks, jnp.asarray(refresh),
-            self.predictor.params)
+            self.predictor.params, jnp.asarray(temps), jnp.asarray(tks),
+            jnp.asarray(tps), jnp.asarray(keys), jnp.asarray(gen))
         dens_np = np.asarray(dens)
         na, nm = np.asarray(n_act), np.asarray(n_miss)
         self._account(active, dens_np, np.asarray(tiles), act)
@@ -580,23 +653,31 @@ class ContinuousBatchingEngine:
         """Speculative decode, batched across slots: γ draft tokens per
         slot from ONE jitted draft scan, then every slot's whole γ+1
         window through ONE jitted target forward. The only host traffic is
-        the (B, γ) proposal fetch and the (B, W) greedy/logprob fetch the
-        acceptance bookkeeping needs — no per-token round-trips."""
+        the (B, γ) proposal fetch and the (B, W) target-token/logprob fetch
+        the acceptance bookkeeping needs — no per-token round-trips. Both
+        the draft scan and the verify head consume the slots' shared
+        per-position key schedule, so sampled requests come out identical
+        to their autoregressive sampled streams (key-coupled acceptance —
+        serving/sampling.py)."""
         sched = self.scheduler
         tokens, pos0, table, wlen = sched.spec_batch(self.gamma + 1)
+        temps, tks, tps, keys, gen0 = sched.sampling_arrays()
         jt = jnp.asarray(table)
         jp, jw = jnp.asarray(pos0), jnp.asarray(wlen)
+        jtemps, jtks, jtps = (jnp.asarray(temps), jnp.asarray(tks),
+                              jnp.asarray(tps))
+        jkeys, jgen = jnp.asarray(keys), jnp.asarray(gen0)
         props, self.draft_pages = self._draft(
             self.draft_params, self.draft_pages, jt, jnp.asarray(tokens),
-            jp, jw)
+            jp, jw, jtemps, jtks, jtps, jkeys, jgen)
         window = np.concatenate([tokens[:, None], np.asarray(props)], axis=1)
-        greedy, lp, self.pages, self.masks, tiles, udens, act = self._verify(
+        target, lp, self.pages, self.masks, tiles, udens, act = self._verify(
             self.params, self.pages, jt, jnp.asarray(window), jp, jw,
-            self.masks)
+            self.masks, jtemps, jtks, jtps, jkeys, jgen)
         self._account(active, np.asarray(udens), np.asarray(tiles), act)
-        sched.record_spec(window, np.asarray(greedy), np.asarray(lp), wlen)
+        sched.record_spec(window, np.asarray(target), np.asarray(lp), wlen)
 
-    def run(self, max_steps: int = 1_000_000) -> Dict[int, RequestResult]:
+    def drain(self, max_steps: int = 1_000_000) -> Dict[int, RequestResult]:
         """Drive step() until every submitted request has finished.
 
         Never drops work silently: if step() makes no progress while
@@ -621,11 +702,18 @@ class ContinuousBatchingEngine:
         else:
             if self.scheduler.has_work():
                 raise RuntimeError(
-                    f"run(max_steps={max_steps}) exhausted with "
+                    f"drain(max_steps={max_steps}) exhausted with "
                     f"{len(self.scheduler.queue)} request(s) still queued "
                     f"or in flight")
         self.scheduler.retire_finished(self.t)
         return dict(self.scheduler.results)
+
+    def run(self, max_steps: int = 1_000_000) -> Dict[int, RequestResult]:
+        """Offline convenience: submit everything first, then run to
+        completion. A thin wrapper over ``drain`` — the online serving
+        layer (serving/api.py) interleaves submit()/cancel() with step()
+        instead and never calls this."""
+        return self.drain(max_steps)
 
     # -- metrics ------------------------------------------------------------
     def weight_io_saved(self) -> float:

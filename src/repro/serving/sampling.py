@@ -1,0 +1,219 @@
+"""Batched sampling head for the continuous-batching engine.
+
+One jitted computation serves every request in the slot batch, whatever its
+sampling configuration: temperature / top-k / top-p arrive as per-slot
+ARRAYS (never as static python values), so the decode / verify / prefill
+executables compile ONCE and a greedy request can sit next to a
+temperature-1.2 top-p-0.9 request in the same step. ``temperature == 0``
+rows take a dedicated greedy branch computed with exactly the formula the
+engine always used (argmax + full-softmax logprob), so all-greedy traffic
+through the sampling head is byte-identical to the historical greedy path.
+
+Determinism (the serving contract)
+----------------------------------
+Every request owns a PRNG key derived from ``(seed, request fingerprint)``
+— see ``request_prng_key``. The fingerprint hashes the prompt tokens and
+the distribution-shaping params (temperature / top-k / top-p), NOT the
+request uid, slot index, admission order, or ``max_new``:
+
+* the same seeded request replays the same stream regardless of
+  co-scheduled traffic (slot assignment and admission order do not touch
+  the key), across engine restarts and processes;
+* extending ``max_new`` extends the stream instead of reshuffling it (the
+  shorter stream is a prefix of the longer one).
+
+The g-th GENERATED token of a request (g = 0 is the token seeded from the
+prompt's last logits) is sampled with ``fold_in(request_key, g)`` — the
+"key schedule". Speculative mode samples the verify window's position j
+with the key of generated index ``len(out) + j``, and the draft proposes
+with the SAME schedule: acceptance keeps a proposal only while it equals
+the target's own sample at that position (``scheduler.record_spec``), so
+every emitted token is exactly the target's scheduled sample — the
+sampled stream is identical to the autoregressive sampled stream, for ANY
+draft, and the greedy-acceptance rule is recovered at temperature 0. (This
+key-coupled acceptance trades a slightly lower accept rate for imperfect
+drafts than ratio-test rejection sampling, in exchange for draft-invariant,
+replayable streams — the property the serving tests pin.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# temperature floor for the sampling branch: rows at/below 0 take the greedy
+# branch, so this only guards the discarded lane against inf/nan
+_MIN_TEMP = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    temperature: 0 (default) = greedy decoding — byte-identical to the
+        engine's historical greedy path. > 0 samples from the (filtered,
+        renormalized) softmax of logits / temperature.
+    top_k: keep only the k highest-probability tokens (0 = off).
+    top_p: nucleus sampling — keep the smallest prefix of the
+        probability-sorted vocabulary whose cumulative mass reaches top_p
+        (1.0 = off). Composes with top_k (intersection of both supports).
+    seed: PRNG seed for this request's key schedule. None uses the
+        engine's ``base_seed`` — identical unseeded requests then replay
+        identical streams (full determinism is a feature of this repo;
+        pass a fresh seed per request for varied completions).
+    stop: stop sequences, each a tuple of token ids. Generation halts as
+        soon as the produced stream ends with any of them (the stop tokens
+        are included in the output); ``RequestResult.finish_reason``
+        becomes "stop".
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    stop: Tuple[Tuple[int, ...], ...] = ()
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        # normalize stop to hashable nested tuples (callers pass lists)
+        object.__setattr__(self, "stop",
+                           tuple(tuple(int(t) for t in s) for s in self.stop))
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+# ---------------------------------------------------------------------------
+# request key schedule (host side)
+
+
+def request_fingerprint(tokens, sp: SamplingParams) -> int:
+    """Stable 64-bit fingerprint of WHAT is being sampled: the prompt and
+    the distribution-shaping params. Deliberately excludes uid / slot /
+    admission order (replay must not depend on co-scheduled traffic),
+    ``max_new`` (a longer budget extends the stream instead of reshuffling
+    it) and ``stop`` (stopping truncates, it does not change the
+    distribution). blake2b, not ``hash()`` — python's is salted per
+    process, which would break restart determinism."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes())
+    h.update(np.float64(sp.temperature).tobytes())
+    h.update(np.int64(sp.top_k).tobytes())
+    h.update(np.float64(sp.top_p).tobytes())
+    return int.from_bytes(h.digest(), "little")
+
+
+def request_prng_key(tokens, sp: SamplingParams,
+                     base_seed: int = 0) -> np.ndarray:
+    """The request's root PRNG key: PRNGKey(seed) folded with the request
+    fingerprint (two 31-bit folds — fold_in data must fit an int32).
+    Returns a host (2,) uint32 array the scheduler stores per slot."""
+    seed = sp.seed if sp.seed is not None else base_seed
+    fp = request_fingerprint(tokens, sp)
+    key = jax.random.PRNGKey(int(seed))
+    key = jax.random.fold_in(key, fp & 0x7FFFFFFF)
+    key = jax.random.fold_in(key, (fp >> 31) & 0x7FFFFFFF)
+    return np.asarray(key, np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# in-graph key derivation
+
+
+def position_keys(keys, gen):
+    """Per-slot key for one generated index. keys (B, 2) uint32 request
+    root keys; gen (B,) int32 generated-token indices -> (B, 2)."""
+    return jax.vmap(jax.random.fold_in)(keys, gen)
+
+
+def window_keys(keys, gen0, W: int):
+    """Keys for a W-token verify window: position j of slot b gets the key
+    of generated index gen0[b] + j. Returns (B, W, 2)."""
+    offs = jnp.arange(W, dtype=gen0.dtype)
+
+    def per_slot(k, g0):
+        return jax.vmap(lambda j: jax.random.fold_in(k, g0 + j))(offs)
+
+    return jax.vmap(per_slot)(keys, gen0)
+
+
+# ---------------------------------------------------------------------------
+# the jitted sampling head
+
+
+def filter_logits(logits, top_k, top_p, temperature):
+    """Temperature-scale then mask logits outside the top-k / top-p
+    support with -inf. logits (B, V) f32; per-row top_k (B,) int32
+    (0 = off), top_p (B,) f32, temperature (B,) f32. The resulting rows
+    renormalize over the surviving support (log_softmax of the output).
+
+    Ties at the k-th / nucleus-boundary value keep every tied token (the
+    support can only grow, never lose the argmax)."""
+    V = logits.shape[-1]
+    t = jnp.maximum(temperature, _MIN_TEMP)[:, None]
+    scaled = logits / t
+    svals = jnp.sort(scaled, axis=-1)[:, ::-1]  # descending
+    # top-k: threshold at the k-th largest value (k=0 -> keep everything)
+    k = jnp.clip(jnp.where(top_k > 0, top_k, V), 1, V)
+    kth = jnp.take_along_axis(svals, (k - 1)[:, None], axis=-1)
+    keep_k = scaled >= kth
+    # top-p: smallest sorted prefix whose cumulative mass reaches top_p —
+    # keep positions whose PRECEDING cumulative mass is < top_p (the first
+    # position always survives, so the support is never empty)
+    probs = jax.nn.softmax(svals, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    n_keep = jnp.sum((csum - probs) < top_p[:, None], axis=-1)
+    # top_p >= 1 must be EXACTLY off: f32 cumsum saturates at 1.0 once the
+    # head holds all the mass, which would silently drop underflowed tail
+    # tokens from the support
+    n_keep = jnp.where(top_p >= 1.0, V, n_keep)
+    pth = jnp.take_along_axis(svals, (n_keep - 1)[:, None], axis=-1)
+    keep_p = scaled >= pth
+    return jnp.where(keep_k & keep_p, scaled, -jnp.inf)
+
+
+def _sample_rows(logits, vocab: int, temperature, top_k, top_p, keys):
+    """(B, vocab_p) logits -> (next (B,), logprob (B,)). The greedy branch
+    is bit-for-bit the engine's historical greedy computation; sampled rows
+    report the logprob under the FILTERED, renormalized distribution."""
+    lv = logits[..., :vocab].astype(jnp.float32)
+    greedy_nxt = jnp.argmax(lv, axis=-1).astype(jnp.int32)
+    greedy_lp = jnp.take_along_axis(jax.nn.log_softmax(lv, axis=-1),
+                                    greedy_nxt[..., None], -1)[..., 0]
+    filt = filter_logits(lv, top_k, top_p, temperature)
+    samp = jax.vmap(jax.random.categorical)(keys, filt).astype(jnp.int32)
+    samp_lp = jnp.take_along_axis(jax.nn.log_softmax(filt, axis=-1),
+                                  samp[..., None], -1)[..., 0]
+    g = temperature <= 0.0
+    return jnp.where(g, greedy_nxt, samp), jnp.where(g, greedy_lp, samp_lp)
+
+
+def sample_head(logits, vocab: int, temperature, top_k, top_p, keys):
+    """The engine's one jitted sampling head. logits (..., vocab_p) with
+    any leading batch shape (slot batch, or slot x window); temperature /
+    top_k / top_p must carry that same batch shape (callers broadcast the
+    per-slot arrays over a window axis); keys (..., 2) uint32 per-position
+    PRNG keys from ``position_keys`` / ``window_keys``.
+
+    Everything is a traced array, so one trace serves every mix of greedy
+    and sampled requests — the decode step never retraces on sampling
+    config. Returns (next_token (...,) int32, logprob (...,) f32)."""
+    batch = logits.shape[:-1]
+    nxt, lp = _sample_rows(logits.reshape((-1,) + logits.shape[-1:]), vocab,
+                           jnp.asarray(temperature).reshape(-1),
+                           jnp.asarray(top_k).reshape(-1),
+                           jnp.asarray(top_p).reshape(-1),
+                           keys.reshape(-1, 2))
+    return nxt.reshape(batch), lp.reshape(batch)

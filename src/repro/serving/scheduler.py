@@ -49,11 +49,14 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.models.common import SCRATCH_BLOCK
+
+if TYPE_CHECKING:  # scheduler stays host-only; sampling.py pulls in jax
+    from repro.serving.sampling import SamplingParams
 
 
 @dataclasses.dataclass
@@ -64,6 +67,11 @@ class Request:
     # γ-window weight reuse (paper Fig. 7c): refresh the FFN mask every γ
     # decoded tokens; 0 = dense (refresh every step, mask never binds).
     reuse_window: int = 0
+    # per-request sampling config (None = greedy) and the request's root
+    # PRNG key ((2,) uint32, sampling.request_prng_key) — derived from
+    # (seed, request fingerprint), never from uid/slot/admission order
+    sampling: Optional["SamplingParams"] = None
+    key: Optional[np.ndarray] = None
 
     @property
     def prompt_len(self) -> int:
@@ -94,6 +102,9 @@ class RequestResult:
     # actually read (1.0 = dense) — the per-request half of the engine's
     # weight_io_bytes_per_step() per-device accounting
     ffn_read_fraction: float = 1.0
+    # why generation ended: "length" (max_new budget), "stop" (a stop
+    # sequence matched) or "cancelled" (client abandoned the request)
+    finish_reason: str = "length"
 
     @property
     def accept_rate(self) -> float:
@@ -120,6 +131,14 @@ class RequestQueue:
 
     def uids(self) -> List[int]:
         return [r.uid for r in self._q]
+
+    def remove(self, uid: int) -> Optional[Request]:
+        """Withdraw a queued request (cancellation before admission)."""
+        for r in self._q:
+            if r.uid == uid:
+                self._q.remove(r)
+                return r
+        return None
 
     def __len__(self) -> int:
         return len(self._q)
@@ -332,10 +351,12 @@ class _Slot:
     # per-step FFN weight-read fraction (all modes; engine._account feeds it)
     io_dens_sum: float = 0.0
     io_steps: int = 0
+    # early-finish marker ("stop" / "cancelled"); None = run to max_new
+    finish: Optional[str] = None
 
     @property
     def done(self) -> bool:
-        return len(self.out) >= self.request.max_new
+        return self.finish is not None or len(self.out) >= self.request.max_new
 
     @property
     def prefilling(self) -> bool:
@@ -421,6 +442,7 @@ class Scheduler:
                     cached_prompt_tokens=slot.cached_tokens,
                     ffn_read_fraction=(slot.io_dens_sum / slot.io_steps
                                        if slot.io_steps else 1.0),
+                    finish_reason=slot.finish or "length",
                 )
                 retired.append(slot.request.uid)
                 self.slots[i] = None
@@ -468,6 +490,41 @@ class Scheduler:
             admitted.append((i, slot))
         return admitted
 
+    def cancel(self, uid: int) -> bool:
+        """Abandon a request. Queued: withdrawn immediately (an empty
+        "cancelled" RequestResult is synthesized so waiters always observe
+        a terminal result). Slotted and unfinished: marked finished — the
+        next ``retire_finished`` frees its blocks and emits its partial
+        output with ``finish_reason="cancelled"``. Returns False if the
+        uid is unknown or already finished."""
+        req = self.queue.remove(uid)
+        if req is not None:
+            self.results[uid] = RequestResult(
+                uid=uid, tokens=np.zeros((0,), np.int32),
+                logprobs=np.zeros((0,), np.float32),
+                prompt_len=req.prompt_len, admitted_step=-1,
+                finished_step=-1, finish_reason="cancelled")
+            return True
+        for s in self.slots:
+            if s is not None and s.request.uid == uid and not s.done:
+                s.finish = "cancelled"
+                return True
+        return False
+
+    @staticmethod
+    def _hits_stop(out: List[int], stop) -> bool:
+        return any(s and len(out) >= len(s) and tuple(out[-len(s):]) == s
+                   for s in stop)
+
+    def _check_stop(self, slot: _Slot) -> bool:
+        """Mark the slot finished if its output now ends with one of the
+        request's stop sequences (the stop tokens stay in the output)."""
+        sp = slot.request.sampling
+        if (slot.finish is None and sp is not None and sp.stop
+                and self._hits_stop(slot.out, sp.stop)):
+            slot.finish = "stop"
+        return slot.finish is not None
+
     def seed(self, slot: _Slot, token: int, logprob: float) -> None:
         """Record the first generated token (from the prefill logits),
         marking prefill complete and registering the prompt's full blocks
@@ -475,6 +532,7 @@ class Scheduler:
         slot.prefilled = slot.request.prompt_len
         slot.out.append(int(token))
         slot.lps.append(float(logprob))
+        self._check_stop(slot)
         if self.prefix is not None:
             self.prefix.insert(slot.request.tokens, slot.blocks,
                                self.block_size, self.allocator)
@@ -517,6 +575,33 @@ class Scheduler:
                 # instead of a dense refresh
                 refresh[i] = False
         return tokens, pos, table, refresh
+
+    def sampling_arrays(self):
+        """Fixed-shape per-slot sampling state for the jitted sampling head:
+        (temperature (B,) f32, top_k (B,) i32, top_p (B,) f32, request root
+        keys (B, 2) u32, gen (B,) i32). ``gen`` is the slot's next
+        generated-token index (len(out) — the key-schedule position), valid
+        for both decode (the token sampled this step) and the base index of
+        a speculative verify window. Idle/greedy slots read as temperature 0
+        → the head's greedy branch; their keys are never consumed."""
+        B = self.n_slots
+        temps = np.zeros((B,), np.float32)
+        top_ks = np.zeros((B,), np.int32)
+        top_ps = np.ones((B,), np.float32)
+        keys = np.zeros((B, 2), np.uint32)
+        gen = np.zeros((B,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            sp = s.request.sampling
+            if sp is not None:
+                temps[i] = sp.temperature
+                top_ks[i] = sp.top_k
+                top_ps[i] = sp.top_p
+            if s.request.key is not None:
+                keys[i] = s.request.key
+            gen[i] = len(s.out)
+        return temps, top_ks, top_ps, keys, gen
 
     def prefill_batch(self, chunk: int):
         """Fixed-shape arrays for one chunked-prefill step: the next
@@ -584,6 +669,7 @@ class Scheduler:
             s.age += 1
             s.out.append(int(next_tokens[i]))
             s.lps.append(float(logprobs[i]))
+            self._check_stop(s)
             if pred_density is not None:
                 s.pred_dens_sum += float(pred_density[i])
                 s.pred_steps += 1
@@ -635,34 +721,49 @@ class Scheduler:
             table[i, : len(s.blocks)] = s.blocks
         return tokens, pos0, table, wlen
 
-    def record_spec(self, window: np.ndarray, greedy: np.ndarray,
+    def record_spec(self, window: np.ndarray, target: np.ndarray,
                     logprobs: np.ndarray, wlen: np.ndarray) -> None:
-        """Greedy acceptance + KV rewind bookkeeping for one verify step.
+        """Acceptance + KV rewind bookkeeping for one verify step.
 
-        window: (B, W) = [current token, draft proposals...]; greedy /
-        logprobs: (B, W) the target's argmax continuation (and its logprob)
-        at every window position; wlen: (B,) valid window lengths.
+        window: (B, W) = [current token, draft proposals...]; target /
+        logprobs: (B, W) the target model's own continuation (and its
+        logprob) at every window position — the argmax for greedy requests,
+        or the token the target SAMPLES with that position's scheduled key
+        (sampling.window_keys) for sampled ones; wlen: (B,) valid window
+        lengths.
 
         Per slot: accept the longest prefix of proposals that equals the
-        target's own greedy continuation, then the target's correction /
-        continuation token — exactly Leviathan greedy acceptance, so the
-        output stream is identical to pure autoregressive decoding. The KV
-        rewind is this bookkeeping: advancing ``age`` by only the accepted
-        length rolls ``next_pos`` back over the rejected tail, whose stale
-        K/V is overwritten by the next window (and masked by position until
-        then). Blocks are never allocated per-window-token, so rejection
-        leaks nothing past the scratch-block-0 invariant."""
+        target's own continuation, then the target's correction /
+        continuation token. For greedy requests this is exactly Leviathan
+        greedy acceptance; for sampled requests it is key-coupled
+        acceptance — every emitted token is the target's scheduled sample,
+        so either way the output stream is identical to pure autoregressive
+        decoding (greedy or sampled under the same key schedule), for any
+        draft. The KV rewind is this bookkeeping: advancing ``age`` by only
+        the emitted length rolls ``next_pos`` back over the rejected tail,
+        whose stale K/V is overwritten by the next window (and masked by
+        position until then). Blocks are never allocated per-window-token,
+        so rejection leaks nothing past the scratch-block-0 invariant.
+
+        A stop-sequence match inside the window truncates it: tokens after
+        the match are discarded (exactly what autoregressive decoding
+        would never have produced) and the slot finishes with "stop"."""
         for i in self.active_indices():
             s = self.slots[i]
             n_prop = int(wlen[i]) - 1
             n_acc = 0
             while (n_acc < n_prop
-                   and int(window[i, n_acc + 1]) == int(greedy[i, n_acc])):
+                   and int(window[i, n_acc + 1]) == int(target[i, n_acc])):
                 n_acc += 1
-            # produced = accepted proposals (== greedy[:n_acc]) + correction
-            s.out.extend(int(t) for t in greedy[i, : n_acc + 1])
-            s.lps.extend(float(x) for x in logprobs[i, : n_acc + 1])
-            s.age += n_acc + 1
+            # produced = accepted proposals (== target[:n_acc]) + correction
+            n_emit = 0
+            for j in range(n_acc + 1):
+                s.out.append(int(target[i, j]))
+                s.lps.append(float(logprobs[i, j]))
+                n_emit += 1
+                if self._check_stop(s) or len(s.out) >= s.request.max_new:
+                    break
+            s.age += n_emit
             s.draft_proposed += n_prop
-            s.draft_accepted += n_acc
+            s.draft_accepted += min(n_acc, n_emit)
             s.target_calls += 1

@@ -1,0 +1,236 @@
+"""Async streaming API tests (serving/api.py + launch/serve_api.py).
+
+The serving contract: the async layer changes WHEN tokens surface, never
+WHICH tokens — f32 greedy streams through ``AsyncServingEngine`` are
+byte-identical to offline ``engine.run()`` in all three serving modes.
+Plus: co-scheduled streams interleave (a short request's first token beats
+a long request's finish), mid-stream disconnects cancel cleanly, and the
+in-process HTTP/SSE wire path round-trips.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve_api import ApiServer, build_engine, parse_args
+from repro.serving import AsyncServingEngine, SamplingParams
+
+TIMEOUT_S = 300.0
+
+BASE_ARGS = ["--arch", "tiny-relu", "--f32", "--n-slots", "2",
+             "--block-size", "8", "--max-blocks", "4", "--gamma", "2"]
+
+
+def _engine(mode: str = "plain"):
+    return build_engine(parse_args(BASE_ARGS + ["--mode", mode]))
+
+
+def _prompts(n: int = 4, seed: int = 0):
+    vocab = get_config("tiny-relu").vocab_size
+    rng = np.random.RandomState(seed)
+    return [[int(t) for t in rng.randint(0, vocab, 3 + 2 * i)]
+            for i in range(n)]
+
+
+def _run(coro):
+    return asyncio.run(asyncio.wait_for(coro, TIMEOUT_S))
+
+
+async def _collect(api, prompt, max_new, **kw):
+    """Stream one request; returns (streamed tokens, streamed logprobs,
+    terminal event)."""
+    tokens, lps, final = [], [], None
+    async for ev in api.stream(prompt, max_new, **kw):
+        if ev.finished:
+            final = ev
+        else:
+            tokens.append(ev.token)
+            lps.append(ev.logprob)
+    return tokens, lps, final
+
+
+@pytest.mark.parametrize("mode", ["plain", "spec", "predictor"])
+def test_greedy_streams_byte_identical_to_engine_run(mode):
+    """The tentpole exactness contract, per serving mode. One engine serves
+    both paths (offline run() first, then the async API) so the comparison
+    is over identical weights and identical jitted executables."""
+    eng = _engine(mode)
+    prompts = _prompts(4)
+    budgets = [4 + i % 3 for i in range(len(prompts))]
+
+    uids = [eng.submit(p, m) for p, m in zip(prompts, budgets)]
+    ref = eng.run()
+
+    async def serve():
+        async with AsyncServingEngine(eng) as api:
+            return await asyncio.gather(*[
+                _collect(api, p, m) for p, m in zip(prompts, budgets)])
+
+    got = _run(serve())
+    for uid, m, (tokens, lps, final) in zip(uids, budgets, got):
+        want = ref[uid]
+        assert tokens == [int(t) for t in want.tokens]
+        np.testing.assert_array_equal(
+            np.asarray(lps, np.float32),
+            np.asarray([float(x) for x in want.logprobs], np.float32))
+        # terminal event mirrors the stream and carries latency metrics
+        assert final is not None and final.finish_reason == "length"
+        assert tokens == [int(t) for t in final.result.tokens]
+        assert len(tokens) == m
+        assert final.ttft_s is not None and final.ttft_s >= 0.0
+        assert final.total_s is not None and final.total_s >= final.ttft_s
+
+
+def test_streams_interleave_across_requests():
+    """A short request co-scheduled next to a long one streams its first
+    token BEFORE the long request finishes — the async layer surfaces
+    tokens per step, not per retirement."""
+    eng = _engine("plain")
+    p_long, p_short = _prompts(2, seed=3)
+    order = []
+
+    async def client(api, tag, prompt, max_new):
+        async for ev in api.stream(prompt, max_new):
+            order.append((tag, "done" if ev.finished else ev.index))
+
+    async def serve():
+        async with AsyncServingEngine(eng) as api:
+            await asyncio.gather(client(api, "long", p_long, 12),
+                                 client(api, "short", p_short, 3))
+
+    _run(serve())
+    short_first = order.index(("short", 0))
+    long_done = order.index(("long", "done"))
+    assert short_first < long_done, order
+    # and the short stream fully retired while the long one kept going
+    assert order.index(("short", "done")) < long_done, order
+
+
+def test_midstream_disconnect_cancels_and_serving_continues():
+    """Breaking out of events() (the client-disconnect path) retires the
+    request with finish_reason "cancelled" and partial output; the engine
+    keeps serving other traffic with identical results."""
+    eng = _engine("plain")
+    p0, p1 = _prompts(2, seed=5)
+    ref_uid = eng.submit(p1, 5)
+    ref = eng.run()[ref_uid]
+
+    async def serve():
+        async with AsyncServingEngine(eng) as api:
+            uid = await api.submit(p0, 12)
+            got = []
+            async for ev in api.events(uid):
+                got.append(ev.token)
+                if len(got) >= 2:
+                    break  # closes the generator -> cancel(uid)
+            tokens, lps, final = await _collect(api, p1, 5)
+            return uid, got, tokens, final
+
+    uid, got, tokens, final = _run(serve())
+    res = eng.scheduler.results[uid]
+    assert res.finish_reason == "cancelled"
+    assert len(res.tokens) < 12  # partial output only
+    assert [int(t) for t in res.tokens][:2] == got
+    assert tokens == [int(t) for t in ref.tokens]
+    assert final.finish_reason == "length"
+
+
+def test_submit_validation_surfaces_to_the_caller():
+    eng = _engine("plain")
+
+    async def serve():
+        async with AsyncServingEngine(eng) as api:
+            with pytest.raises(ValueError, match="max_new"):
+                await api.submit(_prompts(1)[0], 0)
+            with pytest.raises(ValueError, match="empty prompt"):
+                await api.submit([], 4)
+            with pytest.raises(ValueError, match="blocks"):
+                await api.submit(list(range(100)), 4)
+            # the loop is still healthy after rejects
+            ev = await api.generate(_prompts(1)[0], 3)
+            assert ev.finish_reason == "length"
+
+    _run(serve())
+
+
+# -- in-process HTTP/SSE wire path -------------------------------------------
+
+
+async def _http(port, method, path, body=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    raw = json.dumps(body).encode() if body is not None else b""
+    writer.write(f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                 f"Content-Length: {len(raw)}\r\n\r\n".encode() + raw)
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionResetError, BrokenPipeError):
+        pass
+    head, _, payload = data.partition(b"\r\n\r\n")
+    return head.split(b" ", 2)[1].decode(), payload
+
+
+def _parse_sse(payload: bytes):
+    tokens, final, done = [], None, False
+    for frame in payload.split(b"\n\n"):
+        for line in frame.splitlines():
+            if not line.startswith(b"data: "):
+                continue
+            if line[6:] == b"[DONE]":
+                done = True
+            else:
+                ev = json.loads(line[6:])
+                if ev.get("done"):
+                    final = ev
+                else:
+                    tokens.append(ev["token"])
+    return tokens, final, done
+
+
+def test_http_sse_roundtrip():
+    eng = _engine("plain")
+    prompt = _prompts(1, seed=9)[0]
+    ref_uid = eng.submit(prompt, 4)
+    ref = [int(t) for t in eng.run()[ref_uid].tokens]
+
+    async def serve():
+        async with AsyncServingEngine(eng) as api:
+            server = ApiServer(api, mode="plain")
+            await server.start(port=0)
+            try:
+                status, body = await _http(server.port, "GET", "/healthz")
+                assert status == "200" and json.loads(body)["ok"]
+
+                status, body = await _http(
+                    server.port, "POST", "/v1/generate",
+                    {"prompt": prompt, "max_new": 4})
+                assert status == "200"
+                tokens, final, done = _parse_sse(body)
+                assert done and final is not None
+                assert tokens == final["tokens"] == ref
+                assert final["finish_reason"] == "length"
+                assert final["ttft_s"] is not None
+
+                status, body = await _http(
+                    server.port, "POST", "/v1/generate",
+                    {"prompt": prompt, "max_new": 4, "stream": False,
+                     "temperature": 0.9, "top_k": 8, "seed": 1})
+                assert status == "200"
+                one = json.loads(body)
+                assert one["done"] and len(one["tokens"]) == 4
+
+                status, body = await _http(server.port, "POST",
+                                           "/v1/generate", {"max_new": 4})
+                assert status == "400" and b"prompt" in body
+                status, _ = await _http(server.port, "GET", "/nope")
+                assert status == "404"
+            finally:
+                await server.aclose()
+
+    _run(serve())

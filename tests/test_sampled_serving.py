@@ -1,0 +1,187 @@
+"""Sampled decoding through the serving engine (determinism + spec mode).
+
+Pins the serving contracts that make sampling production-safe here:
+
+* restart determinism — a seeded request replays the SAME stream across
+  engine instances and under shuffled admission order (the PRNG key hangs
+  off (seed, request fingerprint), never uid/slot/admission order);
+* speculative exactness under sampling — key-coupled acceptance makes the
+  sampled spec stream identical to the autoregressive sampled stream for
+  ANY draft (a junk draft only costs accept rate, never changes tokens),
+  and a perfect draft accepts everything;
+* temperature 0 with a seed is byte-identical to the greedy path;
+* stop sequences truncate identically in AR and spec modes;
+* the jitted decode step never retraces on sampling config (params are
+  traced arrays, not static values).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve_api import build_engine, parse_args
+from repro.models import registry
+from repro.serving import ContinuousBatchingEngine, SamplingParams
+
+BASE_ARGS = ["--arch", "tiny-relu", "--f32", "--n-slots", "2",
+             "--block-size", "8", "--max-blocks", "4", "--gamma", "2"]
+
+
+def _engine(mode: str = "plain", extra=()):
+    return build_engine(parse_args(BASE_ARGS + ["--mode", mode]
+                                   + list(extra)))
+
+
+def _prompts(n: int = 4, seed: int = 0):
+    vocab = get_config("tiny-relu").vocab_size
+    rng = np.random.RandomState(seed)
+    return [[int(t) for t in rng.randint(0, vocab, 3 + 2 * i)]
+            for i in range(n)]
+
+
+def _workload():
+    """(prompt, max_new, sampling) triples: seeded sampled, unseeded
+    sampled, and greedy traffic sharing the batch."""
+    ps = _prompts(4)
+    return [
+        (ps[0], 6, SamplingParams(temperature=0.9, top_k=40, seed=11)),
+        (ps[1], 7, SamplingParams(temperature=1.2, top_p=0.9, seed=12)),
+        (ps[2], 6, SamplingParams(temperature=0.8)),  # base_seed key
+        (ps[3], 5, None),                             # greedy
+    ]
+
+
+def _serve(eng, work, order=None):
+    """Submit ``work`` (optionally permuted) and drain; returns results
+    keyed by WORK INDEX so callers compare across admission orders."""
+    order = list(order if order is not None else range(len(work)))
+    uids = {}
+    for i in order:
+        p, m, sp = work[i]
+        uids[i] = eng.submit(p, m, sampling=sp)
+    res = eng.run()
+    return {i: res[u] for i, u in uids.items()}
+
+
+def _toks(r):
+    return [int(t) for t in r.tokens]
+
+
+def test_seeded_sampling_is_restart_deterministic_under_shuffled_admission():
+    """Regression (satellite bugfix): the per-request key must not depend
+    on uid, slot, or admission order — a fresh engine admitting the same
+    requests in a different order replays identical streams."""
+    work = _workload()
+    a = _serve(_engine(), work)
+    b = _serve(_engine(), work, order=[2, 0, 3, 1])
+    for i in range(len(work)):
+        assert _toks(a[i]) == _toks(b[i]), f"request {i} stream changed"
+        np.testing.assert_array_equal(
+            np.asarray(a[i].logprobs, np.float32),
+            np.asarray(b[i].logprobs, np.float32))
+
+
+def test_spec_sampled_stream_equals_autoregressive():
+    """Key-coupled acceptance: the spec engine's sampled output is the
+    target's scheduled sample at every position, so ANY draft — here a
+    1-layer randomly initialised one — yields the exact AR stream."""
+    work = _workload()
+    ar = _serve(_engine("plain"), work)
+    sp = _serve(_engine("spec"), work)
+    for i in range(len(work)):
+        assert _toks(ar[i]) == _toks(sp[i]), f"request {i} diverged"
+        np.testing.assert_array_equal(
+            np.asarray(ar[i].logprobs, np.float32),
+            np.asarray(sp[i].logprobs, np.float32))
+    # drafts were really proposed (exactness must not come from gamma=0)
+    assert all(sp[i].draft_proposed > 0 for i in range(len(work)))
+
+
+def test_spec_with_target_as_draft_accepts_everything():
+    """A perfect draft (the target itself) passes key-coupled acceptance
+    at every position: accept_rate 1.0, stream unchanged."""
+    cfg = get_config("tiny-relu").replace(compute_dtype="float32")
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatchingEngine(
+        cfg, params, n_slots=2, block_size=8, max_blocks_per_seq=4,
+        draft_cfg=cfg, draft_params=params, gamma=2)
+    work = _workload()
+    got = _serve(eng, work)
+    ar = _serve(_engine("plain"), work)
+    for i in range(len(work)):
+        assert _toks(got[i]) == _toks(ar[i])
+        assert got[i].accept_rate == 1.0, (
+            f"request {i}: perfect draft accept_rate {got[i].accept_rate}")
+
+
+def test_temperature_zero_with_seed_is_the_greedy_path():
+    p = _prompts(1, seed=4)[0]
+    eng = _engine()
+    u_greedy = eng.submit(p, 6)
+    u_seeded = eng.submit(p, 6, sampling=SamplingParams(temperature=0.0,
+                                                        seed=123,
+                                                        top_k=5, top_p=0.5))
+    res = eng.run()
+    assert _toks(res[u_greedy]) == _toks(res[u_seeded])
+    np.testing.assert_array_equal(
+        np.asarray(res[u_greedy].logprobs, np.float32),
+        np.asarray(res[u_seeded].logprobs, np.float32))
+    assert res[u_seeded].finish_reason == "length"
+
+
+def _stop_truncate(tokens, stop):
+    """First emitted position at which the stream ends with a stop
+    sequence (tokens can repeat — scan, don't search)."""
+    for n in range(1, len(tokens) + 1):
+        out = tokens[:n]
+        if any(len(s) <= n and tuple(out[-len(s):]) == tuple(s)
+               for s in stop):
+            return out
+    return tokens
+
+
+@pytest.mark.parametrize("mode", ["plain", "spec"])
+def test_stop_sequences_truncate_the_stream(mode):
+    p = _prompts(1, seed=7)[0]
+    full = _toks(_serve(_engine(mode), [(p, 8, None)])[0])
+    stop = ((full[2], full[3]),)
+    want = _stop_truncate(full, stop)
+    assert len(want) < len(full)  # the stop really binds
+
+    eng = _engine(mode)
+    u = eng.submit(p, 8, sampling=SamplingParams(stop=stop))
+    r = eng.run()[u]
+    assert _toks(r) == want
+    assert r.finish_reason == "stop"
+    # a length-1 stop on the prompt-seeded token halts immediately
+    u2 = eng.submit(p, 8, sampling=SamplingParams(stop=((full[0],),)))
+    r2 = eng.run()[u2]
+    assert _toks(r2) == [full[0]] and r2.finish_reason == "stop"
+
+
+def test_base_seed_keys_unseeded_requests():
+    """Requests without a seed draw their key from the engine's base_seed:
+    same base_seed -> identical replay, different base_seed -> a different
+    (still deterministic) stream."""
+    p = _prompts(1, seed=8)[0]
+    work = [(p, 8, SamplingParams(temperature=1.0))]
+    a = _toks(_serve(_engine(extra=["--base-seed", "0"]), work)[0])
+    b = _toks(_serve(_engine(extra=["--base-seed", "0"]), work)[0])
+    c = _toks(_serve(_engine(extra=["--base-seed", "99"]), work)[0])
+    assert a == b
+    assert a != c
+
+
+def test_decode_never_retraces_on_sampling_config():
+    """Mixed greedy + seeded + unseeded traffic with distinct temperature /
+    top-k / top-p settings must reuse ONE decode executable — sampling
+    params enter as traced arrays."""
+    eng = _engine()
+    _serve(eng, _workload())
+    _serve(eng, [(_prompts(1, seed=6)[0], 4,
+                  SamplingParams(temperature=2.0, top_k=3, top_p=0.4,
+                                 seed=77))])
+    assert eng._decode._cache_size() == 1
