@@ -44,6 +44,13 @@ ZERO_COLLAPSE_KEYS = ("weight_io_saved_gamma4", "spec_s_agg_gamma4",
 # step, a lost wakeup), not a 10% scheduling wobble. Only active once a
 # committed baseline records the key.
 LATENCY_KEYS = ("api_ttft_ms", "api_tpot_ms")
+# absolute-bounds headlines: gated against FIXED bounds, not the baseline —
+# kernel_bytes_ratio is (fused-kernel BlockSpec-modeled HBM bytes/step) /
+# (engine density-accounted bytes/step); the two are independent
+# derivations of the same quantity, so any drift outside ±15% means the
+# kernel geometry and the serving accounting no longer describe the same
+# machine. Gated whenever the fresh run records the key.
+ABSOLUTE_BOUNDS = {"kernel_bytes_ratio": (0.85, 1.15)}
 
 
 def _pr_num(path: str) -> int:
@@ -101,6 +108,14 @@ def check(fresh: dict, baseline: dict, tolerance: float,
             bad.append(f"{key}: was {b} in baseline, now "
                        f"{'missing' if f is None else f} — sparsity "
                        "machinery silently collapsed")
+    for key, (lo, hi) in ABSOLUTE_BOUNDS.items():
+        b, f = bh.get(key), fh.get(key)
+        if f is None and b is not None:
+            bad.append(f"{key}: recorded in baseline ({b}) but missing in "
+                       "fresh run — kernel roofline gate silently dropped")
+        elif f is not None and not (lo <= f <= hi):
+            bad.append(f"{key}: {f:.4f} outside [{lo}, {hi}] — kernel "
+                       "modeled bytes and engine accounting drifted apart")
     return bad
 
 

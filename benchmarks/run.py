@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.appE_scaling",
     "benchmarks.serving_throughput",
     "benchmarks.predictor_sparsity",
+    "benchmarks.kernel_bench",
 ]
 
 # training-free modules that exercise the kernel + serving hot paths; the CI
@@ -38,6 +39,7 @@ SMOKE_MODULES = [
     "benchmarks.fig7_spec_decode",
     "benchmarks.serving_throughput",
     "benchmarks.predictor_sparsity",
+    "benchmarks.kernel_bench",
 ]
 
 
@@ -53,7 +55,7 @@ def run_module(mod_name: str) -> None:
         print(r, flush=True)
 
 
-PR_TAG = os.environ.get("BENCH_PR", "pr6")
+PR_TAG = os.environ.get("BENCH_PR", "pr7")
 
 
 def write_trajectory(tag: str = PR_TAG) -> str:
@@ -73,6 +75,7 @@ def write_trajectory(tag: str = PR_TAG) -> str:
         except (OSError, ValueError):  # a failed module's partial file
             continue
     serving = sources.get("bench_serving.json", {})
+    kernels = sources.get("bench_kernels.json", {})
     out = {
         "pr": tag,
         "headline": {
@@ -91,6 +94,11 @@ def write_trajectory(tag: str = PR_TAG) -> str:
                 serving.get("cb_api_stream_tokens_per_s"),
             "api_ttft_ms": serving.get("cb_api_stream_ttft_ms"),
             "api_tpot_ms": serving.get("cb_api_stream_tpot_ms"),
+            "kernel_bytes_ratio": kernels.get("kernel_bytes_ratio"),
+            "kernel_ffn_fused_us":
+                (kernels.get("ffn_fused_kernel") or {}).get("us_per_call"),
+            "kernel_attn_fused_us":
+                (kernels.get("attn_fused_kernel") or {}).get("us_per_call"),
         },
         "sources": sources,
     }

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 TILE = 128  # lane-width tile the activity scores are reduced over
 
@@ -77,7 +79,7 @@ def _make_kernel_tokens(shift: float):
 @functools.partial(jax.jit,
                    static_argnames=("shift", "block_f", "interpret"))
 def fused_up_relu(x, wu, shift: float = 0.0, *, block_f: int = 512,
-                  interpret: bool = True):
+                  interpret=None):
     """x: (T, d), wu: (d, F) -> (h (T, F) f32, scores (1, F/128) f32)."""
     T, d = x.shape
     F = wu.shape[1]
@@ -99,7 +101,7 @@ def fused_up_relu(x, wu, shift: float = 0.0, *, block_f: int = 512,
             jax.ShapeDtypeStruct((T, F), jnp.float32),
             jax.ShapeDtypeStruct((1, F // 128), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, wu)
     return h, scores[0]
 
@@ -107,7 +109,7 @@ def fused_up_relu(x, wu, shift: float = 0.0, *, block_f: int = 512,
 @functools.partial(jax.jit,
                    static_argnames=("shift", "block_f", "interpret"))
 def fused_up_relu_tokens(x, wu, shift: float = 0.0, *, block_f: int = 512,
-                         interpret: bool = True):
+                         interpret=None):
     """Per-token variant for continuous-batching serving: every request in
     the batch keeps its OWN activity scores (the batch-union reduction of
     ``fused_up_relu`` would couple co-scheduled requests).
@@ -133,7 +135,7 @@ def fused_up_relu_tokens(x, wu, shift: float = 0.0, *, block_f: int = 512,
             jax.ShapeDtypeStruct((T, F), jnp.float32),
             jax.ShapeDtypeStruct((T, F // TILE), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, wu)
     return h, scores
 
@@ -141,7 +143,7 @@ def fused_up_relu_tokens(x, wu, shift: float = 0.0, *, block_f: int = 512,
 @functools.partial(jax.jit,
                    static_argnames=("shift", "block_f", "interpret"))
 def fused_up_relu_window(x, wu, shift: float = 0.0, *, block_f: int = 512,
-                         interpret: bool = True):
+                         interpret=None):
     """γ-window variant for speculative verification: all W window tokens of
     every slot pass through the up-projection once, and the activity scores
     come back ALREADY unioned over each slot's window — the selection input
@@ -170,6 +172,6 @@ def fused_up_relu_window(x, wu, shift: float = 0.0, *, block_f: int = 512,
             jax.ShapeDtypeStruct((B * W, F), jnp.float32),
             jax.ShapeDtypeStruct((B, F // TILE), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x.reshape(B * W, d), wu)
     return h.reshape(B, W, F), scores

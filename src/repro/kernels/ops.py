@@ -31,7 +31,7 @@ def select_tiles_static(scores, density: float):
 
 @functools.partial(jax.jit, static_argnames=("density", "shift", "interpret"))
 def sparse_ffn_apply(x, wu, wd, *, density: float = 0.25, shift: float = 0.0,
-                     interpret: bool = True):
+                     interpret=None):
     """Full sparse FFN hot path: h = relu(x@wu − b); y = h @ wd over the
     top-⌈density·F/128⌉ active tiles only. Returns (y, h, idx, nvalid)."""
     h, scores = fused_up_relu(x, wu, shift, interpret=interpret)

@@ -1,0 +1,21 @@
+"""Shared kernel-runtime policy for every Pallas kernel in this package.
+
+One rule, one place: ``interpret=None`` (the default everywhere) autodetects
+the backend — interpret mode on CPU (this container, CI), compiled Mosaic
+on TPU — and an explicit bool always overrides, so tests can force either
+lowering. Kernels must not hardcode ``interpret=True``: that silently pins
+TPU callers to the emulator and the memory-bound win the paper promises
+never materializes (ISSUE 7 satellite: unify interpret-mode defaults).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> interpret iff running on CPU (explicit bool overrides)."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)

@@ -46,12 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _resolve_interpret(interpret) -> bool:
-    """None -> interpret iff running on CPU (explicit bool overrides)."""
-    if interpret is None:
-        return jax.default_backend() == "cpu"
-    return bool(interpret)
+from repro.kernels.runtime import resolve_interpret as _resolve_interpret
 
 
 def _kernel(idx_ref, nvalid_ref, x_ref, w_ref, o_ref):

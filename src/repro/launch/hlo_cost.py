@@ -189,6 +189,7 @@ class CostModel:
         self.wire = 0.0
         self.coll = defaultdict(float)
         self.coll_counts = defaultdict(int)
+        self.dots: List[Tuple[float, str, Tuple[int, ...], str]] = []  # (scale, rhs dtype, rhs shape, op_name)
         self.top_ops: List[Tuple[float, float, str, str]] = []  # (bytes, flops, opcode, meta)
         self._walk(self.comps[self.entry], 1.0)
         self.top_ops.sort(reverse=True)
@@ -252,7 +253,7 @@ class CostModel:
             in_b += min(tb, out_b) if out_b > 0 else tb
         return out_b + in_b
 
-    def _fusion_dot_flops(self, comp: Computation) -> float:
+    def _fusion_dot_flops(self, comp: Computation, scale: float = 1.0) -> float:
         f = 0.0
         for op in comp.ops.values():
             if op.opcode == "dot":
@@ -268,7 +269,44 @@ class CostModel:
                 for d in op.shape:
                     out_elems *= d
                 f += 2.0 * out_elems * k
+                self._record_dot(comp, op, scale)
         return f
+
+    def _record_dot(self, comp: Computation, op: Op, scale: float) -> None:
+        """Log one (trip-scale, rhs dtype, rhs shape, op_name) dot
+        occurrence for ``dot_weight_bytes`` — fusion-wrapped and top-level
+        dots alike."""
+        if len(op.operands) > 1:
+            dt, sh = self._operand_shape(comp, op.operands[1])
+            meta = re.search(r'op_name="([^"]*)"', op.rest)
+            self.dots.append((scale, dt, tuple(sh),
+                              meta.group(1) if meta else op.name))
+
+    def dot_weight_bytes(self, rhs_shape, name_re: Optional[str] = None,
+                         exclude_re: Optional[str] = None) -> float:
+        """Trip-scaled HBM bytes of every dot whose RHS matches
+        ``rhs_shape`` — e.g. ``(d_ff, d_model)`` counts the FFN
+        down-projection weight reads of a decode step (the weight is read
+        once per dot execution; batch rows share it). ``name_re`` /
+        ``exclude_re`` filter on the dot's op_name metadata: jnp einsums
+        carry their spec in the label (``bshd,hde->bse``) while plain
+        matmuls do not, so ``exclude_re="->"`` separates an FFN
+        down-projection from an attention output projection that happens
+        to share its weight shape. Used by the roofline gate to pin the
+        analytic ``weight_io_bytes_per_step`` accounting to what the
+        compiled graph actually reads (launch/roofline.py --check,
+        tests/test_hlo_cost.py)."""
+        want = tuple(rhs_shape)
+        total = 0.0
+        for scale, dt, sh, name in self.dots:
+            if sh != want:
+                continue
+            if name_re is not None and not re.search(name_re, name):
+                continue
+            if exclude_re is not None and re.search(exclude_re, name):
+                continue
+            total += scale * _nbytes(dt, sh)
+        return total
 
     # -- walk --------------------------------------------------------------
     def _walk(self, comp: Computation, scale: float) -> None:
@@ -324,6 +362,7 @@ class CostModel:
                 for d in op.shape:
                     out_elems *= d
                 f = 2.0 * out_elems * k
+                self._record_dot(comp, op, scale)
             elif oc == "convolution":
                 out_elems = 1
                 for d in op.shape:
@@ -355,7 +394,8 @@ class CostModel:
                 b = self._fusion_bytes(comp, op)
                 mc = re.search(r"calls=%?([\w.\-]+)", op.rest)
                 if mc and mc.group(1) in self.comps:  # dots hidden in fusions
-                    f += self._fusion_dot_flops(self.comps[mc.group(1)])
+                    f += self._fusion_dot_flops(self.comps[mc.group(1)],
+                                                scale)
             else:
                 out_b = _nbytes(op.dtype, op.shape)
                 in_b = sum(self._true_bytes(comp, o) for o in op.operands)

@@ -45,42 +45,49 @@ def model_prefill_paged(params, batch, cfg: ModelConfig, pages, blocks,
 
 def model_prefill_chunk_paged(params, batch, cfg: ModelConfig, pages, table,
                               pos0, clen, ffn_masks, refresh,
-                              block_size: int):
+                              block_size: int, fast_kernels: bool = False):
     return T.prefill_chunk_paged(params, pages, table, batch["tokens"],
                                  pos0, clen, cfg, ffn_masks, refresh,
-                                 block_size=block_size)
+                                 block_size=block_size,
+                                 fast_kernels=fast_kernels)
 
 
 def model_decode_paged(params, pages, table, token, pos, cfg: ModelConfig,
-                       ffn_masks, refresh, block_size: int):
+                       ffn_masks, refresh, block_size: int,
+                       fast_kernels: bool = False):
     return T.decode_step_paged(params, pages, table, token, pos, cfg,
-                               ffn_masks, refresh, block_size=block_size)
+                               ffn_masks, refresh, block_size=block_size,
+                               fast_kernels=fast_kernels)
 
 
 def model_decode_paged_predicted(params, pages, table, token, pos,
                                  cfg: ModelConfig, ffn_masks, refresh,
                                  pred_params, kind: str, tile: int,
                                  k_tiles: int, block_size: int,
-                                 measure: bool = True, shards: int = 1):
+                                 measure: bool = True, shards: int = 1,
+                                 fast_kernels: bool = False):
     return T.decode_step_paged_predicted(params, pages, table, token, pos,
                                          cfg, ffn_masks, refresh, pred_params,
                                          kind=kind, tile=tile,
                                          k_tiles=k_tiles,
                                          block_size=block_size,
-                                         measure=measure, shards=shards)
+                                         measure=measure, shards=shards,
+                                         fast_kernels=fast_kernels)
 
 
 def model_verify_window_paged(params, pages, table, tokens, pos0, wlen,
                               cfg: ModelConfig, ffn_masks, refresh,
-                              block_size: int):
+                              block_size: int, fast_kernels: bool = False):
     return T.verify_window_paged(params, pages, table, tokens, pos0, wlen,
                                  cfg, ffn_masks, refresh,
-                                 block_size=block_size)
+                                 block_size=block_size,
+                                 fast_kernels=fast_kernels)
 
 
 def model_draft_gamma_paged(params, pages, table, token, pos0, wlen,
                             cfg: ModelConfig, gamma: int, block_size: int,
-                            next_fn=None):
+                            next_fn=None, fast_kernels: bool = False):
     return T.draft_gamma_paged(params, pages, table, token, pos0, wlen, cfg,
                                gamma=gamma, block_size=block_size,
-                               next_fn=next_fn)
+                               next_fn=next_fn,
+                               fast_kernels=fast_kernels)

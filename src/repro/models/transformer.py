@@ -477,12 +477,18 @@ def _ffn_tile(cfg: ModelConfig) -> int:
 
 def apply_attn_window_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
                             pos, valid, *, layer, block_size: int,
-                            stats: cm.StatsCollector):
+                            stats: cm.StatsCollector,
+                            fast_kernels: bool = False):
     """W-token windowed attention against the paged pool. x: (b, W, d);
     pos: (b, W) per-slot write positions (NOT uniform); valid: (b, W) real
     window tokens — K/V of invalid ones is routed to the scratch block;
     table: (b, nb) block ids. Causal within the window: token i attends to
     cache positions <= pos[:, i]. Returns (out (b, W, d), k_pages, v_pages).
+
+    ``fast_kernels`` reads the pool THROUGH the block table inside a Pallas
+    kernel (kernels/paged_attention.py) instead of materializing the
+    ``paged_gather`` copy — same math (streams match at f32), half the
+    cache traffic.
     """
     g = attn_geometry(cfg)
     b, W, _ = x.shape
@@ -495,14 +501,20 @@ def apply_attn_window_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
                                     block_size, valid)
     kl = jax.lax.dynamic_index_in_dim(k_pages, layer, 0, keepdims=False)
     vl = jax.lax.dynamic_index_in_dim(v_pages, layer, 0, keepdims=False)
-    kg = cm.paged_gather(kl, table)
-    vg = cm.paged_gather(vl, table)
-    o = cm.window_attention(q, kg, vg, pos, window=cfg.sliding_window)
+    if fast_kernels:
+        from repro.kernels import paged_attention as kpa
+        o = kpa.paged_window_attention(q, kl, vl, table, pos,
+                                       window=cfg.sliding_window)
+    else:
+        kg = cm.paged_gather(kl, table)
+        vg = cm.paged_gather(vl, table)
+        o = cm.window_attention(q, kg, vg, pos, window=cfg.sliding_window)
     out = _attn_out(p, o.reshape(b, W, g.hp, g.head_dim), cfg)
     return out, k_pages, v_pages
 
 
-def apply_ffn_window(p, x, cfg: ModelConfig, *, mask, refresh, valid):
+def apply_ffn_window(p, x, cfg: ModelConfig, *, mask, refresh, valid,
+                     fast_kernels: bool = False):
     """Decode FFN over a W-token window with per-request γ-window weight
     reuse, batched over slots. x: (b, W, d); mask: (b, F) bool — the rows
     loaded in each request's current window; refresh: (b,) bool — slots
@@ -517,7 +529,13 @@ def apply_ffn_window(p, x, cfg: ModelConfig, *, mask, refresh, valid):
                  — the Fig. 7c γ-reuse weight-I/O metric,
              union_density (b,) fraction of rows in the window's activity
                  union = 1 − s_agg(W) — the Sec. 5.2 sparse-verification
-                 I/O metric)."""
+                 I/O metric).
+
+    ``fast_kernels`` makes the union I/O saving PHYSICAL: the
+    down-projection runs as a per-row tile gather (sparse_matmul_tokens)
+    over each slot's window-union tile list, so only union-active wd tiles
+    are read — exactly the density the union_density metric reports. The up
+    projection stays dense (the union is only known after it runs)."""
     from repro.kernels.fused_ffn import window_tile_activity
 
     act_fn = acts.get(cfg.activation, shift=cfg.sparsity.shift)
@@ -543,29 +561,46 @@ def apply_ffn_window(p, x, cfg: ModelConfig, *, mask, refresh, valid):
     union_density = jnp.mean(act.astype(jnp.float32), axis=-1)
     dens_ffn = (cfg.sparsity.ffn_tile_density if cfg.sparsity.enabled
                 else 1.0)
-    out = cm.maybe_sparse_matmul(h.reshape(b * W, -1), p["wd"], cfg, dens_ffn)
+    if fast_kernels and dens_in >= 1.0 and dens_ffn >= 1.0:
+        from repro.kernels import sparse_matmul as ksm
+        from repro.predictor import predictors as preds
+        tile = _ffn_tile(cfg)
+        n_tiles = h.shape[-1] // tile
+        # per-slot window-union tile list at full capacity: valid rows'
+        # support is inside their slot's union, so gathering only union
+        # tiles is exact for every row the caller reads (invalid window
+        # rows may differ — their outputs are discarded by construction)
+        idx, nvalid = preds.pack_tile_indices(scores > 0, n_tiles)
+        out = ksm.sparse_matmul_tokens(
+            h.reshape(b * W, -1).astype(p["wd"].dtype), p["wd"],
+            jnp.repeat(idx, W, axis=0), jnp.repeat(nvalid, W),
+            tile=tile).astype(x.dtype)
+    else:
+        out = cm.maybe_sparse_matmul(h.reshape(b * W, -1), p["wd"], cfg,
+                                     dens_ffn)
     return out.reshape(b, W, d), act, scores, density, union_density
 
 
 def apply_block_window_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
                              pos, valid, *, layer, block_size: int, mask,
-                             refresh):
+                             refresh, fast_kernels: bool = False):
     stats = cm.StatsCollector(False)
     h = post_norm(cm.apply_norm(p["ln1"], x, cfg), cfg)
     a, k_pages, v_pages = apply_attn_window_paged(
         p["attn"], h, cfg, k_pages, v_pages, table, pos, valid, layer=layer,
-        block_size=block_size, stats=stats)
+        block_size=block_size, stats=stats, fast_kernels=fast_kernels)
     x = x + a
     h = post_norm(cm.apply_norm(p["ln2"], x, cfg), cfg)
     f, act, scores, density, udens = apply_ffn_window(
-        p["ffn"], h, cfg, mask=mask, refresh=refresh, valid=valid)
+        p["ffn"], h, cfg, mask=mask, refresh=refresh, valid=valid,
+        fast_kernels=fast_kernels)
     x = x + f
     return x, k_pages, v_pages, act, scores, density, udens
 
 
 def verify_window_paged(params, pages, table, tokens, pos0, wlen,
                         cfg: ModelConfig, ffn_masks, refresh, *,
-                        block_size: int):
+                        block_size: int, fast_kernels: bool = False):
     """Run a W-token window per slot in ONE forward over the shared page
     pool — the speculative-verification target step (paper Sec. 5.2): every
     window token's K/V is written at its own position, attention is causal
@@ -596,7 +631,8 @@ def verify_window_paged(params, pages, table, tokens, pos0, wlen,
         pl_i, li, fm = xs
         x, kp, vp, act, scores, density, udens = apply_block_window_paged(
             pl_i, x, cfg, kp, vp, table, pos, valid, layer=li,
-            block_size=block_size, mask=fm, refresh=refresh)
+            block_size=block_size, mask=fm, refresh=refresh,
+            fast_kernels=fast_kernels)
         return (x, kp, vp), (act, scores, density, udens)
 
     xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks)
@@ -614,7 +650,7 @@ def verify_window_paged(params, pages, table, tokens, pos0, wlen,
 
 def prefill_chunk_paged(params, pages, table, tokens, pos0, clen,
                         cfg: ModelConfig, ffn_masks, refresh, *,
-                        block_size: int):
+                        block_size: int, fast_kernels: bool = False):
     """One fixed-shape CHUNK of paged prefill, batched over slots — the
     admission path that replaces stop-the-world whole-prompt prefill.
 
@@ -641,12 +677,14 @@ def prefill_chunk_paged(params, pages, table, tokens, pos0, clen,
     (new_masks picks it up wherever ``refresh`` is set)."""
     return verify_window_paged(params, pages, table, tokens, pos0, clen,
                                cfg, ffn_masks, refresh,
-                               block_size=block_size)
+                               block_size=block_size,
+                               fast_kernels=fast_kernels)
 
 
 def _ffn_decode_predicted(pf, h, cfg: ModelConfig, pred_l, *, kind: str,
                           tile: int, k_tiles: int, mask, refresh,
-                          measure: bool = True, shards: int = 1):
+                          measure: bool = True, shards: int = 1,
+                          fast_kernels: bool = False):
     """Predictor-gathered decode FFN (predictor serving mode): the
     activity predictor (repro.predictor) names each token's active tiles
     BEFORE any FFN weight is read, and both the up- and down-projections
@@ -694,16 +732,31 @@ def _ffn_decode_predicted(pf, h, cfg: ModelConfig, pred_l, *, kind: str,
         preds.covered_tiles(idx, nvalid, n_tiles), tile)  # (B, F)
 
     gate_w = pf["wg"] if cfg.ffn_kind == "glu" else pf["wu"]
-    pre = ksm.sparse_up_matmul(h, gate_w, idx, nvalid, tile=tile)
-    # mask to the covered tiles so skipped tiles are EXACTLY zero even for
-    # activations with f(0) != 0 (e.g. a negative shifted_relu shift)
-    hh = act_fn(pre) * cov_units.astype(pre.dtype)
-    if cfg.ffn_kind == "glu":
-        hh = hh * ksm.sparse_up_matmul(h, pf["wu"], idx, nvalid, tile=tile)
+    if fast_kernels:
+        # fused gather-up -> act -> scatter-down: one pass over the tile
+        # list, same per-tile dots / accumulation order as the unfused pair
+        # below (bit-equal — tests/test_fused_decode.py). cov_units is all
+        # ones inside every gathered tile, so the in-kernel activation needs
+        # no covered-mask; non-gathered tiles are exact zeros by omission.
+        from repro.kernels import fused_decode as kfd
+        f32, compact = kfd.fused_sparse_ffn(
+            h, gate_w, pf["wd"], idx, nvalid,
+            w_up=pf["wu"] if cfg.ffn_kind == "glu" else None,
+            activation=cfg.activation, shift=cfg.sparsity.shift, tile=tile)
+        hh = kfd.scatter_compact(compact, idx, nvalid, n_tiles)
+        f = f32.astype(h.dtype)
+    else:
+        pre = ksm.sparse_up_matmul(h, gate_w, idx, nvalid, tile=tile)
+        # mask to the covered tiles so skipped tiles are EXACTLY zero even
+        # for activations with f(0) != 0 (e.g. negative shifted_relu shift)
+        hh = act_fn(pre) * cov_units.astype(pre.dtype)
+        if cfg.ffn_kind == "glu":
+            hh = hh * ksm.sparse_up_matmul(h, pf["wu"], idx, nvalid,
+                                           tile=tile)
+        f = ksm.sparse_matmul_tokens(hh.astype(pf["wd"].dtype), pf["wd"],
+                                     idx, nvalid, tile=tile).astype(h.dtype)
     act = hh != 0
     scores = tile_activity(hh, _ffn_tile(cfg))
-    f = ksm.sparse_matmul_tokens(hh.astype(pf["wd"].dtype), pf["wd"], idx,
-                                 nvalid, tile=tile).astype(h.dtype)
     density = nvalid.astype(jnp.float32) / n_tiles
 
     if measure:
@@ -721,7 +774,8 @@ def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
                              pos, *, layer, block_size: int, mask, refresh,
                              pred=None, pred_kind: Optional[str] = None,
                              pred_tile: int = 128, k_tiles: int = 0,
-                             pred_measure: bool = True, pred_shards: int = 1):
+                             pred_measure: bool = True, pred_shards: int = 1,
+                             fast_kernels: bool = False):
     """Single-token specialization of ``apply_block_window_paged``.
 
     Mathematically the W = 1 case, but kept as its own lowering: the decode
@@ -747,9 +801,14 @@ def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
                                    block_size)
     kl = jax.lax.dynamic_index_in_dim(k_pages, layer, 0, keepdims=False)
     vl = jax.lax.dynamic_index_in_dim(v_pages, layer, 0, keepdims=False)
-    kg = cm.paged_gather(kl, table)
-    vg = cm.paged_gather(vl, table)
-    o = cm.decode_attention(q, kg, vg, pos, window=cfg.sliding_window)
+    if fast_kernels:
+        from repro.kernels import paged_attention as kpa
+        o = kpa.paged_decode_attention(q, kl, vl, table, pos,
+                                       window=cfg.sliding_window)
+    else:
+        kg = cm.paged_gather(kl, table)
+        vg = cm.paged_gather(vl, table)
+        o = cm.decode_attention(q, kg, vg, pos, window=cfg.sliding_window)
     a = _attn_out(p["attn"], o.reshape(o.shape[0], 1, g.hp, g.head_dim),
                   cfg)[:, 0]
     x = x + a
@@ -760,36 +819,59 @@ def apply_block_decode_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
         f, act, scores, density, n_active, n_miss = _ffn_decode_predicted(
             p["ffn"], h, cfg, pred, kind=pred_kind, tile=pred_tile,
             k_tiles=k_tiles, mask=mask, refresh=refresh,
-            measure=pred_measure, shards=pred_shards)
+            measure=pred_measure, shards=pred_shards,
+            fast_kernels=fast_kernels)
         x = x + f
         return x, k_pages, v_pages, act, scores, density, n_active, n_miss
     act_fn = acts.get(cfg.activation, shift=cfg.sparsity.shift)
     dens_in = (cfg.sparsity.input_tile_density if cfg.sparsity.enabled
                else 1.0)
+    dens_ffn = (cfg.sparsity.ffn_tile_density if cfg.sparsity.enabled
+                else 1.0)
     pf = p["ffn"]
-    if cfg.ffn_kind == "glu":
-        pre = cm.maybe_sparse_matmul(h, pf["wg"], cfg, dens_in)
-        hh = act_fn(pre) * cm.maybe_sparse_matmul(h, pf["wu"], cfg, dens_in)
-    else:
-        hh = act_fn(cm.maybe_sparse_matmul(h, pf["wu"], cfg, dens_in))
-    # TP serving (rules.use_mesh installed): keep the hidden activation and
-    # the γ-mask composition sharded on each shard's d_ff slice; no-op (and
-    # bit-frozen lowering) single-device
-    hh = rules.constrain(hh, "dp", "model")
     eff = mask | refresh[:, None]  # refresh ⇒ all rows participate
-    hh = hh * eff.astype(hh.dtype)
+    if fast_kernels and dens_in >= 1.0 and dens_ffn >= 1.0:
+        # AR fast path: the γ-window eff mask IS a per-token active set, so
+        # the whole FFN runs through the fused kernel over eff's tile list
+        # at full capacity — up- AND down-projection reads of fully-masked
+        # tiles are physically skipped; masked-off units inside gathered
+        # tiles are zeroed in-kernel (unit_mask), matching hh * eff.
+        from repro.kernels import fused_decode as kfd
+        from repro.predictor import predictors as preds
+        tile = _ffn_tile(cfg)
+        n_tiles = cfg.d_ff // tile
+        idx, nvalid = preds.pack_tile_indices(
+            preds.units_to_tiles(eff, tile), n_tiles)
+        f32, compact = kfd.fused_sparse_ffn(
+            h, pf["wg"] if cfg.ffn_kind == "glu" else pf["wu"], pf["wd"],
+            idx, nvalid,
+            w_up=pf["wu"] if cfg.ffn_kind == "glu" else None, unit_mask=eff,
+            activation=cfg.activation, shift=cfg.sparsity.shift, tile=tile)
+        hh = kfd.scatter_compact(compact, idx, nvalid, n_tiles)
+        f = f32.astype(h.dtype)
+    else:
+        if cfg.ffn_kind == "glu":
+            pre = cm.maybe_sparse_matmul(h, pf["wg"], cfg, dens_in)
+            hh = act_fn(pre) * cm.maybe_sparse_matmul(h, pf["wu"], cfg,
+                                                      dens_in)
+        else:
+            hh = act_fn(cm.maybe_sparse_matmul(h, pf["wu"], cfg, dens_in))
+        # TP serving (rules.use_mesh installed): keep the hidden activation
+        # and the γ-mask composition sharded on each shard's d_ff slice;
+        # no-op (and bit-frozen lowering) single-device
+        hh = rules.constrain(hh, "dp", "model")
+        hh = hh * eff.astype(hh.dtype)
+        f = cm.maybe_sparse_matmul(hh, pf["wd"], cfg, dens_ffn)
     act = hh != 0
     scores = tile_activity(hh, _ffn_tile(cfg))
     density = jnp.mean(eff.astype(jnp.float32), axis=-1)
-    dens_ffn = (cfg.sparsity.ffn_tile_density if cfg.sparsity.enabled
-                else 1.0)
-    f = cm.maybe_sparse_matmul(hh, pf["wd"], cfg, dens_ffn)
     x = x + f
     return x, k_pages, v_pages, act, scores, density
 
 
 def decode_step_paged(params, pages, table, token, pos, cfg: ModelConfig,
-                      ffn_masks, refresh, *, block_size: int):
+                      ffn_masks, refresh, *, block_size: int,
+                      fast_kernels: bool = False):
     """One continuous-batching decode step over the shared page pool — the
     W = 1 case of ``verify_window_paged``, specialized (see
     ``apply_block_decode_paged`` for why it is not a wrapper).
@@ -808,7 +890,8 @@ def decode_step_paged(params, pages, table, token, pos, cfg: ModelConfig,
         pl_i, li, fm = xs
         x, kp, vp, act, scores, density = apply_block_decode_paged(
             pl_i, x, cfg, kp, vp, table, pos, layer=li,
-            block_size=block_size, mask=fm, refresh=refresh)
+            block_size=block_size, mask=fm, refresh=refresh,
+            fast_kernels=fast_kernels)
         return (x, kp, vp), (act, scores, density)
 
     xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks)
@@ -827,7 +910,7 @@ def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConf
                                 ffn_masks, refresh, pred_params, *,
                                 kind: str, tile: int, k_tiles: int,
                                 block_size: int, measure: bool = True,
-                                shards: int = 1):
+                                shards: int = 1, fast_kernels: bool = False):
     """Predictor-mode continuous-batching decode step: like
     ``decode_step_paged`` but every layer's FFN runs tile-gathered over the
     activity predictor's per-token mask (up- AND down-projection reads are
@@ -857,7 +940,8 @@ def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConf
                 pl_i, x, cfg, kp, vp, table, pos, layer=li,
                 block_size=block_size, mask=fm, refresh=refresh,
                 pred=pred_l, pred_kind=kind, pred_tile=tile, k_tiles=k_tiles,
-                pred_measure=measure, pred_shards=shards)
+                pred_measure=measure, pred_shards=shards,
+                fast_kernels=fast_kernels)
         return (x, kp, vp), (act, scores, density, n_act, n_miss)
 
     xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks, pred_params)
@@ -875,7 +959,7 @@ def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConf
 
 def draft_gamma_paged(params, pages, table, token, pos0, wlen,
                       cfg: ModelConfig, *, gamma: int, block_size: int,
-                      next_fn=None):
+                      next_fn=None, fast_kernels: bool = False):
     """Draft γ tokens per slot in one jitted scan over the paged pool —
     the proposer half of speculative decoding, batched across slots with
     NO host round-trips.
@@ -903,7 +987,8 @@ def draft_gamma_paged(params, pages, table, token, pos0, wlen,
         wl = (g < wlen).astype(wlen.dtype)  # 0/1: write-enable as W_s
         logits, pages, _, _ = verify_window_paged(
             params, pages, table, tok[:, None], pos0 + g, wl, cfg,
-            masks, refresh, block_size=block_size)
+            masks, refresh, block_size=block_size,
+            fast_kernels=fast_kernels)
         if next_fn is None:
             nxt = jnp.argmax(logits[:, 0, : cfg.vocab_size],
                              -1).astype(jnp.int32)

@@ -158,7 +158,8 @@ class ContinuousBatchingEngine:
                  draft_params=None, gamma: int = 4,
                  predictor=None, predictor_telemetry: bool = True,
                  prefill_chunk: int = 0, prefix_cache: bool = False,
-                 warm_masks: bool = False, mesh=None, base_seed: int = 0):
+                 warm_masks: bool = False, mesh=None, base_seed: int = 0,
+                 fast_kernels: Optional[bool] = None):
         fam = registry.get_family(cfg)
         if not hasattr(fam, "model_decode_paged"):
             raise ValueError(
@@ -191,6 +192,22 @@ class ContinuousBatchingEngine:
         # device reads the full weight — per-device I/O accounting must not
         # claim a 1/TP split that physically did not happen
         self.ffn_tp = self.tp if cfg.d_ff % max(1, self.tp) == 0 else 1
+        # fused Pallas decode kernels (kernels/fused_decode.py,
+        # kernels/paged_attention.py): None autodetects — compiled kernels
+        # on an accelerator, the frozen XLA lowerings on CPU (where the
+        # kernels would run in interpret mode: correct but slow, so CPU CI
+        # keeps the frozen paths unless a test forces fast_kernels=True).
+        if fast_kernels is None:
+            fast_kernels = jax.default_backend() != "cpu"
+        if fast_kernels and mesh is not None:
+            import warnings
+            warnings.warn(
+                "fast_kernels is not available under a mesh: GSPMD cannot "
+                "partition pallas_call — falling back to the sharded XLA "
+                "serving path", stacklevel=2)
+            fast_kernels = False
+        self.fast_kernels = bool(fast_kernels)
+        fk = self.fast_kernels
         if mesh is not None:
             missing = {"data", "model"} - set(mesh.axis_names)
             if missing:
@@ -244,7 +261,8 @@ class ContinuousBatchingEngine:
                    temps, tks, tps, keys, gen):
             logits, pages, new_masks, (act, scores, density) = \
                 fam.model_decode_paged(params, pages, table, token, pos, cfg,
-                                       masks, refresh, block_size)
+                                       masks, refresh, block_size,
+                                       fast_kernels=fk)
             nxt, lp = head(logits, temps, tks, tps,
                            smp.position_keys(keys, gen))
             # per-request fraction of active d_ff tiles this step — the
@@ -278,7 +296,7 @@ class ContinuousBatchingEngine:
                 (logits, pages, new_masks,
                  (act, _, _, _)) = fam.model_prefill_chunk_paged(
                     params, {"tokens": tokens}, cfg, pages, table, pos0,
-                    clen, masks, refresh, block_size)
+                    clen, masks, refresh, block_size, fast_kernels=fk)
                 # warm-mask harvest accumulates over a request's chunks:
                 # the first chunk REPLACES the slot's row (clearing any
                 # stale previous occupant — via new_masks' refresh path),
@@ -346,7 +364,8 @@ class ContinuousBatchingEngine:
                     fam.model_decode_paged_predicted(
                         params, pages, table, token, pos, cfg, masks,
                         refresh, pred_params, kind, tile_w, k_tiles,
-                        block_size, predictor_telemetry, pred_shards)
+                        block_size, predictor_telemetry, pred_shards,
+                        fast_kernels=fk)
                 nxt, lp = head(logits, temps, tks, tps,
                                smp.position_keys(keys, gen))
                 tiles = jnp.mean((scores > 0).astype(jnp.float32),
@@ -395,7 +414,7 @@ class ContinuousBatchingEngine:
 
                 return dfam.model_draft_gamma_paged(
                     dparams, dpages, table, token, pos0, wlen, draft_cfg,
-                    gamma, block_size, next_fn=next_fn)
+                    gamma, block_size, next_fn=next_fn, fast_kernels=fk)
 
             def verify(params, pages, table, window, pos0, wlen, masks,
                        temps, tks, tps, keys, gen0):
@@ -403,7 +422,7 @@ class ContinuousBatchingEngine:
                 logits, pages, new_masks, (act, scores, density, udens) = \
                     fam.model_verify_window_paged(
                         params, pages, table, window, pos0, wlen, cfg,
-                        masks, refresh, block_size)
+                        masks, refresh, block_size, fast_kernels=fk)
                 B, W = logits.shape[:2]
                 nxt, lp = head(logits,  # both (b, W)
                                jnp.broadcast_to(temps[:, None], (B, W)),
@@ -439,7 +458,8 @@ class ContinuousBatchingEngine:
                     drefresh = jnp.ones((n_slots,), bool)
                     _, dpages, _, _ = dfam.model_verify_window_paged(
                         dparams, dpages, table, tokens, pos0, clen,
-                        draft_cfg, dmasks, drefresh, block_size)
+                        draft_cfg, dmasks, drefresh, block_size,
+                        fast_kernels=fk)
                     return dpages
 
                 self._prefill_chunk_draft = self._jit(prefill_chunk_draft,
@@ -733,12 +753,19 @@ class ContinuousBatchingEngine:
         scope, per token, dense: the down-projection for γ-reuse /
         speculative serving (their density metric covers wd rows), up-,
         gate- AND down-projection for predictor serving (the predictor
-        gathers all of them)."""
+        gathers all of them). With ``fast_kernels`` the autoregressive
+        step ALSO runs its up/gate projections through the fused
+        tile-gathered kernel (kernels/fused_decode.py) over the γ-mask's
+        tile list, widening the skippable scope to every projection — the
+        speculative window's up projection stays dense (the union is only
+        known after it runs), so its scope is unchanged."""
         itemsize = jnp.dtype(self.cfg.compute_dtype).itemsize
         proj = self.cfg.d_ff * self.cfg.d_model * itemsize
+        n_all = 3 if self.cfg.ffn_kind == "glu" else 2
         if self.predictor is not None:
-            n_proj = 3 if self.cfg.ffn_kind == "glu" else 2
-            return self.cfg.n_layers * n_proj * proj
+            return self.cfg.n_layers * n_all * proj
+        if self.fast_kernels and not self.spec:
+            return self.cfg.n_layers * n_all * proj
         return self.cfg.n_layers * proj
 
     def weight_io_bytes_per_step(self, per_device: bool = True) -> float:

@@ -1,0 +1,293 @@
+"""Fused Pallas decode kernels (ISSUE 7 tentpole): the one-pass
+gather-up -> activation -> scatter-down FFN kernel and the in-kernel
+block-table paged attention must reproduce the frozen XLA serving path
+BYTE-IDENTICALLY at f32 — greedy token streams through
+``fast_kernels=True`` equal the frozen-path streams in all three serving
+modes (plain γ-window, speculative, predictor), for tiny-relu (GLU) and
+tiny-opt (MLP), with chunked prefill composing.
+
+Kernel-level parity is pinned bit-exactly against the unfused Pallas pair
+(``sparse_up_matmul`` + ``sparse_matmul_tokens``) — same per-tile dot
+shapes, same f32 accumulation order — plus hypothesis properties over the
+fixed-capacity tile lists (empty rows, full capacity, duplicated pad
+entries revisiting an already-fetched tile exactly once).
+
+Kernels run in interpret mode on CPU (kernels/runtime.resolve_interpret);
+the mesh-fallback test runs in a forced-8-device subprocess."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.kernels import fused_decode as kfd
+from repro.kernels import paged_attention as kpa
+from repro.kernels import sparse_matmul as ksm
+from repro.models import common as cm
+from repro.models import registry
+from repro.predictor.predictors import pack_tile_indices
+from repro.serving import ContinuousBatchingEngine
+
+from subproc import run_forced_devices as _run
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity: fused == unfused pair, BIT-exact
+
+
+def _case(T=4, d=64, F=512, tile=128, p=0.5, seed=0):
+    n_tiles = F // tile
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(T, d), jnp.float32)
+    wg = jnp.asarray(rng.randn(d, F) / np.sqrt(d), jnp.float32)
+    wu = jnp.asarray(rng.randn(d, F) / np.sqrt(d), jnp.float32)
+    wd = jnp.asarray(rng.randn(F, d) / np.sqrt(F), jnp.float32)
+    mask = jnp.asarray(rng.rand(T, n_tiles) < p)
+    idx, nvalid = pack_tile_indices(mask, n_tiles)
+    return x, wg, wu, wd, idx, nvalid, tile, n_tiles
+
+
+def _unfused(x, wg, wu, wd, idx, nvalid, tile, unit_mask=None, shift=0.0):
+    """The frozen two-kernel lowering the fused kernel replaces."""
+    pre = ksm.sparse_up_matmul(x, wg, idx, nvalid, tile=tile)
+    hh = jnp.maximum(pre - shift, 0.0)
+    if wu is not None:
+        hh = hh * ksm.sparse_up_matmul(x, wu, idx, nvalid, tile=tile)
+    if unit_mask is not None:
+        hh = hh * unit_mask
+    y = ksm.sparse_matmul_tokens(hh.astype(wd.dtype), wd, idx, nvalid,
+                                 tile=tile)
+    return y, hh
+
+
+def test_fused_matches_unfused_glu():
+    x, wg, wu, wd, idx, nvalid, tile, n_tiles = _case()
+    y, h = kfd.fused_sparse_ffn(x, wg, wd, idx, nvalid, w_up=wu,
+                                activation="relu", tile=tile)
+    hh = kfd.scatter_compact(h, idx, nvalid, n_tiles)
+    y0, hh0 = _unfused(x, wg, wu, wd, idx, nvalid, tile)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y0))
+    np.testing.assert_array_equal(np.asarray(hh), np.asarray(hh0))
+
+
+def test_fused_matches_unfused_mlp():
+    x, wg, _, wd, idx, nvalid, tile, n_tiles = _case(seed=3)
+    y, h = kfd.fused_sparse_ffn(x, wg, wd, idx, nvalid,
+                                activation="relu", tile=tile)
+    hh = kfd.scatter_compact(h, idx, nvalid, n_tiles)
+    y0, hh0 = _unfused(x, wg, None, wd, idx, nvalid, tile)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y0))
+    np.testing.assert_array_equal(np.asarray(hh), np.asarray(hh0))
+
+
+def test_fused_matches_unfused_masked_and_shifted():
+    """The AR-window variant: unit mask applied INSIDE the kernel after the
+    GLU multiply, shifted ReLU — both exact (boolean multiply, f32 sub)."""
+    x, wg, wu, wd, idx, nvalid, tile, n_tiles = _case(seed=5)
+    rng = np.random.RandomState(7)
+    eff = jnp.asarray(rng.rand(x.shape[0], wg.shape[1]) < 0.6)
+    y, h = kfd.fused_sparse_ffn(x, wg, wd, idx, nvalid, w_up=wu,
+                                unit_mask=eff, activation="shifted_relu",
+                                shift=0.25, tile=tile)
+    hh = kfd.scatter_compact(h, idx, nvalid, n_tiles)
+    y0, hh0 = _unfused(x, wg, wu, wd, idx, nvalid, tile, unit_mask=eff,
+                       shift=0.25)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y0))
+    np.testing.assert_array_equal(np.asarray(hh), np.asarray(hh0))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: fixed-capacity tile-list edge cases
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(0.0, 1.0))
+def test_fused_tile_list_property(seed, p):
+    """Any mask density — including all-empty rows (nvalid == 0 must yield
+    exact zeros) and full capacity (== dense) — matches the unfused pair
+    bit-exactly, and the scattered h is zero outside selected tiles."""
+    x, wg, wu, wd, _, _, tile, n_tiles = _case(T=3, seed=seed % 997)
+    rng = np.random.RandomState(seed % 2 ** 31)
+    mask = jnp.asarray(rng.rand(3, n_tiles) < p)
+    idx, nvalid = pack_tile_indices(mask, n_tiles)
+    y, h = kfd.fused_sparse_ffn(x, wg, wd, idx, nvalid, w_up=wu,
+                                activation="relu", tile=tile)
+    hh = kfd.scatter_compact(h, idx, nvalid, n_tiles)
+    y0, hh0 = _unfused(x, wg, wu, wd, idx, nvalid, tile)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y0))
+    np.testing.assert_array_equal(np.asarray(hh), np.asarray(hh0))
+    # rows with no live tiles are exactly zero, not epsilon
+    empty = ~np.asarray(mask).any(axis=1)
+    assert (np.asarray(y)[empty] == 0.0).all()
+    assert (np.asarray(hh)[empty] == 0.0).all()
+    # h never leaks outside the selected tiles
+    units = np.repeat(np.asarray(mask), tile, axis=1)
+    assert (np.asarray(hh)[~units] == 0.0).all()
+
+
+def test_duplicated_pad_tiles_contribute_exactly_once():
+    """pack_tile_indices pads by REPEATING the row's first selected tile
+    (so padded DMAs revisit an already-fetched block): the kernel must add
+    that tile's down-projection exactly once and scatter its h exactly
+    once, never per-duplicate."""
+    x, wg, wu, wd, _, _, tile, n_tiles = _case(T=2, seed=11)
+    # row 0: one live tile + 3 pad duplicates of it; row 1: empty (pads
+    # point at tile 0 by construction of top_k on an all-zero mask)
+    mask = jnp.zeros((2, n_tiles), bool).at[0, 2].set(True)
+    idx, nvalid = pack_tile_indices(mask, n_tiles)
+    assert idx[0].tolist() == [2, 2, 2, 2] and nvalid.tolist() == [1, 0]
+    y, h = kfd.fused_sparse_ffn(x, wg, wd, idx, nvalid, w_up=wu,
+                                activation="relu", tile=tile)
+    hh = kfd.scatter_compact(h, idx, nvalid, n_tiles)
+    # single-tile reference, computed directly
+    sl = slice(2 * tile, 3 * tile)
+    h_ref = (jnp.maximum(x[:1] @ wg[:, sl], 0.0) * (x[:1] @ wu[:, sl]))
+    np.testing.assert_array_equal(np.asarray(hh[0, sl]),
+                                  np.asarray(h_ref)[0])
+    np.testing.assert_array_equal(np.asarray(y[0]),
+                                  np.asarray(h_ref @ wd[sl])[0])
+    assert (np.asarray(y[1]) == 0.0).all() and (np.asarray(hh[1]) == 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# paged attention kernel vs frozen gather-then-attend
+
+
+@pytest.mark.parametrize("W,window", [(1, 0), (5, 5)])
+def test_paged_attention_matches_gathered(W, window):
+    """In-kernel block-table gather == materializing paged_gather + the
+    frozen window_attention, for the decode (W=1) and the γ+1 verify
+    window shapes."""
+    b, kvp, g, hd = 3, 2, 2, 16
+    n_blocks, bs, nb = 9, 8, 4
+    rng = np.random.RandomState(2)
+    q = jnp.asarray(rng.randn(b, W, kvp, g, hd), jnp.float32)
+    kp = jnp.asarray(rng.randn(n_blocks, kvp, bs, hd), jnp.float32)
+    vp = jnp.asarray(rng.randn(n_blocks, kvp, bs, hd), jnp.float32)
+    table = jnp.asarray(rng.randint(1, n_blocks, (b, nb)), jnp.int32)
+    pos = (jnp.asarray(rng.randint(W - 1, nb * bs, (b,)), jnp.int32)[:, None]
+           + jnp.arange(-W + 1, 1, dtype=jnp.int32)[None, :])
+    kg, vg = cm.paged_gather(kp, table), cm.paged_gather(vp, table)
+    want = cm.window_attention(q, kg, vg, pos, window=window)
+    got = kpa.paged_window_attention(q, kp, vp, table, pos, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# serving-level: f32 greedy streams byte-identical, fast vs frozen
+
+
+def _setup(name):
+    cfg = get_config(name).replace(compute_dtype="float32")
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    rng_prompts = [(1, 9), (2, 5), (3, 13)]
+    prompts = [np.random.RandomState(s).randint(
+                   0, cfg.vocab_size, ln).astype(np.int32)
+               for s, ln in rng_prompts]
+    return cfg, fam, params, prompts
+
+
+def _serve(cfg, params, prompts, max_new=8, **kw):
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=8,
+                                   max_blocks_per_seq=6, **kw)
+    uids = [eng.submit(p, max_new) for p in prompts]
+    res = eng.run()
+    return [res[u].tokens.tolist() for u in uids], eng
+
+
+@pytest.mark.parametrize("name", ["tiny-relu", "tiny-opt"])
+def test_plain_mode_fast_kernels_byte_identical(name):
+    cfg, fam, params, prompts = _setup(name)
+    base, e0 = _serve(cfg, params, prompts, fast_kernels=False)
+    got, e1 = _serve(cfg, params, prompts, fast_kernels=True)
+    assert got == base, (name, base, got)
+    assert not e0.fast_kernels and e1.fast_kernels
+    # chunked prefill lowers through the same fast window step
+    gotc, _ = _serve(cfg, params, prompts, fast_kernels=True, prefill_chunk=4)
+    assert gotc == base, (name, "chunked", base, gotc)
+    # the fast AR path reads all three (GLU) / both (MLP) projections
+    # sparsely — the accounting scope widens accordingly
+    n_all = 3 if cfg.ffn_kind == "glu" else 2
+    assert e1.weight_io_bytes_per_step() == pytest.approx(
+        n_all * e0.weight_io_bytes_per_step())
+
+
+@pytest.mark.parametrize("name", ["tiny-relu", "tiny-opt"])
+def test_speculative_mode_fast_kernels_byte_identical(name):
+    cfg, fam, params, prompts = _setup(name)
+    dcfg = cfg.replace(name=cfg.name + "-draft", n_layers=1)
+    dparams = fam.init_params(jax.random.PRNGKey(2), dcfg)
+    kw = dict(draft_cfg=dcfg, draft_params=dparams, gamma=4)
+    base, e0 = _serve(cfg, params, prompts, fast_kernels=False, **kw)
+    got, e1 = _serve(cfg, params, prompts, fast_kernels=True, **kw)
+    assert got == base, (name, base, got)
+    # same windows verified -> same acceptance telemetry
+    assert abs(e1.s_agg_window() - e0.s_agg_window()) < 1e-9
+
+
+@pytest.mark.parametrize("name", ["tiny-relu", "tiny-opt"])
+def test_predictor_mode_fast_kernels_byte_identical(name):
+    from repro.predictor import calibrate_from_config
+    cfg, fam, params, prompts = _setup(name)
+    cfg = cfg.replace_sparsity(predictor="sign", predictor_recall=1.0)
+    calib = {"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 32),
+                                          0, cfg.vocab_size)}
+    pred = calibrate_from_config(params, cfg, calib, tile=1)
+    base, e0 = _serve(cfg, params, prompts, predictor=pred,
+                      fast_kernels=False)
+    got, e1 = _serve(cfg, params, prompts, predictor=pred,
+                     fast_kernels=True)
+    assert got == base, (name, base, got)
+    # identical gathered tiles -> identical measured density and savings
+    assert abs(e1.weight_io_saved() - e0.weight_io_saved()) < 1e-9
+    assert e1.predictor_recall() == e0.predictor_recall()
+
+
+def test_fast_kernels_autodetect_off_on_cpu():
+    """Default (fast_kernels=None) resolves from the backend: off on CPU,
+    so CI keeps the frozen XLA paths unless a test opts in."""
+    cfg, fam, params, prompts = _setup("tiny-relu")
+    _, eng = _serve(cfg, params, prompts[:1], max_new=2)
+    assert eng.fast_kernels == (jax.default_backend() != "cpu")
+
+
+def test_mesh_forces_fallback_with_warning():
+    """GSPMD cannot partition pallas_call: under a mesh the engine must
+    warn, force fast_kernels=False, and stream identically."""
+    out = _run("""
+    import warnings
+    import jax, numpy as np
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving import ContinuousBatchingEngine
+
+    cfg = get_config("tiny-relu").replace(compute_dtype="float32")
+    params = registry.get_family(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [np.random.RandomState(s).randint(
+                   0, cfg.vocab_size, ln).astype(np.int32)
+               for s, ln in ((1, 9), (2, 5))]
+
+    def serve(**kw):
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=8,
+                                       max_blocks_per_seq=6, **kw)
+        uids = [eng.submit(p, 8) for p in prompts]
+        res = eng.run()
+        return [res[u].tokens.tolist() for u in uids], eng
+
+    base, _ = serve(fast_kernels=False)
+    mesh = make_host_mesh(1, 8)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got, eng = serve(fast_kernels=True, mesh=mesh)
+    assert eng.fast_kernels is False
+    assert any("fast_kernels" in str(x.message) for x in w), \\
+        [str(x.message) for x in w]
+    assert got == base, (base, got)
+    print("OK")
+    """)
+    assert "OK" in out

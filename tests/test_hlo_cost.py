@@ -70,3 +70,45 @@ def test_bytes_positive_and_loop_scaled():
     assert cm.bytes > 0
     # the dot reads x (512B) + w (1KB) + writes out (512B), x5
     assert cm.bytes >= (512 + 1024 + 512) * 5
+
+
+def test_dot_weight_bytes_shape_and_name_filters():
+    """dots records (trip scale, rhs dtype/shape, op name); the regex
+    filters select plain matmuls vs einsum-labeled dots by op name."""
+    cm = CostModel(HLO)
+    # the while body's dot has rhs (16,16) f32, x5 trips
+    assert cm.dot_weight_bytes((16, 16)) == 16 * 16 * 4 * 5
+    assert cm.dot_weight_bytes((8, 8)) == 0.0
+    assert cm.dot_weight_bytes((16, 16), exclude_re="->") == 16 * 16 * 4 * 5
+    assert cm.dot_weight_bytes((16, 16), name_re="->") == 0.0
+
+
+def test_decode_hlo_down_proj_matches_engine_accounting():
+    """Anchor the analytic serving accounting to what XLA actually
+    compiled: lower the jitted FROZEN decode step, count the trip-scaled
+    (d_ff, d_model)-RHS dot reads in its optimized HLO, and fail if they
+    drift more than 10% from the engine's density-accounted
+    ``weight_io_bytes_per_step()`` at density 1.0 (where the frozen
+    accounting scope is exactly the one down-projection)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.launch.roofline import hlo_decode_ffn_bytes
+    from repro.models import registry
+    from repro.serving import ContinuousBatchingEngine
+
+    cfg = get_config("tiny-relu").replace(compute_dtype="float32")
+    params = registry.get_family(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=8,
+                                   max_blocks_per_seq=6, fast_kernels=False)
+    prompt = np.random.RandomState(1).randint(
+        0, cfg.vocab_size, 9).astype(np.int32)
+    eng.submit(prompt, 4)
+    eng.run()
+    dens = 1.0 if not eng._dens_n else eng._dens_sum / eng._dens_n
+    assert dens == 1.0  # the tiny config serves AR at full density
+    counted = hlo_decode_ffn_bytes(eng, n_proj=1)
+    measured = eng.weight_io_bytes_per_step()
+    assert measured > 0
+    assert abs(counted / measured - 1.0) <= 0.10, (counted, measured)
