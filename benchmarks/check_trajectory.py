@@ -22,7 +22,9 @@ Three failure classes (exit code 1, one line per violation):
   if throughput looks fine.
 * streaming latency: ``api_ttft_ms`` / ``api_tpot_ms`` rising more than
   the latency tolerance (default 50%) vs baseline — a serve-loop
-  pathology, gated only once a baseline records the keys.
+  pathology, gated only once a baseline records the keys. The engine-side
+  span percentiles (``ttft_p50_ms`` .. ``tpot_p99_ms``, read off the obs
+  histograms) gate on a rise of more than one factor-2 histogram bucket.
 """
 from __future__ import annotations
 
@@ -44,6 +46,15 @@ ZERO_COLLAPSE_KEYS = ("weight_io_saved_gamma4", "spec_s_agg_gamma4",
 # step, a lost wakeup), not a 10% scheduling wobble. Only active once a
 # committed baseline records the key.
 LATENCY_KEYS = ("api_ttft_ms", "api_tpot_ms")
+# engine-side span percentiles from the obs histograms (serving_throughput
+# merges every CB case's snapshot). These values are log-bucket UPPER EDGES
+# (factor-2 buckets), so a measurement wobbling across one bucket boundary
+# reads as exactly 2x — gate only on a rise of MORE than one bucket
+# (fresh > 2x baseline), which no same-bucket or adjacent-bucket jitter can
+# trip. Only active once a committed baseline records the key.
+PERCENTILE_LATENCY_KEYS = ("ttft_p50_ms", "ttft_p99_ms",
+                           "tpot_p50_ms", "tpot_p99_ms")
+PERCENTILE_BUCKET_FACTOR = 2.0
 # absolute-bounds headlines: gated against FIXED bounds, not the baseline —
 # kernel_bytes_ratio is (fused-kernel BlockSpec-modeled HBM bytes/step) /
 # (engine density-accounted bytes/step); the two are independent
@@ -93,6 +104,17 @@ def check(fresh: dict, baseline: dict, tolerance: float,
             bad.append(f"{key}: {f:.1f} ms is {f / b - 1:.0%} above "
                        f"baseline {b:.1f} ms (tolerance "
                        f"{latency_tolerance:.0%})")
+    for key in PERCENTILE_LATENCY_KEYS:
+        b, f = bh.get(key), fh.get(key)
+        if not b:  # baseline never measured it — nothing to regress from
+            continue
+        if not f:
+            bad.append(f"{key}: missing/0 in fresh run "
+                       f"(baseline {b:.2f} ms)")
+        elif f > b * PERCENTILE_BUCKET_FACTOR:
+            bad.append(f"{key}: {f:.2f} ms is more than one histogram "
+                       f"bucket (> {PERCENTILE_BUCKET_FACTOR:.0f}x) above "
+                       f"baseline {b:.2f} ms")
     for key in THROUGHPUT_KEYS:
         b, f = bh.get(key), fh.get(key)
         if not b:  # baseline never measured it — nothing to regress from

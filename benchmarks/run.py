@@ -55,7 +55,7 @@ def run_module(mod_name: str) -> None:
         print(r, flush=True)
 
 
-PR_TAG = os.environ.get("BENCH_PR", "pr7")
+PR_TAG = os.environ.get("BENCH_PR", "pr8")
 
 
 def write_trajectory(tag: str = PR_TAG) -> str:
@@ -94,6 +94,14 @@ def write_trajectory(tag: str = PR_TAG) -> str:
                 serving.get("cb_api_stream_tokens_per_s"),
             "api_ttft_ms": serving.get("cb_api_stream_ttft_ms"),
             "api_tpot_ms": serving.get("cb_api_stream_tpot_ms"),
+            # engine-side span percentiles from the obs histograms, merged
+            # across every continuous-batching case (serving_throughput.py)
+            "ttft_p50_ms": serving.get("serving_ttft_p50_ms"),
+            "ttft_p99_ms": serving.get("serving_ttft_p99_ms"),
+            "tpot_p50_ms": serving.get("serving_tpot_p50_ms"),
+            "tpot_p99_ms": serving.get("serving_tpot_p99_ms"),
+            "queue_wait_p50_ms": serving.get("serving_queue_wait_p50_ms"),
+            "queue_wait_p99_ms": serving.get("serving_queue_wait_p99_ms"),
             "kernel_bytes_ratio": kernels.get("kernel_bytes_ratio"),
             "kernel_ffn_fused_us":
                 (kernels.get("ffn_fused_kernel") or {}).get("us_per_call"),

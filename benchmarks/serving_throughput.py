@@ -14,6 +14,18 @@ weight-I/O saved by γ-window reuse (paper Fig. 7c). Model quality is
 irrelevant to throughput, so params are random — no training, which keeps
 this runnable in the CI benchmark-smoke job (BENCH_SMOKE=1 shrinks the
 workload).
+
+Every case reports the best of ``_TIMED_REPS`` timed runs (compile/warm
+dominates the wall; the timed section is ~1 s, so an unlucky scheduling
+window on a shared runner would otherwise pollute the committed
+trajectory the regression gate compares against).
+
+Every continuous-batching case also reports engine-side latency
+percentiles (TTFT / TPOT / queue-wait p50+p99, in ms) read from the
+observability histograms (repro.obs) — the warm compile run is excluded
+via ``eng.obs.reset()``, so the timed runs alone feed the buckets.
+The merged Prometheus snapshot across all cases is written to
+``experiments/bench_serving.prom`` (a CI artifact next to the JSON).
 """
 from __future__ import annotations
 
@@ -27,9 +39,29 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import registry
+from repro.obs import merge_snapshots, render_prometheus
 from repro.serving import ContinuousBatchingEngine, ServeEngine
 
 SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+# engine-side span histograms -> reported percentile keys (values in ms)
+_SPAN_METRICS = (("ttft", "repro_request_ttft_seconds"),
+                 ("tpot", "repro_request_tpot_seconds"),
+                 ("queue_wait", "repro_request_queue_wait_seconds"))
+
+
+def _span_percentiles(eng, case: str) -> dict:
+    """TTFT / TPOT / queue-wait p50+p99 (ms) from the engine's obs
+    histograms — engine-side spans (admission to tokens recorded), so they
+    isolate scheduler/step latency from asyncio plumbing. Values are
+    log-bucket upper edges clamped to the observed [min, max]."""
+    out = {}
+    for short, metric in _SPAN_METRICS:
+        for q, tag in ((0.5, "p50"), (0.99, "p99")):
+            v = eng.obs.quantile(metric, q)
+            if v is not None:
+                out[f"{case}_{short}_{tag}_ms"] = v * 1e3
+    return out
 
 
 def _workload(cfg, n_requests):
@@ -41,6 +73,13 @@ def _workload(cfg, n_requests):
     return prompts, [int(m) for m in max_news]
 
 
+# every case reports the best of N timed runs: the timed section is ~1 s
+# while warm/compile dominates the wall, and shared CI runners (and dev
+# boxes) are noisy — a single unlucky scheduling window otherwise pollutes
+# the committed trajectory the regression gate compares against
+_TIMED_REPS = 3
+
+
 def _run_legacy(cfg, params, prompts, max_news, max_len):
     eng = ServeEngine(cfg, params, max_len=max_len)
     def serve():
@@ -50,9 +89,12 @@ def _run_legacy(cfg, params, prompts, max_news, max_len):
             n += r.tokens.shape[1]
         return n
     serve()  # warm (compile)
-    t0 = time.time()
-    n = serve()
-    return n / (time.time() - t0)
+    best = 0.0
+    for _ in range(_TIMED_REPS):
+        t0 = time.time()
+        n = serve()
+        best = max(best, n / (time.time() - t0))
+    return best
 
 
 def _run_cb(cfg, params, prompts, max_news, *, arrival_every, gamma=0,
@@ -93,19 +135,26 @@ def _run_cb(cfg, params, prompts, max_news, *, arrival_every, gamma=0,
         return sum(len(res[u].tokens) for u in uids)
     serve()  # warm (compile; the jit caches live on the engine instance)
     eng.scheduler.results.clear()
+    # drop the warm run's spans/histograms so the reported percentiles
+    # describe the timed workload only (safe here: every warm request has
+    # retired; never call reset() on a live server)
+    eng.obs.reset()
     sched = eng.scheduler
-    if sched.prefix is not None:
-        # measure the prefix cache COLD: the warm run must not leak its
-        # trie (which would turn every timed admission into a full-prompt
-        # hit) or its hit counters into the reported workload — the timed
-        # numbers are the in-run sharing of the workload itself
-        sched.prefix.evict(sched.allocator, len(sched.prefix))
-        sched.prefill_tokens_total = 0
-        sched.prefill_tokens_saved = 0
-    t0 = time.time()
-    n = serve()
-    dt = time.time() - t0
-    return n / dt, eng
+    best = 0.0
+    for _ in range(_TIMED_REPS):
+        if sched.prefix is not None:
+            # measure the prefix cache COLD each run: no run may leak its
+            # trie (which would turn every timed admission into a
+            # full-prompt hit) or its hit counters into the next — the
+            # timed numbers are the in-run sharing of the workload itself
+            sched.prefix.evict(sched.allocator, len(sched.prefix))
+            sched.prefill_tokens_total = 0
+            sched.prefill_tokens_saved = 0
+        t0 = time.time()
+        n = serve()
+        best = max(best, n / (time.time() - t0))
+        eng.scheduler.results.clear()
+    return best, eng
 
 
 def _run_api_stream(cfg, params, prompts, max_news):
@@ -113,7 +162,8 @@ def _run_api_stream(cfg, params, prompts, max_news):
     with one concurrent client per request, measuring what an online
     caller feels: TTFT (submit -> first streamed token, queueing included)
     and TPOT (mean gap between consecutive streamed tokens), plus the
-    aggregate streamed tokens/s. Returns (tokens_per_s, ttft_s, tpot_s)."""
+    aggregate streamed tokens/s. Returns (tokens_per_s, ttft_s, tpot_s,
+    engine) — the engine carries the timed run's obs histograms."""
     import asyncio
 
     from repro.serving import AsyncServingEngine
@@ -135,14 +185,20 @@ def _run_api_stream(cfg, params, prompts, max_news):
                                           for p, m in zip(prompts, max_news)])
 
     asyncio.run(serve())  # warm (compile)
-    t0 = time.time()
-    per_client = asyncio.run(serve())
-    wall = time.time() - t0
-    n = sum(len(stamps) for _, stamps in per_client)
-    ttfts = [stamps[0] - t for t, stamps in per_client if stamps]
-    gaps = [(stamps[-1] - stamps[0]) / (len(stamps) - 1)
-            for _, stamps in per_client if len(stamps) > 1]
-    return n / wall, float(np.mean(ttfts)), float(np.mean(gaps))
+    eng.obs.reset()  # exclude the warm run from the obs histograms
+    best = None  # (tokens/s, ttft, tpot) of the quietest timed run
+    for _ in range(_TIMED_REPS):
+        t0 = time.time()
+        per_client = asyncio.run(serve())
+        wall = time.time() - t0
+        n = sum(len(stamps) for _, stamps in per_client)
+        ttfts = [stamps[0] - t for t, stamps in per_client if stamps]
+        gaps = [(stamps[-1] - stamps[0]) / (len(stamps) - 1)
+                for _, stamps in per_client if len(stamps) > 1]
+        cand = (n / wall, float(np.mean(ttfts)), float(np.mean(gaps)))
+        if best is None or cand[0] > best[0]:
+            best = cand
+    return best[0], best[1], best[2], eng
 
 
 def run():
@@ -159,18 +215,24 @@ def run():
     rows.append(f"serving/legacy_sequential,{1e6 / tps_legacy:.0f},"
                 f"toks_per_s={tps_legacy:.1f}")
 
+    engines = []  # every CB engine's obs snapshot merges into the .prom
+
     rates = [0, 2] if SMOKE else [0, 2, 6]
     for rate in rates:
-        tps, _ = _run_cb(cfg, params, prompts, max_news,
-                         arrival_every=rate)
+        tps, eng_r = _run_cb(cfg, params, prompts, max_news,
+                             arrival_every=rate)
+        engines.append(eng_r)
         full[f"cb_rate{rate}_tokens_per_s"] = tps
         full[f"cb_rate{rate}_speedup"] = tps / tps_legacy
+        full.update(_span_percentiles(eng_r, f"cb_rate{rate}"))
         rows.append(f"serving/cb_rate{rate},{1e6 / tps:.0f},"
                     f"toks_per_s={tps:.1f};speedup={tps / tps_legacy:.2f}x")
 
     # γ-window reuse: same workload, masked decode between refreshes
     tps_g, eng_g = _run_cb(cfg, params, prompts, max_news,
                            arrival_every=0, gamma=4)
+    engines.append(eng_g)
+    full.update(_span_percentiles(eng_g, "cb_gamma4"))
     io_saved, tiles = eng_g.weight_io_saved(), eng_g.tile_activity_rate()
     full["cb_gamma4_tokens_per_s"] = tps_g
     full["cb_gamma4_io_saved"] = io_saved
@@ -187,6 +249,8 @@ def run():
                                                     dcfg)
     tps_s, eng_s = _run_cb(cfg, params, prompts, max_news,
                            arrival_every=0, gamma=4, draft=(dcfg, dparams))
+    engines.append(eng_s)
+    full.update(_span_percentiles(eng_s, "cb_spec_gamma4"))
     s_agg, tiles_s = eng_s.weight_io_saved(), eng_s.tile_activity_rate()
     full["cb_spec_gamma4_tokens_per_s"] = tps_s
     full["cb_spec_gamma4_s_agg"] = s_agg
@@ -206,6 +270,8 @@ def run():
                      target_recall=1.0, tile=1)
     tps_p, eng_p = _run_cb(cfg, params, prompts, max_news,
                            arrival_every=0, predictor=pred)
+    engines.append(eng_p)
+    full.update(_span_percentiles(eng_p, "cb_predictor"))
     io_p, tiles_p = eng_p.weight_io_saved(), eng_p.tile_activity_rate()
     full["cb_predictor_tokens_per_s"] = tps_p
     full["cb_predictor_io_saved"] = io_p
@@ -228,6 +294,8 @@ def run():
                              arrival_every=2, n_slots=2,
                              max_blocks_per_seq=6,
                              prefill_chunk=16, prefix_cache=True)
+    engines.append(eng_pc)
+    full.update(_span_percentiles(eng_pc, "cb_prefix_cache"))
     hit, saved = eng_pc.prefix_hit_rate(), eng_pc.prefill_tokens_saved()
     full["cb_prefix_cache_tokens_per_s"] = tps_pc
     full["cb_prefix_cache_hit_rate"] = hit
@@ -239,7 +307,10 @@ def run():
     # async streaming API: the same engine behind AsyncServingEngine with
     # one concurrent SSE-style client per request — the latency numbers
     # (TTFT / TPOT) are what check_trajectory.py gates PR-over-PR
-    tps_api, ttft, tpot = _run_api_stream(cfg, params, prompts, max_news)
+    tps_api, ttft, tpot, eng_api = _run_api_stream(cfg, params, prompts,
+                                                   max_news)
+    engines.append(eng_api)
+    full.update(_span_percentiles(eng_api, "cb_api_stream"))
     full["cb_api_stream_tokens_per_s"] = tps_api
     full["cb_api_stream_ttft_ms"] = ttft * 1e3
     full["cb_api_stream_tpot_ms"] = tpot * 1e3
@@ -247,9 +318,29 @@ def run():
                 f"toks_per_s={tps_api:.1f};ttft_ms={ttft * 1e3:.1f};"
                 f"tpot_ms={tpot * 1e3:.2f}")
 
+    # workload-wide latency percentiles: merge every case's obs snapshot
+    # (bucket-wise counter/histogram add — associative, so the merge order
+    # is irrelevant) and read the aggregate quantiles off the union. These
+    # are the keys check_trajectory.py gates PR-over-PR.
+    from repro.obs import snapshot_quantile
+    merged = merge_snapshots(*[e.obs.snapshot() for e in engines])
+    for short, metric in _SPAN_METRICS:
+        for q, tag in ((0.5, "p50"), (0.99, "p99")):
+            v = snapshot_quantile(merged, metric, q)
+            if v is not None:
+                full[f"serving_{short}_{tag}_ms"] = v * 1e3
+    rows.append(
+        f"serving/latency_percentiles,0,"
+        f"ttft_p50_ms={full.get('serving_ttft_p50_ms', float('nan')):.2f};"
+        f"ttft_p99_ms={full.get('serving_ttft_p99_ms', float('nan')):.2f};"
+        f"tpot_p50_ms={full.get('serving_tpot_p50_ms', float('nan')):.2f};"
+        f"tpot_p99_ms={full.get('serving_tpot_p99_ms', float('nan')):.2f}")
+
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/bench_serving.json", "w") as f:
         json.dump(full, f, indent=2)
+    with open("experiments/bench_serving.prom", "w") as f:
+        f.write(render_prometheus(merged))
     return rows
 
 

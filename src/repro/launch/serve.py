@@ -184,6 +184,9 @@ def main() -> None:
                   f"window s_agg={eng.s_agg_window():.3f}; "
                   f"Thm1 sparse-verify speedup "
                   f"{np.mean([m.thm1_speedup for m in ms]):.3f}x")
+        from repro.obs import format_statusz
+        print("-- final observability snapshot --")
+        print(format_statusz(eng), end="")
         return
 
     if args.smoke:

@@ -2,10 +2,27 @@
 
 A deliberately dependency-free server (stdlib asyncio only — the repo's
 serving path must run from the ``repro[test]`` install) exposing
-``AsyncServingEngine`` over two endpoints:
+``AsyncServingEngine`` over:
 
-  GET  /healthz          -> {"ok": true, "mode": ...}
+  GET  /healthz          -> {"ok": true, "mode": ..., "steps": ...,
+                             "uptime_s": ...}
+  GET  /metrics          -> Prometheus text exposition of the engine's
+                            observability registry (repro.obs): request /
+                            token counters, step-phase + TTFT/TPOT/queue-
+                            wait histograms, occupancy gauges. Unavailable
+                            series (e.g. predictor recall with telemetry
+                            off) are OMITTED, never rendered as zeros.
+  GET  /statusz          -> human-readable engine snapshot: config,
+                            occupancy, scalar metrics, latency
+                            percentiles, live + recent requests
+  GET  /profilez?ms=N    -> opt-in jax.profiler capture: traces the next
+                            N ms into --profilez-dir (403 unless the flag
+                            was given; one capture at a time)
   POST /v1/generate      -> token stream (SSE) or one JSON body
+
+``--log-json PATH`` additionally streams one JSON object per request
+lifecycle event (submit / admit / first_token / finish / api_finish) to
+PATH ("-" = stderr) — the structured event log.
 
 Request body (JSON)::
 
@@ -40,6 +57,7 @@ import argparse
 import asyncio
 import json
 import sys
+import time
 from typing import Optional
 
 
@@ -65,6 +83,12 @@ def parse_args(argv=None) -> argparse.Namespace:
                     help="engine base seed for unseeded sampled requests")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8151)
+    ap.add_argument("--log-json", default=None, metavar="PATH",
+                    help="append one JSON object per request lifecycle "
+                         "event to PATH ('-' = stderr)")
+    ap.add_argument("--profilez-dir", default=None, metavar="DIR",
+                    help="enable GET /profilez?ms=N jax.profiler captures "
+                         "into DIR (disabled when omitted)")
     return ap.parse_args(argv)
 
 
@@ -154,9 +178,13 @@ class ApiServer:
     """One engine, one asyncio TCP server. Kept as a class so in-process
     tests can drive the exact wire path without a subprocess."""
 
-    def __init__(self, api, mode: str = "plain"):
+    def __init__(self, api, mode: str = "plain",
+                 profilez_dir: Optional[str] = None):
         self.api = api
         self.mode = mode
+        self.profilez_dir = profilez_dir
+        self._profiling = False  # one jax.profiler capture at a time
+        self._t0 = time.monotonic()
         self._server: Optional[asyncio.AbstractServer] = None
 
     @property
@@ -177,10 +205,10 @@ class ApiServer:
             if req is None:
                 return
             method, path, raw = req
-            if method == "GET" and path == "/healthz":
-                writer.write(_response("200 OK", json.dumps(
-                    {"ok": True, "mode": self.mode}).encode()))
-                await writer.drain()
+            path, _, query = path.partition("?")
+            if method == "GET" and path in ("/healthz", "/metrics",
+                                            "/statusz", "/profilez"):
+                await self._handle_get(writer, path, query)
                 return
             if method != "POST" or path != "/v1/generate":
                 writer.write(_response("404 Not Found",
@@ -209,6 +237,76 @@ class ApiServer:
                 await writer.wait_closed()
             except (ConnectionResetError, BrokenPipeError):
                 pass
+
+    async def _handle_get(self, writer, path: str, query: str) -> None:
+        """Observability endpoints — pure reads of the engine's obs hub
+        (safe between steps: the serve loop and this handler share the
+        event loop thread), except /profilez which runs a bounded
+        jax.profiler capture."""
+        engine = self.api.engine
+        if path == "/healthz":
+            writer.write(_response("200 OK", json.dumps(
+                {"ok": True, "mode": self.mode, "steps": engine.t,
+                 "uptime_s": round(time.monotonic() - self._t0, 3)}
+            ).encode()))
+        elif path == "/metrics":
+            # unavailable series are simply absent from the registry —
+            # never a 500, never a fabricated zero
+            writer.write(_response("200 OK", engine.obs.render().encode(),
+                                   ctype="text/plain; version=0.0.4"))
+        elif path == "/statusz":
+            from repro.obs import format_statusz
+            writer.write(_response("200 OK",
+                                   format_statusz(engine).encode(),
+                                   ctype="text/plain; charset=utf-8"))
+        else:  # /profilez
+            await self._profilez(writer, query)
+            return
+        await writer.drain()
+
+    async def _profilez(self, writer, query: str) -> None:
+        """Opt-in jax.profiler capture: trace the next ``ms`` milliseconds
+        of serving into --profilez-dir. The capture window overlaps live
+        traffic — the point is profiling real steps, not a synthetic
+        workload."""
+        if self.profilez_dir is None:
+            writer.write(_response("403 Forbidden", json.dumps(
+                {"error": "profiling disabled: start the server with "
+                          "--profilez-dir"}).encode()))
+            await writer.drain()
+            return
+        params = dict(kv.split("=", 1) for kv in query.split("&")
+                      if "=" in kv)
+        try:
+            ms = max(1, min(60_000, int(params.get("ms", "500"))))
+        except ValueError:
+            writer.write(_response("400 Bad Request",
+                                   b'{"error": "ms must be an integer"}'))
+            await writer.drain()
+            return
+        if self._profiling:
+            writer.write(_response(
+                "409 Conflict", b'{"error": "a capture is already running"}'))
+            await writer.drain()
+            return
+        self._profiling = True
+        try:
+            import jax
+            jax.profiler.start_trace(self.profilez_dir)
+            try:
+                await asyncio.sleep(ms / 1000.0)
+            finally:
+                jax.profiler.stop_trace()
+        except Exception as e:  # capture failure must not kill the server
+            writer.write(_response("500 Internal Server Error", json.dumps(
+                {"error": f"profiler capture failed: {e}"}).encode()))
+            await writer.drain()
+            return
+        finally:
+            self._profiling = False
+        writer.write(_response("200 OK", json.dumps(
+            {"ok": True, "ms": ms, "dir": self.profilez_dir}).encode()))
+        await writer.drain()
 
     async def _generate(self, writer, prompt, max_new, sampling,
                         reuse_window, stream: bool) -> None:
@@ -262,12 +360,25 @@ class ApiServer:
             raise
 
 
+def _json_event_writer(path: str):
+    """Line-delimited JSON sink for --log-json ('-' = stderr). Line-
+    buffered so a crashed server leaves a readable log behind."""
+    stream = sys.stderr if path == "-" else open(path, "a", buffering=1)
+
+    def write(event: dict) -> None:
+        stream.write(json.dumps(event) + "\n")
+    return write
+
+
 async def _amain(args: argparse.Namespace) -> None:
     from repro.serving import AsyncServingEngine
 
     engine = build_engine(args)
+    if args.log_json:
+        engine.obs.log_event = _json_event_writer(args.log_json)
     async with AsyncServingEngine(engine) as api:
-        server = ApiServer(api, mode=args.mode)
+        server = ApiServer(api, mode=args.mode,
+                           profilez_dir=args.profilez_dir)
         await server.start(args.host, args.port)
         print("READY " + json.dumps({"host": args.host, "port": server.port,
                                      "mode": args.mode}), flush=True)

@@ -11,7 +11,12 @@ under test, spawned as a real subprocess speaking real HTTP):
      ``engine.run()`` over a reference engine built with the SAME args
      (serve_api.build_engine — same random weights, same config);
   4. assert the server survives the disconnect: /healthz still answers
-     and a post-disconnect greedy request still matches the reference.
+     and a post-disconnect greedy request still matches the reference;
+  5. scrape ``/metrics`` mid-run (availability under load) and again at
+     the end, asserting the scraped request/token counters agree with the
+     client-observed counts, ``/statusz`` renders, and ``/profilez`` is
+     403 without its opt-in flag; the final scrape is written to
+     ``--metrics-out`` (a ``.prom`` file CI uploads as an artifact).
 
 Exit code 0 = pass. Any mismatch/timeout prints a diagnosis and exits 1;
 the CI job uploads ``--log`` as an artifact on failure.
@@ -109,6 +114,22 @@ async def stream_client(port: int, body: dict,
     return tokens, final
 
 
+async def http_get(port: int, path: str) -> Tuple[int, str]:
+    """One GET request; returns (status code, body text)."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: smoke\r\n\r\n".encode())
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionResetError, BrokenPipeError):
+        pass
+    head, _, body = data.partition(b"\r\n\r\n")
+    status = int(head.split()[1]) if head.split() else 0
+    return status, body.decode("utf-8", "replace")
+
+
 async def healthz(port: int) -> bool:
     try:
         reader, writer = await asyncio.open_connection("127.0.0.1", port)
@@ -135,11 +156,14 @@ def reference_streams(mode: str, reqs: List[dict]) -> dict:
     return {i: [int(t) for t in res[u].tokens] for i, u in uids.items()}
 
 
-async def drive(port: int, mode: str) -> None:
+async def drive(port: int, mode: str,
+                metrics_out: Optional[str] = None) -> None:
     from repro.configs import get_config
+    from repro.obs import parse_prometheus
     vocab = get_config("tiny-relu").vocab_size
     reqs = workload(vocab)
     ref = reference_streams(mode, reqs)
+    failures: List[str] = []
 
     async def run_one(i: int):
         return await asyncio.wait_for(
@@ -147,9 +171,25 @@ async def drive(port: int, mode: str) -> None:
                           disconnect_after=3 if i == 5 else None),
             CLIENT_TIMEOUT_S)
 
-    results = await asyncio.gather(*[run_one(i) for i in range(len(reqs))])
+    async def midrun_scrape():
+        # scrape while the client streams are (very likely — the first
+        # steps pay jit compiles) still in flight: /metrics must answer
+        # under load, and the counters must already be consistent
+        await asyncio.sleep(1.0)
+        status, text = await http_get(port, "/metrics")
+        if status != 200:
+            failures.append(f"mid-run /metrics returned {status}")
+            return
+        m = parse_prometheus(text)
+        submitted = m.get(("repro_requests_submitted_total", ""), 0.0)
+        finished = sum(v for (name, _), v in m.items()
+                       if name == "repro_requests_finished_total")
+        if not (1 <= submitted <= len(reqs) and 0 <= finished <= submitted):
+            failures.append(f"mid-run counters inconsistent: "
+                            f"submitted={submitted} finished={finished}")
 
-    failures = []
+    results = (await asyncio.gather(*[run_one(i) for i in range(len(reqs))],
+                                    midrun_scrape()))[:len(reqs)]
     for i, (tokens, final) in enumerate(results):
         if i == 5:
             if final is not None:
@@ -180,6 +220,63 @@ async def drive(port: int, mode: str) -> None:
     if tokens != ref[0]:
         failures.append(f"post-disconnect greedy stream {tokens} != "
                         f"reference {ref[0]}")
+
+    # -- final /metrics scrape: counters must agree with what the clients
+    # themselves observed (9 requests total: the 8-request workload + the
+    # post-disconnect probe). The disconnected client saw 3 tokens; the
+    # engine may have decoded up to its max_new before the cancel landed,
+    # so its engine-side token count is bounded, not pinned.
+    status, text = await http_get(port, "/metrics")
+    if status != 200:
+        failures.append(f"final /metrics returned {status}")
+        text = ""
+    m = parse_prometheus(text)
+
+    def counter(name: str, labels: str = "") -> float:
+        return m.get((name, labels), 0.0)
+
+    n_expected = len(reqs) + 1
+    for name in ("repro_requests_submitted_total",
+                 "repro_requests_admitted_total"):
+        if counter(name) != n_expected:
+            failures.append(f"{name}={counter(name)} != {n_expected} "
+                            f"client-submitted requests")
+    by_reason = {lab: v for (name, lab), v in m.items()
+                 if name == "repro_requests_finished_total"}
+    if sum(by_reason.values()) != n_expected:
+        failures.append(f"finished-by-reason {by_reason} does not sum to "
+                        f"{n_expected}")
+    if by_reason.get('reason="cancelled"', 0.0) > 1:
+        failures.append(f"more than one cancelled request: {by_reason}")
+    completed = (sum(len(t) for i, (t, _) in enumerate(results) if i != 5)
+                 + len(tokens))
+    gen = counter("repro_generated_tokens_total")
+    lo, hi = completed + 3, completed + reqs[5]["max_new"]
+    if not lo <= gen <= hi:
+        failures.append(f"generated_tokens_total={gen} outside "
+                        f"[{lo}, {hi}] (clients observed {completed} "
+                        f"completed tokens + 3..{reqs[5]['max_new']} on "
+                        f"the disconnected stream)")
+    if counter("repro_request_ttft_seconds_count") != n_expected:
+        failures.append(f"ttft histogram count "
+                        f"{counter('repro_request_ttft_seconds_count')} != "
+                        f"{n_expected}")
+    if mode == "predictor" and counter(
+            "repro_predictor_active_neurons_total") <= 0:
+        failures.append("predictor mode served but recall telemetry "
+                        "counters are absent from /metrics")
+    # /statusz renders; /profilez is 403 without its opt-in flag
+    s_status, s_text = await http_get(port, "/statusz")
+    if s_status != 200 or "repro serving engine" not in s_text:
+        failures.append(f"/statusz broken (status {s_status})")
+    p_status, _ = await http_get(port, "/profilez?ms=10")
+    if p_status != 403:
+        failures.append(f"/profilez without --profilez-dir returned "
+                        f"{p_status}, expected 403")
+    if metrics_out and text:
+        with open(metrics_out, "w") as f:
+            f.write(text)
+
     if failures:
         raise AssertionError("serve-smoke failures:\n  "
                              + "\n  ".join(failures))
@@ -194,8 +291,13 @@ def main() -> None:
     ap.add_argument("--mode", choices=["plain", "spec", "predictor"],
                     default="plain")
     ap.add_argument("--log", default="serve_smoke_server.log")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final /metrics scrape here "
+                         "(default serve_smoke_metrics_<mode>.prom)")
     ap.add_argument("--boot-timeout", type=float, default=300.0)
     args = ap.parse_args()
+    if args.metrics_out is None:
+        args.metrics_out = f"serve_smoke_metrics_{args.mode}.prom"
 
     cmd = [sys.executable, "-u", "-m", "repro.launch.serve_api",
            "--port", "0"] + server_args(args.mode)
@@ -223,7 +325,7 @@ def main() -> None:
         t = threading.Thread(target=shutil.copyfileobj,
                              args=(proc.stdout, log), daemon=True)
         t.start()
-        asyncio.run(drive(port, args.mode))
+        asyncio.run(drive(port, args.mode, args.metrics_out))
     except BaseException as e:
         print(f"serve-smoke FAIL [{args.mode}]: {e}", file=sys.stderr)
         raise SystemExit(1)

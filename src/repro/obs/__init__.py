@@ -1,0 +1,19 @@
+"""Observability for the serving stack: a dependency-free metrics
+registry (obs/metrics.py) and engine step/request tracing (obs/tracing.py).
+
+Import surface is deliberately jax-free — the host-only scheduler hooks
+into ``EngineObs`` and must stay importable without a device runtime.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, Registry,
+                               hist_quantile, label_str, merge_snapshots,
+                               parse_prometheus, render_prometheus,
+                               snapshot_quantile)
+from repro.obs.tracing import (PHASES, EngineObs, RequestSpan, StepTrace,
+                               format_statusz)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry",
+    "hist_quantile", "label_str", "merge_snapshots", "parse_prometheus",
+    "render_prometheus", "snapshot_quantile",
+    "PHASES", "EngineObs", "RequestSpan", "StepTrace", "format_statusz",
+]

@@ -1,7 +1,8 @@
 """Serving stack: continuous-batching engine over a paged KV cache (with a
 first-class speculative-decoding mode), the async streaming API layer with
-per-request sampling, the legacy single-batch engine, scheduler, and
-speculative-decoding metrics."""
+per-request sampling, the legacy single-batch engine, scheduler,
+speculative-decoding metrics, and the observability hub (repro.obs)."""
+from repro.obs import EngineObs, format_statusz  # noqa: F401
 from repro.serving.api import AsyncServingEngine, TokenEvent  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
     ContinuousBatchingEngine, GenerationResult, ServeEngine,

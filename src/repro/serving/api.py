@@ -230,12 +230,17 @@ class AsyncServingEngine:
                 continue
             self._emit(uid, res.tokens, res.logprobs, now)
             sess.closed = True
+            ttft_s = (sess.t_first - sess.t_submit
+                      if sess.t_first is not None else None)
+            total_s = now - sess.t_submit
+            # API-boundary latency span (includes loop scheduling, unlike
+            # the engine-side scheduler spans) — feeds repro_api_* series
+            self.engine.obs.api_request_done(uid, ttft_s, total_s,
+                                             len(res.tokens))
             sess.queue.put_nowait(TokenEvent(
                 uid=uid, index=sess.n_sent, finished=True,
                 finish_reason=res.finish_reason, result=res,
-                ttft_s=(sess.t_first - sess.t_submit
-                        if sess.t_first is not None else None),
-                total_s=now - sess.t_submit))
+                ttft_s=ttft_s, total_s=total_s))
 
     def _emit(self, uid: int, tokens, lps, now: float) -> None:
         sess = self._sessions.get(uid)

@@ -34,6 +34,7 @@ from repro.configs.base import ModelConfig
 from repro.core.sparsity import AggregatedTracker
 from repro.models import common as cm
 from repro.models import registry
+from repro.obs import EngineObs
 from repro.serving import sampling as smp
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Request, RequestResult, Scheduler
@@ -148,6 +149,14 @@ class ContinuousBatchingEngine:
         are bit-frozen (bf16 exactness pins); at f32 the sharded engine's
         greedy streams are byte-identical to it in all three serving
         modes (tests/test_sharded_serving.py).
+    obs: an ``EngineObs`` observability hub (repro.obs). None (default)
+        creates an enabled one per engine: step-phase tracing, per-request
+        spans, and labeled counters/histograms feed the ``/metrics`` and
+        ``/statusz`` endpoints (launch/serve_api.py). Hooks only touch
+        host-side values the step already fetched — zero added device
+        syncs, and f32 greedy streams are byte-identical with
+        observability on or off (tests/test_obs.py). Pass
+        ``EngineObs.disabled()`` to turn every hook into an early return.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
@@ -159,7 +168,8 @@ class ContinuousBatchingEngine:
                  predictor=None, predictor_telemetry: bool = True,
                  prefill_chunk: int = 0, prefix_cache: bool = False,
                  warm_masks: bool = False, mesh=None, base_seed: int = 0,
-                 fast_kernels: Optional[bool] = None):
+                 fast_kernels: Optional[bool] = None,
+                 obs: Optional[EngineObs] = None):
         fam = registry.get_family(cfg)
         if not hasattr(fam, "model_decode_paged"):
             raise ValueError(
@@ -221,9 +231,10 @@ class ContinuousBatchingEngine:
         self.track = track_sparsity
         self.prefill_chunk = prefill_chunk
         self.warm_masks = warm_masks
+        self.obs = obs if obs is not None else EngineObs()
         self.scheduler = Scheduler(n_slots, n_blocks, block_size,
                                    max_blocks_per_seq,
-                                   prefix_cache=prefix_cache)
+                                   prefix_cache=prefix_cache, obs=self.obs)
         self.pages = fam.init_paged_cache(
             cfg, n_blocks, block_size,
             sharding=self._pool_sharding(cfg, n_blocks))
@@ -243,6 +254,11 @@ class ContinuousBatchingEngine:
         # predictor-mode recall accounting (in-graph miss counts)
         self._pred_active = 0
         self._pred_miss = 0
+        # the current step's mean measured density / tile activity over
+        # active slots — stashed by _account() from the SAME numpy arrays
+        # it already fetched, so obs.step_end costs no extra device sync
+        self._step_density: Optional[float] = None
+        self._step_tiles: Optional[float] = None
 
         vocab = cfg.vocab_size
         self.base_seed = base_seed
@@ -465,6 +481,15 @@ class ContinuousBatchingEngine:
                 self._prefill_chunk_draft = self._jit(prefill_chunk_draft,
                                                       donate_argnums=(1,))
 
+        self.obs.set_engine_info(
+            arch=cfg.name,
+            mode=("spec" if self.spec
+                  else "predictor" if self.predictor is not None
+                  else "plain"),
+            n_slots=n_slots, block_size=block_size,
+            prefill_chunk=prefill_chunk, tp=self.tp,
+            fast_kernels=self.fast_kernels)
+
     # -- mesh plumbing -------------------------------------------------------
     def _jit(self, fn, **kw):
         """jax.jit whose *calls* run under the engine's mesh: constraints in
@@ -532,9 +557,11 @@ class ContinuousBatchingEngine:
         False for unknown/finished uids."""
         return self.scheduler.cancel(uid)
 
-    def _admit(self) -> bool:
+    def _admit(self, st=None) -> bool:
         """Retire finished requests, admit queued ones, and advance prefill
-        (into the draft's page pool too, in speculative mode).
+        (into the draft's page pool too, in speculative mode). ``st`` is
+        the step's phase trace; standalone callers (tests driving prefill
+        chunk-by-chunk) may omit it and get a throwaway one.
 
         Whole-prompt mode (prefill_chunk == 0): every newly admitted
         request is prefilled to completion right here — the frozen legacy
@@ -542,40 +569,63 @@ class ContinuousBatchingEngine:
         window step advances EVERY prefilling slot by one chunk, so
         admission work is interleaved with (and latency-bounded like) the
         decode step; slots whose prompt completes are seeded from that
-        chunk's logits. Returns True when any prefill work ran."""
+        chunk's logits. Returns True when any prefill work ran.
+
+        ``st`` is the step's StepTrace: retirement + admission time under
+        "admit", all prefill work (whole-prompt or one chunk, including its
+        host fetches) under "prefill"."""
+        if st is None:
+            st = self.obs.step_start()  # throwaway trace, never reported
         sched = self.scheduler
-        sched.retire_finished(self.t)
-        newly = sched.admit(self.t)
-        if self.track:
-            for _, slot in newly:
-                self.trackers[slot.request.uid] = AggregatedTracker(
-                    self.cfg.n_layers, self.cfg.d_ff)
+        with st.phase("admit"):
+            sched.retire_finished(self.t)
+            newly = sched.admit(self.t)
+            if self.track:
+                for _, slot in newly:
+                    self.trackers[slot.request.uid] = AggregatedTracker(
+                        self.cfg.n_layers, self.cfg.d_ff)
         if not self.prefill_chunk:
-            for _, slot in newly:
-                s = slot.request.prompt_len
-                nb_eff = -(-s // self.block_size)  # blocks the prompt holds
-                toks = np.zeros((1, nb_eff * self.block_size), np.int32)
-                toks[0, :s] = slot.request.tokens
-                jt = jnp.asarray(toks)
-                blocks = jnp.asarray(slot.blocks[:nb_eff], jnp.int32)
-                true_len = jnp.asarray(s, jnp.int32)
-                sp = slot.request.sampling or smp.GREEDY
-                rkey = (slot.request.key if slot.request.key is not None
-                        else np.zeros((2,), np.uint32))
-                nxt, lp, self.pages = self._prefill(
-                    self.params, jt, self.pages, blocks, true_len,
-                    jnp.asarray([sp.temperature], jnp.float32),
-                    jnp.asarray([sp.top_k], jnp.int32),
-                    jnp.asarray([sp.top_p], jnp.float32),
-                    jnp.asarray(rkey[None, :]))
-                if self.spec:
-                    self.draft_pages = self._prefill_draft(
-                        self.draft_params, jt, self.draft_pages, blocks,
-                        true_len)
-                sched.seed(slot, int(nxt), float(lp))
-            return bool(newly)
+            if not newly:
+                return False
+            with st.phase("prefill"):
+                self._prefill_whole(newly)
+            return True
         if not sched.prefill_indices():
             return False
+        with st.phase("prefill"):
+            self._prefill_one_chunk()
+        return True
+
+    def _prefill_whole(self, newly) -> None:
+        """Whole-prompt prefill of every newly admitted slot (the frozen
+        legacy lowering — prefill_chunk == 0)."""
+        sched = self.scheduler
+        for _, slot in newly:
+            s = slot.request.prompt_len
+            nb_eff = -(-s // self.block_size)  # blocks the prompt holds
+            toks = np.zeros((1, nb_eff * self.block_size), np.int32)
+            toks[0, :s] = slot.request.tokens
+            jt = jnp.asarray(toks)
+            blocks = jnp.asarray(slot.blocks[:nb_eff], jnp.int32)
+            true_len = jnp.asarray(s, jnp.int32)
+            sp = slot.request.sampling or smp.GREEDY
+            rkey = (slot.request.key if slot.request.key is not None
+                    else np.zeros((2,), np.uint32))
+            nxt, lp, self.pages = self._prefill(
+                self.params, jt, self.pages, blocks, true_len,
+                jnp.asarray([sp.temperature], jnp.float32),
+                jnp.asarray([sp.top_k], jnp.int32),
+                jnp.asarray([sp.top_p], jnp.float32),
+                jnp.asarray(rkey[None, :]))
+            if self.spec:
+                self.draft_pages = self._prefill_draft(
+                    self.draft_params, jt, self.draft_pages, blocks,
+                    true_len)
+            sched.seed(slot, int(nxt), float(lp))
+
+    def _prefill_one_chunk(self) -> None:
+        """One fixed-shape chunked-prefill window step (see _admit)."""
+        sched = self.scheduler
         (tokens, pos0, table, clen,
          first) = sched.prefill_batch(self.prefill_chunk)
         temps, tks, tps, skeys, _ = sched.sampling_arrays()
@@ -599,15 +649,19 @@ class ContinuousBatchingEngine:
                 self.draft_params, self.draft_pages, jt, jtok, jp, jc)
         sched.record_prefill(np.asarray(nxt), np.asarray(lp), clen,
                              warm=self.warm_masks)
-        return True
 
     def _account(self, active, dens_np, tiles_np, act) -> None:
-        """Per-(active slot, step) weight-I/O + sparsity-tracker updates."""
+        """Per-(active slot, step) weight-I/O + sparsity-tracker updates.
+        Also stashes the step means for obs.step_end — derived from the
+        numpy arrays this call already received, not a new fetch."""
         self.scheduler.record_io(active, dens_np)
         for i in active:
             self._dens_sum += float(dens_np[i])
             self._tiles_sum += float(tiles_np[i])
             self._dens_n += 1
+        if active:
+            self._step_density = float(np.mean(dens_np[active]))
+            self._step_tiles = float(np.mean(tiles_np[active]))
         if self.track:
             act_np = np.asarray(act)  # (L, B, F)
             for i in active:
@@ -620,56 +674,91 @@ class ContinuousBatchingEngine:
         decoded token each (autoregressive mode) or one drafted-and-verified
         γ-window each (speculative mode). Returns False when NO work ran —
         neither a prefill chunk nor a decode."""
-        prefilled = self._admit()
+        st = self.obs.step_start()
+        self._step_density = self._step_tiles = None
+        prefilled = self._admit(st)
         active = self.scheduler.active_indices()
         if active:
             if self.spec:
-                self._advance_spec(active)
+                self._advance_spec(active, st)
             elif self.predictor is not None:
-                self._advance_pred(active)
+                self._advance_pred(active, st)
             else:
-                self._advance(active)
+                self._advance(active, st)
         elif not prefilled:
+            self._obs_step_end(st, False, active)
             return False
         self.t += 1
+        self._obs_step_end(st, True, active)
         return True
 
-    def _advance(self, active) -> None:
+    def _obs_step_end(self, st, worked: bool, active) -> None:
+        """Close the step's trace with host-side state only (occupancy,
+        pool, queue, and the density _account() already stashed)."""
+        if not self.obs.enabled:
+            return
+        sched = self.scheduler
+        dens = self._step_density
+        self.obs.step_end(
+            st, worked=worked, slots_active=len(active),
+            n_slots=sched.n_slots, queue_depth=len(sched.queue),
+            pool_used=sched.allocator.allocated,
+            pool_total=sched.allocator.n_blocks - 1,
+            density=dens, tiles=self._step_tiles,
+            ffn_bytes=(None if dens is None
+                       else dens * self._mode_ffn_bytes() / self.ffn_tp))
+
+    def _advance(self, active, st) -> None:
         """Decode one token for every active slot."""
         sched = self.scheduler
-        tokens, pos, table, refresh = sched.batch_arrays()
-        temps, tks, tps, keys, gen = sched.sampling_arrays()
-        nxt, lp, self.pages, self.masks, tiles, dens, act = self._decode(
-            self.params, self.pages, jnp.asarray(table),
-            jnp.asarray(tokens), jnp.asarray(pos), self.masks,
-            jnp.asarray(refresh), jnp.asarray(temps), jnp.asarray(tks),
-            jnp.asarray(tps), jnp.asarray(keys), jnp.asarray(gen))
-        self._account(active, np.asarray(dens), np.asarray(tiles), act)
-        sched.record(np.asarray(nxt), np.asarray(lp))
+        with st.phase("dispatch"):
+            tokens, pos, table, refresh = sched.batch_arrays()
+            temps, tks, tps, keys, gen = sched.sampling_arrays()
+            nxt, lp, self.pages, self.masks, tiles, dens, act = self._decode(
+                self.params, self.pages, jnp.asarray(table),
+                jnp.asarray(tokens), jnp.asarray(pos), self.masks,
+                jnp.asarray(refresh), jnp.asarray(temps), jnp.asarray(tks),
+                jnp.asarray(tps), jnp.asarray(keys), jnp.asarray(gen))
+        with st.phase("host_sync"):
+            dens_np, tiles_np = np.asarray(dens), np.asarray(tiles)
+            nxt_np, lp_np = np.asarray(nxt), np.asarray(lp)
+        with st.phase("sample"):
+            self._account(active, dens_np, tiles_np, act)
+            sched.record(nxt_np, lp_np)
 
-    def _advance_pred(self, active) -> None:
+    def _advance_pred(self, active, st) -> None:
         """Predictor-mode decode: per-token predicted tile masks drive
         gathered up+down FFN matmuls inside the single jitted decode step;
         density / recall telemetry comes back with the batch."""
         sched = self.scheduler
-        tokens, pos, table, refresh = sched.batch_arrays()
-        temps, tks, tps, keys, gen = sched.sampling_arrays()
-        (nxt, lp, self.pages, self.masks, tiles, dens, act, n_act,
-         n_miss) = self._decode_pred(
-            self.params, self.pages, jnp.asarray(table), jnp.asarray(tokens),
-            jnp.asarray(pos), self.masks, jnp.asarray(refresh),
-            self.predictor.params, jnp.asarray(temps), jnp.asarray(tks),
-            jnp.asarray(tps), jnp.asarray(keys), jnp.asarray(gen))
-        dens_np = np.asarray(dens)
-        na, nm = np.asarray(n_act), np.asarray(n_miss)
-        self._account(active, dens_np, np.asarray(tiles), act)
-        for i in active:
-            self._pred_active += int(na[i])
-            self._pred_miss += int(nm[i])
-        sched.record(np.asarray(nxt), np.asarray(lp), pred_density=dens_np,
-                     pred_active=na, pred_miss=nm)
+        with st.phase("dispatch"):
+            tokens, pos, table, refresh = sched.batch_arrays()
+            temps, tks, tps, keys, gen = sched.sampling_arrays()
+            (nxt, lp, self.pages, self.masks, tiles, dens, act, n_act,
+             n_miss) = self._decode_pred(
+                self.params, self.pages, jnp.asarray(table),
+                jnp.asarray(tokens), jnp.asarray(pos), self.masks,
+                jnp.asarray(refresh), self.predictor.params,
+                jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps),
+                jnp.asarray(keys), jnp.asarray(gen))
+        with st.phase("host_sync"):
+            dens_np, tiles_np = np.asarray(dens), np.asarray(tiles)
+            na, nm = np.asarray(n_act), np.asarray(n_miss)
+            nxt_np, lp_np = np.asarray(nxt), np.asarray(lp)
+        with st.phase("sample"):
+            self._account(active, dens_np, tiles_np, act)
+            step_act = step_miss = 0
+            for i in active:
+                step_act += int(na[i])
+                step_miss += int(nm[i])
+            self._pred_active += step_act
+            self._pred_miss += step_miss
+            if self.predictor_telemetry:
+                self.obs.predictor_counts(step_act, step_miss)
+            sched.record(nxt_np, lp_np, pred_density=dens_np,
+                         pred_active=na, pred_miss=nm)
 
-    def _advance_spec(self, active) -> None:
+    def _advance_spec(self, active, st) -> None:
         """Speculative decode, batched across slots: γ draft tokens per
         slot from ONE jitted draft scan, then every slot's whole γ+1
         window through ONE jitted target forward. The only host traffic is
@@ -680,22 +769,31 @@ class ContinuousBatchingEngine:
         to their autoregressive sampled streams (key-coupled acceptance —
         serving/sampling.py)."""
         sched = self.scheduler
-        tokens, pos0, table, wlen = sched.spec_batch(self.gamma + 1)
-        temps, tks, tps, keys, gen0 = sched.sampling_arrays()
-        jt = jnp.asarray(table)
-        jp, jw = jnp.asarray(pos0), jnp.asarray(wlen)
-        jtemps, jtks, jtps = (jnp.asarray(temps), jnp.asarray(tks),
-                              jnp.asarray(tps))
-        jkeys, jgen = jnp.asarray(keys), jnp.asarray(gen0)
-        props, self.draft_pages = self._draft(
-            self.draft_params, self.draft_pages, jt, jnp.asarray(tokens),
-            jp, jw, jtemps, jtks, jtps, jkeys, jgen)
-        window = np.concatenate([tokens[:, None], np.asarray(props)], axis=1)
-        target, lp, self.pages, self.masks, tiles, udens, act = self._verify(
-            self.params, self.pages, jt, jnp.asarray(window), jp, jw,
-            self.masks, jtemps, jtks, jtps, jkeys, jgen)
-        self._account(active, np.asarray(udens), np.asarray(tiles), act)
-        sched.record_spec(window, np.asarray(target), np.asarray(lp), wlen)
+        with st.phase("dispatch"):
+            tokens, pos0, table, wlen = sched.spec_batch(self.gamma + 1)
+            temps, tks, tps, keys, gen0 = sched.sampling_arrays()
+            jt = jnp.asarray(table)
+            jp, jw = jnp.asarray(pos0), jnp.asarray(wlen)
+            jtemps, jtks, jtps = (jnp.asarray(temps), jnp.asarray(tks),
+                                  jnp.asarray(tps))
+            jkeys, jgen = jnp.asarray(keys), jnp.asarray(gen0)
+            props, self.draft_pages = self._draft(
+                self.draft_params, self.draft_pages, jt, jnp.asarray(tokens),
+                jp, jw, jtemps, jtks, jtps, jkeys, jgen)
+            # the (B, γ) proposal fetch is pipeline-necessary (the verify
+            # window is built from it), so it stays in "dispatch"
+            window = np.concatenate([tokens[:, None], np.asarray(props)],
+                                    axis=1)
+            (target, lp, self.pages, self.masks, tiles, udens,
+             act) = self._verify(
+                self.params, self.pages, jt, jnp.asarray(window), jp, jw,
+                self.masks, jtemps, jtks, jtps, jkeys, jgen)
+        with st.phase("host_sync"):
+            udens_np, tiles_np = np.asarray(udens), np.asarray(tiles)
+            target_np, lp_np = np.asarray(target), np.asarray(lp)
+        with st.phase("sample"):
+            self._account(active, udens_np, tiles_np, act)
+            sched.record_spec(window, target_np, lp_np, wlen)
 
     def drain(self, max_steps: int = 1_000_000) -> Dict[int, RequestResult]:
         """Drive step() until every submitted request has finished.
@@ -736,6 +834,17 @@ class ContinuousBatchingEngine:
         return self.drain(max_steps)
 
     # -- metrics ------------------------------------------------------------
+    # Scalar-helper convention (and the one metrics_snapshot()/the /metrics
+    # endpoint rely on to OMIT series instead of faking them):
+    #   * cumulative work ratios that are well-defined as "nothing saved
+    #     yet" return 0.0 on a fresh engine (weight_io_saved,
+    #     prefix_hit_rate);
+    #   * mode-gated or measurement-gated metrics return None when the
+    #     serving mode / telemetry doesn't produce them OR no step has
+    #     measured them yet (predictor_density, predictor_recall,
+    #     s_agg_window, tile_activity_rate) — never a fake 1.0 and never
+    #     a raise, so status surfaces can render any engine uniformly.
+
     def weight_io_saved(self) -> float:
         """Fraction of FFN weight reads skipped, averaged over (active
         slot, step). Autoregressive mode: down-projection rows skipped by
@@ -784,43 +893,44 @@ class ContinuousBatchingEngine:
         total = dens * self._mode_ffn_bytes()
         return total / self.ffn_tp if per_device else total
 
-    def predictor_density(self) -> float:
+    def predictor_density(self) -> Optional[float]:
         """Mean fraction of FFN weight tiles gathered per (active slot,
         step, layer) in predictor mode — the up+down weight-I/O actually
-        paid."""
-        if self.predictor is None:
-            raise ValueError("predictor_density is a predictor-mode metric")
-        if not self._dens_n:
-            return 1.0
+        paid. None outside predictor mode or before any measured step."""
+        if self.predictor is None or not self._dens_n:
+            return None
         return self._dens_sum / self._dens_n
 
-    def predictor_recall(self) -> float:
+    def predictor_recall(self) -> Optional[float]:
         """Realized recall, measured in-graph across every served token:
         1 − (active neurons the predictor's gathered tiles missed) /
         (active neurons). A miss is a correctness event — at recall 1.0 the
-        predictor-mode stream is the dense greedy stream."""
-        if self.predictor is None:
-            raise ValueError("predictor_recall is a predictor-mode metric")
-        if not self.predictor_telemetry:
-            raise ValueError("recall was not measured: the engine was built "
-                             "with predictor_telemetry=False")
+        predictor-mode stream is the dense greedy stream. None when recall
+        was never measured: outside predictor mode, with
+        ``predictor_telemetry=False`` (the in-graph probe reads 0 — a fake
+        1.0 would hide that nothing was checked), or before any decode
+        step."""
+        if (self.predictor is None or not self.predictor_telemetry
+                or not self._dens_n):
+            return None
         if not self._pred_active:
-            return 1.0
+            return 1.0  # measured: no neuron fired, so none was missed
         return 1.0 - self._pred_miss / self._pred_active
 
-    def s_agg_window(self) -> float:
+    def s_agg_window(self) -> Optional[float]:
         """Measured mean aggregated sparsity per verify window (speculative
         mode): 1 − mean fraction of FFN units active anywhere in a γ-window.
-        """
-        if not self.spec:
-            raise ValueError("s_agg_window is a speculative-mode metric")
+        None outside speculative mode or before any verify window ran."""
+        if not self.spec or not self._dens_n:
+            return None
         return self.weight_io_saved()
 
-    def tile_activity_rate(self) -> float:
+    def tile_activity_rate(self) -> Optional[float]:
         """Mean fraction of d_ff tiles with any live activation, per (active
-        slot, step) — what a tile-gathered down-projection would load."""
+        slot, step) — what a tile-gathered down-projection would load.
+        None before any measured step."""
         if not self._dens_n:
-            return 1.0
+            return None
         return self._tiles_sum / self._dens_n
 
     def prefix_hit_rate(self) -> float:
@@ -836,6 +946,25 @@ class ContinuousBatchingEngine:
         """Total prompt tokens whose prefill was skipped via cached prefix
         blocks, across every admitted request."""
         return self.scheduler.prefill_tokens_saved
+
+    def metrics_snapshot(self) -> Dict[str, float]:
+        """Every scalar engine metric that is currently AVAILABLE (the
+        None-valued ones — wrong mode, telemetry off, nothing measured yet
+        — are omitted, per the convention above). The /statusz endpoint,
+        launch/serve.py's final report, and tests consume this instead of
+        probing helpers one by one."""
+        out = {
+            "steps": float(self.t),
+            "weight_io_saved": self.weight_io_saved(),
+            "weight_io_bytes_per_step": self.weight_io_bytes_per_step(),
+            "tile_activity_rate": self.tile_activity_rate(),
+            "prefix_hit_rate": self.prefix_hit_rate(),
+            "prefill_tokens_saved": float(self.prefill_tokens_saved()),
+            "predictor_density": self.predictor_density(),
+            "predictor_recall": self.predictor_recall(),
+            "s_agg_window": self.s_agg_window(),
+        }
+        return {k: v for k, v in out.items() if v is not None}
 
 
 # ---------------------------------------------------------------------------

@@ -377,7 +377,8 @@ class Scheduler:
     docstring for the request state machine this drives."""
 
     def __init__(self, n_slots: int, n_blocks: int, block_size: int,
-                 max_blocks_per_seq: int, prefix_cache: bool = False):
+                 max_blocks_per_seq: int, prefix_cache: bool = False,
+                 obs=None):
         self.n_slots = n_slots
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
@@ -390,6 +391,11 @@ class Scheduler:
         # prompt-token accounting behind the engine's prefix_hit_rate()
         self.prefill_tokens_total = 0
         self.prefill_tokens_saved = 0
+        # observability hub (repro.obs.EngineObs or None): per-request span
+        # hooks fire at the state transitions below. The scheduler stays
+        # host-only / jax-free, and so must the hub — standalone Scheduler
+        # unit tests run with obs=None at zero cost.
+        self.obs = obs
 
     # -- lifecycle ----------------------------------------------------------
     def blocks_needed(self, req: Request) -> int:
@@ -417,6 +423,8 @@ class Scheduler:
                 f"only {self.allocator.n_blocks - 1} allocatable blocks — "
                 f"it could never be admitted")
         self.queue.push(req)
+        if self.obs is not None:  # span starts only for ACCEPTED requests
+            self.obs.req_submitted(req.uid, req.prompt_len, req.max_new)
 
     def retire_finished(self, step: int) -> List[int]:
         """Free the blocks of finished slots; returns retired request uids."""
@@ -444,6 +452,8 @@ class Scheduler:
                                        if slot.io_steps else 1.0),
                     finish_reason=slot.finish or "length",
                 )
+                if self.obs is not None:
+                    self.obs.req_finished(self.results[slot.request.uid])
                 retired.append(slot.request.uid)
                 self.slots[i] = None
         return retired
@@ -488,6 +498,8 @@ class Scheduler:
             self.prefill_tokens_saved += n_cached
             self.slots[i] = slot
             admitted.append((i, slot))
+            if self.obs is not None:
+                self.obs.req_admitted(req.uid, n_cached)
         return admitted
 
     def cancel(self, uid: int) -> bool:
@@ -504,6 +516,8 @@ class Scheduler:
                 logprobs=np.zeros((0,), np.float32),
                 prompt_len=req.prompt_len, admitted_step=-1,
                 finished_step=-1, finish_reason="cancelled")
+            if self.obs is not None:  # terminal even without admission
+                self.obs.req_finished(self.results[uid])
             return True
         for s in self.slots:
             if s is not None and s.request.uid == uid and not s.done:
@@ -532,6 +546,8 @@ class Scheduler:
         slot.prefilled = slot.request.prompt_len
         slot.out.append(int(token))
         slot.lps.append(float(logprob))
+        if self.obs is not None:  # the span's first token (TTFT edge)
+            self.obs.req_tokens(slot.request.uid, 1)
         self._check_stop(slot)
         if self.prefix is not None:
             self.prefix.insert(slot.request.tokens, slot.blocks,
@@ -669,6 +685,8 @@ class Scheduler:
             s.age += 1
             s.out.append(int(next_tokens[i]))
             s.lps.append(float(logprobs[i]))
+            if self.obs is not None:
+                self.obs.req_tokens(s.request.uid, 1)
             self._check_stop(s)
             if pred_density is not None:
                 s.pred_dens_sum += float(pred_density[i])
@@ -767,3 +785,5 @@ class Scheduler:
             s.draft_proposed += n_prop
             s.draft_accepted += min(n_acc, n_emit)
             s.target_calls += 1
+            if self.obs is not None:
+                self.obs.req_tokens(s.request.uid, n_emit)

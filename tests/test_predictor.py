@@ -214,8 +214,10 @@ def test_predictor_telemetry_off_same_stream_no_probe_metrics():
         streams.append(eng.run()[uid].tokens)
     np.testing.assert_array_equal(streams[0], streams[1])
     assert eng.weight_io_saved() > 0.0  # density accounting still works
-    with pytest.raises(ValueError, match="not measured"):
-        eng.predictor_recall()
+    # unmeasured -> None (the metric-helper convention: never a fake 1.0,
+    # never a raise); /metrics likewise omits the recall series entirely
+    assert eng.predictor_recall() is None
+    assert "repro_predictor_active_neurons_total" not in eng.obs.render()
 
 
 def test_predictor_and_speculative_are_exclusive():
