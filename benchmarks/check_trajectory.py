@@ -39,7 +39,11 @@ THROUGHPUT_KEYS = ("serving_tokens_per_s", "prefix_cache_tokens_per_s",
                    "api_stream_tokens_per_s")
 ZERO_COLLAPSE_KEYS = ("weight_io_saved_gamma4", "spec_s_agg_gamma4",
                       "weight_io_saved_predictor", "prefix_hit_rate",
-                      "prefill_tokens_saved")
+                      "prefill_tokens_saved",
+                      # MoE through the engine: a zero/missing tokens/s or
+                      # expert-I/O fraction means MoE serving silently
+                      # stopped flowing through the CB engine
+                      "moe_tokens_per_s", "moe_expert_io_fraction")
 # streaming-latency headlines (lower is better): gate on INCREASES. The
 # tolerance is generous (latency on shared CI runners is far noisier than
 # throughput) — this catches a serve-loop pathology (an extra barrier per

@@ -55,7 +55,7 @@ def run_module(mod_name: str) -> None:
         print(r, flush=True)
 
 
-PR_TAG = os.environ.get("BENCH_PR", "pr8")
+PR_TAG = os.environ.get("BENCH_PR", "pr9")
 
 
 def write_trajectory(tag: str = PR_TAG) -> str:
@@ -90,6 +90,11 @@ def write_trajectory(tag: str = PR_TAG) -> str:
             "prefix_hit_rate": serving.get("cb_prefix_cache_hit_rate"),
             "prefill_tokens_saved":
                 serving.get("cb_prefix_cache_prefill_tokens_saved"),
+            # MoE through the engine (ISSUE 9): throughput + the
+            # activated-expert fraction of FFN weight I/O per step
+            "moe_tokens_per_s": serving.get("cb_moe_tokens_per_s"),
+            "moe_expert_io_fraction":
+                serving.get("cb_moe_expert_io_fraction"),
             "api_stream_tokens_per_s":
                 serving.get("cb_api_stream_tokens_per_s"),
             "api_ttft_ms": serving.get("cb_api_stream_ttft_ms"),

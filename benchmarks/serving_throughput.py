@@ -280,6 +280,25 @@ def run():
                 f"toks_per_s={tps_p:.1f};io_saved={io_p:.3f};"
                 f"tile_activity={tiles_p:.3f}")
 
+    # MoE serving (ISSUE 9): the same mixed workload through tiny-moe —
+    # routing is structured activation sparsity, so the engine's byte
+    # accounting reports the activated-expert I/O fraction (top_k /
+    # n_experts under drop-free capacity) alongside throughput
+    mcfg = get_config("tiny-moe")
+    mparams = registry.get_family(mcfg).init_params(jax.random.PRNGKey(5),
+                                                    mcfg)
+    mprompts, mmax_news = _workload(mcfg, n_requests)
+    tps_m, eng_m = _run_cb(mcfg, mparams, mprompts, mmax_news,
+                           arrival_every=0)
+    engines.append(eng_m)
+    full.update(_span_percentiles(eng_m, "cb_moe"))
+    efrac = eng_m.expert_io_fraction()
+    full["cb_moe_tokens_per_s"] = tps_m
+    full["cb_moe_expert_io_fraction"] = efrac
+    full["cb_moe_weight_io_bytes_per_step"] = eng_m.weight_io_bytes_per_step()
+    rows.append(f"serving/cb_moe,{1e6 / tps_m:.0f},"
+                f"toks_per_s={tps_m:.1f};expert_io_fraction={efrac:.3f}")
+
     # prefix caching + chunked prefill: every request shares a 2-block
     # (32-token) system prompt. Arrivals are staggered over 2 slots (the
     # trie only learns a prefix once its first request finishes prefilling,

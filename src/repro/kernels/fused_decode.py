@@ -29,6 +29,16 @@ caller can reconstruct the full hidden activation (``scatter_compact``) for
 the act/scores telemetry the γ-window machinery records — the scatter is
 the same masked ``.at[].add`` the unfused path used, so duplicate pad tiles
 contribute exactly once.
+
+MoE (documented XLA fallback): this fused kernel has no expert-offset
+variant yet, so MoE serving (models/moe.py) keeps its grouped one-hot
+dispatch einsums — the frozen-exactness XLA path — and the engine forces
+``fast_kernels=False`` for MoE configs with a warning. The building blocks
+for a future fused expert path already exist as standalone kernels
+(``sparse_matmul.expert_up_matmul`` / ``expert_down_matmul`` over
+``expert_tile_lists``): fusing them here is a matter of adding the
+expert-major index_map split (idx // tpe, idx % tpe) to the weight
+BlockSpecs, exactly as those kernels do.
 """
 from __future__ import annotations
 

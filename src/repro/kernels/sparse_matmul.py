@@ -8,7 +8,7 @@ This is exactly the paper's "skip loading zero rows" (App. B Fig. 9a)
 expressed in the TPU memory hierarchy: HBM→VMEM traffic and MXU work both
 shrink by the sparsity factor.
 
-Three variants:
+Dense-family variants:
 
 * ``sparse_matmul`` — one shared tile list for all T rows (the batch-union
   selection the γ-window down-projection uses). Grid = (D_tiles, K) with K
@@ -24,6 +24,18 @@ Three variants:
   (every grid point writes its own block, so nothing is left
   uninitialized); a plain-XLA scatter-add places it, padding masked to
   zero so duplicate pad indices are harmless.
+
+Grouped per-expert gathers (MoE serving, models/moe.py): expert top-k
+routing is the same structure one level up — a token reads only its routed
+experts' weight tiles. ``expert_tile_lists`` flattens each token's top-k
+expert ids into a per-token GLOBAL tile list over the (E, F) expert-unit
+grid (expert e owns tiles [e·tpe, (e+1)·tpe)), and ``expert_up_matmul`` /
+``expert_down_matmul`` are the stacked-weight (E, d, F) / (E, F, d)
+twins of ``sparse_up_matmul`` / ``sparse_matmul_tokens``: the BlockSpec
+index_map splits a global tile id into (expert, within-expert tile), so the
+DMA engine fetches only activated experts' tiles. Router sparsity and
+γ-window/ReLU sparsity thus ride the same gather mechanism — compose them
+by intersecting the expert tile list with the within-expert active tiles.
 
 ``interpret=None`` (the default) autodetects: interpret mode on CPU (this
 container), compiled on TPU. Pass an explicit bool to override.
@@ -203,3 +215,138 @@ def sparse_up_matmul(x, w, idx, nvalid, *, tile: int = 128, interpret=None):
     y = jnp.zeros((T, n_tiles, tile), jnp.float32)
     y = y.at[jnp.arange(T)[:, None], idx].add(compact)
     return y.reshape(T, F)
+
+
+# ---------------------------------------------------------------------------
+# grouped per-expert gathers (MoE serving)
+
+
+def expert_tile_lists(topi, tiles_per_expert: int, k_valid=None):
+    """Per-token GLOBAL tile lists from top-k expert routing.
+
+    topi: (T, k) int32 expert ids; tiles_per_expert = F // tile. Token t's
+    list is its k experts' contiguous tile ranges in routing-priority order:
+    [topi[t, 0]·tpe .. topi[t, 0]·tpe + tpe − 1, topi[t, 1]·tpe .. ] —
+    exactly the blocks ``expert_up_matmul``/``expert_down_matmul`` gather
+    from the stacked (E, ...) expert weights.
+
+    k_valid: optional (T,) int32 count of live expert assignments per token
+    (tokens that lost capacity slots route fewer); entries past
+    k_valid·tpe repeat the token's FIRST tile so padded ids stay in range
+    (the kernels skip them via nvalid either way). Returns
+    (idx (T, k·tpe) int32, nvalid (T,) int32)."""
+    T, k = topi.shape
+    tpe = tiles_per_expert
+    idx = (topi.astype(jnp.int32)[:, :, None] * tpe
+           + jnp.arange(tpe, dtype=jnp.int32)[None, None, :])
+    idx = idx.reshape(T, k * tpe)
+    if k_valid is None:
+        return idx, jnp.full((T,), k * tpe, jnp.int32)
+    nvalid = (k_valid.astype(jnp.int32) * tpe)
+    pos = jnp.arange(k * tpe, dtype=jnp.int32)[None, :]
+    idx = jnp.where(pos < nvalid[:, None], idx, idx[:, :1])
+    return idx, nvalid
+
+
+def _kernel_expert_up(idx_ref, nvalid_ref, x_ref, w_ref, o_ref):
+    t, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i < nvalid_ref[t])
+    def _compute():
+        o_ref[...] = jax.lax.dot_general(
+            x_ref[...], w_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[None]
+
+    @pl.when(i >= nvalid_ref[t])
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def expert_up_matmul(x, w, idx, nvalid, *, tile: int = 128, interpret=None):
+    """Expert-offset up-projection gather: x (T, d), w (E, d, F) stacked
+    expert weights, idx (T, K) GLOBAL tile ids over the (E, F) grid
+    (``expert_tile_lists``), nvalid (T,). Returns the compact (T, K, tile)
+    f32 hidden blocks — token t's block i is x[t] @ w[e, :, ft·tile:...]
+    with (e, ft) = divmod(idx[t, i], F // tile); blocks past nvalid[t] are
+    exactly 0. Only routed experts' weight columns are DMA'd.
+
+    Stays compact (no scatter): the natural consumer is the activation +
+    ``expert_down_matmul``, which reads the same (idx, nvalid) layout."""
+    T, d = x.shape
+    E, _, F = w.shape
+    K = idx.shape[1]
+    assert F % tile == 0
+    tpe = F // tile
+
+    grid = (T, K)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda t, i, idx, nv: (t, 0)),
+            pl.BlockSpec((1, d, tile),
+                         lambda t, i, idx, nv: (idx[t, i] // tpe, 0,
+                                                idx[t, i] % tpe)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tile), lambda t, i, idx, nv: (t, i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel_expert_up,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((T, K, tile), jnp.float32),
+        interpret=_resolve_interpret(interpret),
+    )(idx.astype(jnp.int32), nvalid.astype(jnp.int32), x, w)
+
+
+def _kernel_expert_down(idx_ref, nvalid_ref, c_ref, w_ref, o_ref):
+    t, i = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(i < nvalid_ref[t])
+    def _acc():
+        o_ref[...] += jax.lax.dot_general(
+            c_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def expert_down_matmul(compact, w, idx, nvalid, *, block_d: int = 256,
+                       interpret=None):
+    """Expert-offset down-projection: compact (T, K, tile) hidden blocks
+    (``expert_up_matmul`` layout, post-activation), w (E, F, d) stacked
+    expert weights, idx/nvalid as in ``expert_up_matmul``. Returns (T, d)
+    f32: token t accumulates block i @ w[e, ft·tile:..., :] over its
+    nvalid[t] live blocks — only routed experts' weight rows are DMA'd.
+
+    NOTE: accumulates raw block products; the caller folds each token's
+    combine gate into its blocks (scale compact per expert) beforehand."""
+    T, K, tile = compact.shape
+    E, F, d = w.shape
+    assert F % tile == 0
+    tpe = F // tile
+    block_d = min(block_d, d)
+    assert d % block_d == 0
+
+    grid = (T, d // block_d, K)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, tile), lambda t, j, i, idx, nv: (t, i, 0)),
+            pl.BlockSpec((1, tile, block_d),
+                         lambda t, j, i, idx, nv: (idx[t, i] // tpe,
+                                                   idx[t, i] % tpe, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d),
+                               lambda t, j, i, idx, nv: (t, j)),
+    )
+    return pl.pallas_call(
+        _kernel_expert_down,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
+        interpret=_resolve_interpret(interpret),
+    )(idx.astype(jnp.int32), nvalid.astype(jnp.int32), compact, w)

@@ -12,6 +12,8 @@ the paper's sparse-inference config (relufied weights, tile capacities).
       --prefill-chunk 16 --prefix-cache   # chunked prefill + prefix reuse
   python -m repro.launch.serve --arch qwen3-4b --smoke --continuous \
       --mesh 1,8    # tensor-parallel sharded serving on a (data,model) mesh
+  python -m repro.launch.serve --arch mixtral-8x22b --smoke --continuous \
+      # MoE through the engine: routed experts as structured sparsity
 """
 from __future__ import annotations
 
@@ -29,7 +31,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--continuous", action="store_true",
                     help="smoke the continuous-batching paged-cache engine "
-                         "(dense family only)")
+                         "(any family declaring the 'paged_decode' serving "
+                         "capability: dense + moe)")
     ap.add_argument("--speculative", action="store_true",
                     help="smoke the engine's speculative mode: a 1-layer "
                          "draft proposes γ tokens per slot, the target "
@@ -156,6 +159,11 @@ def main() -> None:
               f"per-request aggregated FFN sparsity "
               f"{', '.join(f'{a:.3f}' for a in aggs)}; "
               f"weight I/O saved {eng.weight_io_saved():.1%}")
+        if cfg.n_experts:
+            print(f"moe routing: {cfg.top_k}/{cfg.n_experts} experts per "
+                  f"token (expert I/O fraction "
+                  f"{eng.expert_io_fraction():.3f}); activated-expert FFN "
+                  f"weight read {eng.weight_io_bytes_per_step():.0f} B/step")
         if mesh_shape is not None:
             print(f"sharded serving on mesh {dict(eng.mesh.shape)}: "
                   f"TP={eng.tp}; per-device FFN weight read "

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import activations as acts
 from repro.models import common as cm
+from repro.models import serving_protocol as sp
 from repro.models import transformer as T
 from repro.sharding import rules
 
@@ -38,12 +39,20 @@ def init_moe(rng, cfg: ModelConfig, dtype) -> PyTree:
     return p
 
 
-def apply_moe(p, x, cfg: ModelConfig, *, stats: cm.StatsCollector,
-              decode: bool = False):
-    """x: (tokens, d) -> (tokens, d). Top-k routing with capacity."""
+def _route(p, x, cfg: ModelConfig, stats: cm.StatsCollector):
+    """Top-k routing + grouped priority slot assignment for t flat tokens.
+
+    Returns (xg (G, tg, d), dispatch (G, tg, E, cap) bool, combine
+    (G, tg, E, cap) f32, (G, tg, cap)). Shared verbatim by the training /
+    legacy path (``apply_moe``) and the paged serving path
+    (``apply_moe_window``) so both route bit-identically. Under drop-free
+    capacity (cap >= tg·top_k, i.e. capacity_factor >= n_experts) every
+    token's experts get slots regardless of which other tokens share the
+    batch — each slot's value is an EXACT copy of one token's row — which
+    is what makes the serving path's different batch shapes byte-identical
+    to the sequential legacy decode."""
     t, d = x.shape
     E, k = cfg.n_experts, cfg.top_k
-    act = acts.get(cfg.activation, shift=cfg.sparsity.shift)
 
     G = max(1, t // cfg.moe_group_size)
     while t % G:
@@ -74,6 +83,14 @@ def apply_moe(p, x, cfg: ModelConfig, *, stats: cm.StatsCollector,
     stats.add("moe_drop_frac", 1.0 - jnp.sum(dispatch) / (G * tg * k))
     stats.add("moe_load_cv", jnp.std(jnp.sum(combine, (1, 3)))
               / (jnp.mean(jnp.sum(combine, (1, 3))) + 1e-9))
+    return xg, dispatch, combine, (G, tg, cap)
+
+
+def apply_moe(p, x, cfg: ModelConfig, *, stats: cm.StatsCollector,
+              decode: bool = False):
+    """x: (tokens, d) -> (tokens, d). Top-k routing with capacity."""
+    act = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+    xg, dispatch, combine, _ = _route(p, x, cfg, stats)
 
     dd = dispatch.astype(x.dtype)
     xe = rules.constrain(jnp.einsum("gtec,gtd->gecd", dd, xg),
@@ -93,7 +110,7 @@ def apply_moe(p, x, cfg: ModelConfig, *, stats: cm.StatsCollector,
     # collision (groups vs wd's d_model FSDP dim) by replicating the einsum
     ye = rules.constrain(ye, "dp", None, None, None)
     y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
-    return y.reshape(t, d)
+    return y.reshape(x.shape)
 
 
 def init_block(rng, cfg: ModelConfig, dtype) -> PyTree:
@@ -194,3 +211,178 @@ def model_decode(params, cache, token, pos, cfg: ModelConfig, stats=None):
 
     x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
     return T.logits_from(params, x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching serving: the full paged interface (serving_protocol
+# caps: paged_decode + chunked_prefill + spec_verify)
+#
+# Router top-k IS structured activation sparsity at expert granularity: a
+# token reads top_k/n_experts of the FFN weights before any within-expert
+# γ-masking applies, so the serving density telemetry composes both layers
+# (density = expert fraction × within-expert eff density) and the engine's
+# ``weight_io_bytes_per_step`` — density × dense-ALL-experts bytes — reports
+# activated-expert bytes.
+#
+# Exactness: all serving configs use drop-free capacity (capacity_factor >=
+# n_experts ⇒ cap >= tg·top_k). Then per-token routing results do not depend
+# on co-batched tokens (each expert slot is an exact copy of one token's
+# row; extra slots only add exact zeros / ×1.0 terms), so the engine's
+# slot-batched, scratch-padded windows are byte-identical at f32 to the
+# legacy sequential ``model_decode`` — the same invariance that makes
+# chunked prefill's zero-padded windows safe. With droppable capacity the
+# paths stay correct but dropped tokens may differ between batch shapes.
+
+
+def apply_moe_window(p, x, cfg: ModelConfig, *, mask, refresh, valid):
+    """Decode MoE-FFN over a W-token window with per-request γ-window reuse,
+    batched over slots. x: (b, W, d); mask: (b, F) bool γ-window rows;
+    refresh: (b,); valid: (b, W) real window tokens.
+
+    Returns (out (b, W, d),
+             act (b, F) union within-expert activity over valid tokens,
+             scores (b, F//tile) window-union tile activity,
+             density (b,) mean per-token fraction of expert FFN weights
+                 read = routed-expert fraction × within-expert eff density,
+             union_density (b,) fraction of the (E, F) expert-unit grid in
+                 the window's read union = 1 − s_agg at expert granularity).
+    """
+    act_fn = acts.get(cfg.activation, shift=cfg.sparsity.shift)
+    b, W, d = x.shape
+    E, F = cfg.n_experts, cfg.d_ff
+    stats = cm.StatsCollector(False)
+    xg, dispatch, combine, (G, tg, cap) = _route(p, x.reshape(b * W, d),
+                                                 cfg, stats)
+
+    dd = dispatch.astype(x.dtype)
+    # serve mesh: expert dim over "model" (sharding/rules.py serve map) —
+    # each device computes its experts' slots; identity without a mesh
+    xe = rules.constrain(jnp.einsum("gtec,gtd->gecd", dd, xg),
+                         None, "model", None, None)
+    if cfg.ffn_kind == "glu":
+        h = act_fn(jnp.einsum("gecd,edf->gecf", xe, p["wg"])) \
+            * jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    else:
+        h = act_fn(jnp.einsum("gecd,edf->gecf", xe, p["wu"]))
+    h = rules.constrain(h, None, "model", None, None)
+
+    # γ-window gate, dispatched to expert-slot space: each slot's eff row is
+    # an exact copy of its token's slot-level eff (drop-free), so gating
+    # here equals gating per token — and is ×1.0 (bit-exact) under refresh
+    eff = mask | refresh[:, None]  # (b, F)
+    eff_tok = jnp.broadcast_to(eff[:, None, :], (b, W, F)).reshape(G, tg, F)
+    eff_slots = jnp.einsum("gtec,gtf->gecf", dd, eff_tok.astype(h.dtype))
+    h = h * eff_slots
+
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    out = y.reshape(b, W, d)
+
+    # telemetry: per-token within-expert activity unioned over the token's
+    # routed experts (the slot-level γ-mask is shared across experts)
+    hq = (h != 0).astype(jnp.float32)  # (G, E, cap, F)
+    act_tok = (jnp.einsum("gtec,gecf->gtf", dd.astype(jnp.float32), hq)
+               .reshape(b, W, F) > 0)
+    act_tok = act_tok & valid[:, :, None]
+    act = jnp.any(act_tok, axis=1)  # (b, F)
+    from repro.kernels.fused_ffn import window_tile_activity
+    scores = window_tile_activity(act_tok.astype(jnp.float32),
+                                  cm.ffn_gather_tile(cfg))
+
+    texp = jnp.any(dispatch, axis=3).reshape(b, W, E)  # token's experts
+    efrac = jnp.mean(texp.astype(jnp.float32), -1)  # (b, W)
+    tok_density = efrac * jnp.mean(eff.astype(jnp.float32), -1)[:, None]
+    vf = valid.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(vf, 1), 1.0)
+    density = jnp.sum(tok_density * vf, 1) / denom  # (b,)
+
+    read = (texp[:, :, :, None] & eff[:, None, None, :]
+            & valid[:, :, None, None])  # (b, W, E, F)
+    union_density = jnp.mean(jnp.any(read, 1).astype(jnp.float32), (1, 2))
+    return out, act, scores, density, union_density
+
+
+def apply_block_window_paged(p, x, cfg: ModelConfig, k_pages, v_pages, table,
+                             pos, valid, *, layer, block_size: int, mask,
+                             refresh):
+    stats = cm.StatsCollector(False)
+    h = T.post_norm(cm.apply_norm(p["ln1"], x, cfg), cfg)
+    a, k_pages, v_pages = T.apply_attn_window_paged(
+        p["attn"], h, cfg, k_pages, v_pages, table, pos, valid, layer=layer,
+        block_size=block_size, stats=stats)
+    x = x + a
+    h = T.post_norm(cm.apply_norm(p["ln2"], x, cfg), cfg)
+    f, act, scores, density, udens = apply_moe_window(
+        p["moe"], h, cfg, mask=mask, refresh=refresh, valid=valid)
+    x = x + f
+    return x, k_pages, v_pages, act, scores, density, udens
+
+
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     sharding=None):
+    return cm.init_paged_cache(cfg, n_blocks, block_size, sharding=sharding)
+
+
+def model_prefill_paged(params, batch, cfg: ModelConfig, pages, blocks,
+                        block_size: int, true_len=None):
+    """Whole-prompt prefill into freshly allocated pool blocks (the dense
+    family's contract; see transformer.prefill_paged). Zero-padding to a
+    block multiple is routing-safe under drop-free capacity (module note)."""
+    li = None if true_len is None else true_len - 1
+    logits, kv = T.forward(params, batch["tokens"], cfg, return_kv=True,
+                           last_index=li, remat_block=apply_block)
+    k, v = kv  # (L, 1, s, kvp, hd)
+    kp = cm.paged_write_prefill(pages["k"], k[:, 0], blocks, block_size)
+    vp = cm.paged_write_prefill(pages["v"], v[:, 0], blocks, block_size)
+    return logits[:, -1], {"k": kp, "v": vp}
+
+
+def model_verify_window_paged(params, pages, table, tokens, pos0, wlen,
+                              cfg: ModelConfig, ffn_masks, refresh,
+                              block_size: int, fast_kernels: bool = False):
+    """W-token window per slot over the shared page pool — the speculative
+    verification target step, MoE edition (same contract as
+    transformer.verify_window_paged; aux density/union_density measure the
+    EXPERT-weighted fractions). fast_kernels is accepted for interface
+    parity but MoE uses the documented XLA dispatch fallback
+    (kernels/fused_decode.py module note)."""
+    del fast_kernels
+
+    def layer_fn(pl_i, li, x, kp, vp, fm, pos, valid):
+        x, kp, vp, act, scores, density, udens = apply_block_window_paged(
+            pl_i, x, cfg, kp, vp, table, pos, valid, layer=li,
+            block_size=block_size, mask=fm, refresh=refresh)
+        return x, kp, vp, (act, scores, density, udens)
+
+    return sp.window_step_core(params, pages, tokens, pos0, wlen, cfg,
+                               ffn_masks, refresh, layer_fn=layer_fn,
+                               embed_fn=T.embed_tokens,
+                               logits_fn=T.logits_from)
+
+
+def model_prefill_chunk_paged(params, batch, cfg: ModelConfig, pages, table,
+                              pos0, clen, ffn_masks, refresh,
+                              block_size: int, fast_kernels: bool = False):
+    """One fixed-shape prefill chunk IS a window step (the dense family's
+    delegation, transformer.prefill_chunk_paged): chunk tokens write K/V at
+    their own positions, tokens past clen scratch-route, and the window's
+    union activity seeds the warm γ-mask."""
+    return model_verify_window_paged(params, pages, table, batch["tokens"],
+                                     pos0, clen, cfg, ffn_masks, refresh,
+                                     block_size, fast_kernels=fast_kernels)
+
+
+def model_decode_paged(params, pages, table, token, pos, cfg: ModelConfig,
+                       ffn_masks, refresh, block_size: int,
+                       fast_kernels: bool = False):
+    """Plain continuous-batching decode = the W == 1 window step. Unlike the
+    dense family (whose decode keeps a hand-specialized bf16-frozen
+    lowering), MoE serves at f32-pinned exactness from day one, so the
+    window path with wlen == 1 IS the decode step — aux drops the window's
+    union_density to match the engine's 3-tuple decode contract."""
+    logits, pages, new_masks, (act, scores, density, _udens) = \
+        model_verify_window_paged(params, pages, table, token[:, None], pos,
+                                  jnp.ones_like(pos), cfg, ffn_masks,
+                                  refresh, block_size,
+                                  fast_kernels=fast_kernels)
+    return logits[:, 0], pages, new_masks, (act, scores, density)

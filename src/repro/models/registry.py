@@ -10,18 +10,30 @@ Uniform interface per family (duck-typed module):
 
 batch is a dict: {"tokens": (b, s) int32} plus optional modality-stub inputs
 ("patches" for vlm, "frames" for encdec).
+
+Paged serving is opt-in per family via a declared capability set
+(``serving_protocol.ServingCaps``): ``register_family(name, module,
+caps=...)`` validates at registration time that the module defines every
+function the declared capabilities promise, and the serving engine gates
+each mode on ``serving_caps(cfg).require(cap, family)`` — never on
+``hasattr`` probes.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Iterable
 
 from repro.configs.base import ModelConfig
+from repro.models.serving_protocol import ServingCaps, validate_caps
 
 _FAMILIES: Dict[str, Any] = {}
+_CAPS: Dict[str, ServingCaps] = {}
 
 
-def register_family(name: str, module) -> None:
+def register_family(name: str, module, caps: Iterable[str] = ()) -> None:
+    caps = ServingCaps(caps)
+    validate_caps(name, module, caps)
     _FAMILIES[name] = module
+    _CAPS[name] = caps
 
 
 def get_family(cfg_or_name) -> Any:
@@ -31,16 +43,29 @@ def get_family(cfg_or_name) -> Any:
     return _FAMILIES[name]
 
 
+def serving_caps(cfg_or_name) -> ServingCaps:
+    """The declared paged-serving capability set for a family (empty set for
+    families that have not been routed through the serving protocol yet)."""
+    name = cfg_or_name if isinstance(cfg_or_name, str) else cfg_or_name.family
+    if name not in _FAMILIES:
+        _load_builtin(name)
+    return _CAPS[name]
+
+
 def _load_builtin(name: str) -> None:
     if name in ("dense",):
         from repro.models import dense_family
-        register_family("dense", dense_family)
+        register_family("dense", dense_family,
+                        caps=("paged_decode", "chunked_prefill",
+                              "spec_verify", "spec_draft", "predictor"))
     elif name == "vlm":
         from repro.models import vlm
         register_family("vlm", vlm)
     elif name == "moe":
         from repro.models import moe
-        register_family("moe", moe)
+        register_family("moe", moe,
+                        caps=("paged_decode", "chunked_prefill",
+                              "spec_verify"))
     elif name == "mamba":
         from repro.models import mamba
         register_family("mamba", mamba)

@@ -27,6 +27,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import activations as acts
 from repro.models import common as cm
+from repro.models import serving_protocol as sp
 from jax import ad_checkpoint
 from repro.sharding import rules
 
@@ -618,34 +619,22 @@ def verify_window_paged(params, pages, table, tokens, pos0, wlen,
     Returns (logits (b, W, vocab_p), pages, new_masks (L, b, F), aux) with
     aux = (act (L, b, F) window-union FFN activity, scores (L, b, F//tile)
     window-union tile activity, density (L, b) fraction of rows read,
-    union_density (L, b) = 1 − s_agg of each slot's window)."""
-    params = cm.cast_params(params, cfg)
-    b, W = tokens.shape
-    pos = pos0[:, None] + jnp.arange(W, dtype=pos0.dtype)[None, :]
-    valid = jnp.arange(W)[None, :] < wlen[:, None]
-    x = rules.constrain(embed_tokens(params, tokens, cfg, pos),
-                        "dp", None, None)
+    union_density (L, b) = 1 − s_agg of each slot's window).
 
-    def body(carry, xs):
-        x, kp, vp = carry
-        pl_i, li, fm = xs
+    Structure (embed → layer scan → mask refresh → head) lives in the
+    family-agnostic ``serving_protocol.window_step_core``; this wrapper
+    only supplies the dense block — the delegated trace is op-for-op the
+    historical lowering."""
+    def layer_fn(pl_i, li, x, kp, vp, fm, pos, valid):
         x, kp, vp, act, scores, density, udens = apply_block_window_paged(
             pl_i, x, cfg, kp, vp, table, pos, valid, layer=li,
             block_size=block_size, mask=fm, refresh=refresh,
             fast_kernels=fast_kernels)
-        return (x, kp, vp), (act, scores, density, udens)
+        return x, kp, vp, (act, scores, density, udens)
 
-    xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks)
-    (x, kp, vp), (act, scores, density, udens) = jax.lax.scan(
-        body, (x, pages["k"], pages["v"]), xs)
-    new_masks = rules.constrain(
-        jnp.where(refresh[None, :, None], act, ffn_masks),
-        None, "dp", "model")
-
-    x = cm.apply_norm(params["final_norm"], x, cfg)
-    logits = logits_from(params, x, cfg)
-    return logits, {"k": kp, "v": vp}, new_masks, (act, scores, density,
-                                                   udens)
+    return sp.window_step_core(params, pages, tokens, pos0, wlen, cfg,
+                               ffn_masks, refresh, layer_fn=layer_fn,
+                               embed_fn=embed_tokens, logits_fn=logits_from)
 
 
 def prefill_chunk_paged(params, pages, table, tokens, pos0, clen,
@@ -880,30 +869,21 @@ def decode_step_paged(params, pages, table, token, pos, cfg: ModelConfig,
     bool γ-window masks. Idle slots point at the scratch block and are
     simply ignored by the caller. Returns (logits (b, vocab_p), pages,
     new_masks (L, b, F), aux) where aux = (act (L, b, F), scores
-    (L, b, F//tile), density (L, b))."""
-    params = cm.cast_params(params, cfg)
-    x = embed_tokens(params, token[:, None], cfg, pos[:, None])[:, 0]
-    x = rules.constrain(x, "dp", None)
+    (L, b, F//tile), density (L, b)).
 
-    def body(carry, xs):
-        x, kp, vp = carry
-        pl_i, li, fm = xs
+    Structure lives in ``serving_protocol.decode_step_core``; this wrapper
+    supplies the dense decode block (same jaxpr as the historical inline
+    loop)."""
+    def layer_fn(pl_i, li, x, kp, vp, fm):
         x, kp, vp, act, scores, density = apply_block_decode_paged(
             pl_i, x, cfg, kp, vp, table, pos, layer=li,
             block_size=block_size, mask=fm, refresh=refresh,
             fast_kernels=fast_kernels)
-        return (x, kp, vp), (act, scores, density)
+        return x, kp, vp, (act, scores, density)
 
-    xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks)
-    (x, kp, vp), (act, scores, density) = jax.lax.scan(
-        body, (x, pages["k"], pages["v"]), xs)
-    new_masks = rules.constrain(
-        jnp.where(refresh[None, :, None], act, ffn_masks),
-        None, "dp", "model")
-
-    x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
-    logits = logits_from(params, x, cfg)
-    return logits, {"k": kp, "v": vp}, new_masks, (act, scores, density)
+    return sp.decode_step_core(params, pages, token, pos, cfg, ffn_masks,
+                               refresh, layer_fn=layer_fn,
+                               embed_fn=embed_tokens, logits_fn=logits_from)
 
 
 def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConfig,
@@ -928,13 +908,7 @@ def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConf
     ``shards`` (static; the engine's mesh TP degree) switches the per-token
     packed tile lists to model-axis-local packing — see
     ``_ffn_decode_predicted``. 1 keeps the frozen single-device lowering."""
-    params = cm.cast_params(params, cfg)
-    x = embed_tokens(params, token[:, None], cfg, pos[:, None])[:, 0]
-    x = rules.constrain(x, "dp", None)
-
-    def body(carry, xs):
-        x, kp, vp = carry
-        pl_i, li, fm, pred_l = xs
+    def layer_fn(pl_i, li, x, kp, vp, fm, pred_l):
         x, kp, vp, act, scores, density, n_act, n_miss = \
             apply_block_decode_paged(
                 pl_i, x, cfg, kp, vp, table, pos, layer=li,
@@ -942,19 +916,12 @@ def decode_step_paged_predicted(params, pages, table, token, pos, cfg: ModelConf
                 pred=pred_l, pred_kind=kind, pred_tile=tile, k_tiles=k_tiles,
                 pred_measure=measure, pred_shards=shards,
                 fast_kernels=fast_kernels)
-        return (x, kp, vp), (act, scores, density, n_act, n_miss)
+        return x, kp, vp, (act, scores, density, n_act, n_miss)
 
-    xs = (params["layers"], jnp.arange(cfg.n_layers), ffn_masks, pred_params)
-    (x, kp, vp), (act, scores, density, n_act, n_miss) = jax.lax.scan(
-        body, (x, pages["k"], pages["v"]), xs)
-    new_masks = rules.constrain(
-        jnp.where(refresh[None, :, None], act, ffn_masks),
-        None, "dp", "model")
-
-    x = cm.apply_norm(params["final_norm"], x[:, None], cfg)[:, 0]
-    logits = logits_from(params, x, cfg)
-    return logits, {"k": kp, "v": vp}, new_masks, (act, scores, density,
-                                                   n_act, n_miss)
+    return sp.decode_step_core(params, pages, token, pos, cfg, ffn_masks,
+                               refresh, layer_fn=layer_fn,
+                               embed_fn=embed_tokens, logits_fn=logits_from,
+                               extra_xs=(pred_params,))
 
 
 def draft_gamma_paged(params, pages, table, token, pos0, wlen,

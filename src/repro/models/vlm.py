@@ -18,6 +18,13 @@ def init_params(rng, cfg: ModelConfig):
     return T.init_params(rng, cfg)
 
 
+def prompt_token_offset(cfg: ModelConfig) -> int:
+    """Serving-protocol hook: text decode positions start after the vision
+    patch positions the prefill consumed (serving_protocol.py; default 0
+    for text-only families)."""
+    return cfg.n_vision_tokens
+
+
 def model_forward(params, batch, cfg: ModelConfig, *, stats=None,
                   remat_policy="none"):
     logits = T.forward(params, batch["tokens"], cfg, stats=stats,

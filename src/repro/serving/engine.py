@@ -34,6 +34,7 @@ from repro.configs.base import ModelConfig
 from repro.core.sparsity import AggregatedTracker
 from repro.models import common as cm
 from repro.models import registry
+from repro.models import serving_protocol as sp
 from repro.obs import EngineObs
 from repro.serving import sampling as smp
 from repro.serving.sampling import SamplingParams
@@ -171,9 +172,11 @@ class ContinuousBatchingEngine:
                  fast_kernels: Optional[bool] = None,
                  obs: Optional[EngineObs] = None):
         fam = registry.get_family(cfg)
-        if not hasattr(fam, "model_decode_paged"):
-            raise ValueError(
-                f"family {cfg.family!r} has no paged-cache serving support")
+        # every serving-mode gate below goes through the family's DECLARED
+        # capability set (models/serving_protocol.py) — one uniform error
+        # naming the missing capability, zero hasattr probes
+        caps = registry.serving_caps(cfg)
+        caps.require("paged_decode", cfg.family)
         if not cfg.d_ff:
             raise ValueError("continuous batching requires an FFN (d_ff > 0)")
         if n_blocks is None:
@@ -192,16 +195,22 @@ class ContinuousBatchingEngine:
             raise ValueError("warm_masks requires chunked prefill "
                              "(prefill_chunk > 0): the warm γ-mask is "
                              "harvested from the prefill chunks")
-        if prefill_chunk and not hasattr(fam, "model_prefill_chunk_paged"):
-            raise ValueError(f"family {cfg.family!r} has no chunked-prefill "
-                             "serving support")
+        if prefill_chunk:
+            caps.require("chunked_prefill", cfg.family)
         self.mesh = mesh
         self.tp = rules.tp_size(mesh)
         # effective TP of the FFN weights: the divisibility guard REPLICATES
         # wu/wg/wd over "model" when d_ff does not divide, and then every
         # device reads the full weight — per-device I/O accounting must not
-        # claim a 1/TP split that physically did not happen
-        self.ffn_tp = self.tp if cfg.d_ff % max(1, self.tp) == 0 else 1
+        # claim a 1/TP split that physically did not happen. MoE shards the
+        # EXPERT axis over "model" (sharding/rules.py serve map), so its
+        # divisor holds when n_experts divides; d_ff is the fallback axis.
+        tp = max(1, self.tp)
+        if cfg.n_experts:
+            self.ffn_tp = tp if (cfg.n_experts % tp == 0
+                                 or cfg.d_ff % tp == 0) else 1
+        else:
+            self.ffn_tp = tp if cfg.d_ff % tp == 0 else 1
         # fused Pallas decode kernels (kernels/fused_decode.py,
         # kernels/paged_attention.py): None autodetects — compiled kernels
         # on an accelerator, the frozen XLA lowerings on CPU (where the
@@ -209,6 +218,15 @@ class ContinuousBatchingEngine:
         # keeps the frozen paths unless a test forces fast_kernels=True).
         if fast_kernels is None:
             fast_kernels = jax.default_backend() != "cpu"
+        if fast_kernels and cfg.n_experts:
+            import warnings
+            warnings.warn(
+                "fast_kernels is not wired for MoE serving yet: the fused "
+                "decode kernel has no expert-offset variant, so MoE uses "
+                "the documented XLA dispatch fallback "
+                "(kernels/fused_decode.py); the standalone expert gather "
+                "kernels live in kernels/sparse_matmul.py", stacklevel=2)
+            fast_kernels = False
         if fast_kernels and mesh is not None:
             import warnings
             warnings.warn(
@@ -341,9 +359,7 @@ class ContinuousBatchingEngine:
             if draft_cfg is not None:
                 raise ValueError("predictor and speculative modes are "
                                  "mutually exclusive serving modes")
-            if not hasattr(fam, "model_decode_paged_predicted"):
-                raise ValueError(f"family {cfg.family!r} has no "
-                                 "predictor-mode serving support")
+            caps.require("predictor", cfg.family)
             if predictor.n_tiles * predictor.tile != cfg.d_ff:
                 raise ValueError(
                     f"predictor geometry {predictor.n_tiles}x"
@@ -400,10 +416,10 @@ class ContinuousBatchingEngine:
                 raise ValueError("speculative mode needs gamma >= 1")
             if draft_cfg.vocab_size != cfg.vocab_size:
                 raise ValueError("draft and target must share a vocabulary")
+            caps.require("spec_verify", cfg.family)
             dfam = registry.get_family(draft_cfg)
-            if not hasattr(dfam, "model_draft_gamma_paged"):
-                raise ValueError(f"family {draft_cfg.family!r} cannot draft "
-                                 "over a paged cache")
+            registry.serving_caps(draft_cfg).require("spec_draft",
+                                                     draft_cfg.family)
             if mesh is not None:
                 draft_params = _place_serve_params(draft_params, mesh)
             self.draft_cfg = draft_cfg
@@ -488,7 +504,8 @@ class ContinuousBatchingEngine:
                   else "plain"),
             n_slots=n_slots, block_size=block_size,
             prefill_chunk=prefill_chunk, tp=self.tp,
-            fast_kernels=self.fast_kernels)
+            fast_kernels=self.fast_kernels, family=cfg.family,
+            n_experts=cfg.n_experts)
 
     # -- mesh plumbing -------------------------------------------------------
     def _jit(self, fn, **kw):
@@ -867,9 +884,17 @@ class ContinuousBatchingEngine:
         tile-gathered kernel (kernels/fused_decode.py) over the γ-mask's
         tile list, widening the skippable scope to every projection — the
         speculative window's up projection stays dense (the union is only
-        known after it runs), so its scope is unchanged."""
+        known after it runs), so its scope is unchanged.
+
+        MoE: the dense scope covers ALL experts (× n_experts) — routing is
+        itself structured activation sparsity, so the top-k gather is part
+        of the measured density (the family reports density =
+        activated/total experts × within-expert density), and
+        ``weight_io_bytes_per_step`` = density × this dense-all-experts
+        figure is the activated-expert bytes actually read."""
         itemsize = jnp.dtype(self.cfg.compute_dtype).itemsize
         proj = self.cfg.d_ff * self.cfg.d_model * itemsize
+        proj *= max(1, self.cfg.n_experts)
         n_all = 3 if self.cfg.ffn_kind == "glu" else 2
         if self.predictor is not None:
             return self.cfg.n_layers * n_all * proj
@@ -933,6 +958,19 @@ class ContinuousBatchingEngine:
             return None
         return self._tiles_sum / self._dens_n
 
+    def expert_io_fraction(self) -> Optional[float]:
+        """Fraction of expert FFN weights a token's routing activates:
+        top_k / n_experts — the coarse-grained layer of the activated-
+        expert byte accounting (``weight_io_bytes_per_step`` multiplies it
+        by the measured within-expert density via the family's density
+        telemetry). Exact under drop-free capacity (every token reads
+        exactly its top-k experts' tiles; dropped slots only read less, so
+        this is the upper bound actually provisioned for). None for
+        non-MoE families."""
+        if not self.cfg.n_experts:
+            return None
+        return self.cfg.top_k / self.cfg.n_experts
+
     def prefix_hit_rate(self) -> float:
         """Fraction of admitted prompt tokens served from the prefix cache
         (their prefill — compute AND KV writes — was skipped entirely).
@@ -963,6 +1001,7 @@ class ContinuousBatchingEngine:
             "predictor_density": self.predictor_density(),
             "predictor_recall": self.predictor_recall(),
             "s_agg_window": self.s_agg_window(),
+            "expert_io_fraction": self.expert_io_fraction(),
         }
         return {k: v for k, v in out.items() if v is not None}
 
@@ -1004,7 +1043,7 @@ class ServeEngine:
         cfg = self.cfg
         tokens = batch["tokens"]
         b, s = tokens.shape
-        offset = cfg.n_vision_tokens if cfg.family == "vlm" else 0
+        offset = sp.prompt_token_offset(self.fam, cfg)
         last, cache = self.prefill(batch)
         out: List[np.ndarray] = []
         lps: List[np.ndarray] = []

@@ -12,8 +12,11 @@ Modes:
   train   — DP over ("pod","data") batch, FSDP over "data" on a weight axis,
             TP over "model" (ffn / heads / vocab): ZeRO-3-style layouts.
   serve   — weights TP-only over "model" (resident, no per-step all-gather);
-            MoE expert weights additionally sharded over "data" (they would
-            not fit HBM otherwise); KV cache: batch over DP, seq over "model"
+            MoE expert weights shard their EXPERT dim over "model" (a
+            priority assignment, ahead of the trailing-first loop — expert
+            routing is the unit the serving engine gathers/accounts at, so
+            each device holds whole experts and per-device FFN reads shrink
+            by top_k/E × 1/TP); KV cache: batch over DP, seq over "model"
             (flash-decode, DESIGN.md §3).
 """
 from __future__ import annotations
@@ -88,11 +91,18 @@ _MESH_MAP = {
         "vocab": "model", "embed": None, "embed_kv": "model",
         "embed_heavy": "dp",
         "heads": "model", "kv_heads": "model", "head_dim": None,
-        "ffn": "model", "experts": None, "seq_weights": None,
+        "ffn": "model", "experts": "model", "seq_weights": None,
         "inner": "model", "inner_all": "model", "inner_vec": "model",
         "inner_or_embed": None, "proj_out": None, "conv_k": None,
     },
 }
+
+# logical axes assigned BEFORE the trailing-first loop: the expert dim must
+# win "model" over the same weight's trailing ffn dim — serving gathers and
+# accounts I/O at whole-expert granularity (models/moe.py), so devices hold
+# whole experts, not expert slivers. Falls through to the trailing loop's
+# choices when the dim doesn't divide the axis.
+_PRIORITY_AXES = ("experts",)
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -118,11 +128,9 @@ def _fits(dim: int, mesh: Mesh, axis) -> bool:
 def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh, mode: str) -> P:
     axes = _logical_axes_for(path, len(shape))
     mm = _MESH_MAP[mode]
-    # assign trailing dims first: for MHA the (padded) kv-head dim takes
-    # "model"; for GQA (kv < 16) it falls through and the embed dim takes it
-    # instead (keeps K/V projection weights sharded at serve time)
     out, used = [None] * len(shape), set()
-    for i in reversed(range(len(shape))):
+
+    def assign(i):
         ax = axes[i]
         mesh_ax = mm.get(ax) if ax else None
         if mesh_ax == "dp":  # dynamic: all data-parallel axes of this mesh
@@ -131,6 +139,17 @@ def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh, mode: str) -> P:
         if mesh_ax is not None and not (set(flat) & used)                 and _fits(shape[i], mesh, mesh_ax):
             out[i] = mesh_ax
             used.update(flat)
+
+    # priority pre-pass (currently: the MoE expert dim claims "model")
+    for i in range(len(shape)):
+        if axes[i] in _PRIORITY_AXES:
+            assign(i)
+    # then assign trailing dims first: for MHA the (padded) kv-head dim takes
+    # "model"; for GQA (kv < 16) it falls through and the embed dim takes it
+    # instead (keeps K/V projection weights sharded at serve time)
+    for i in reversed(range(len(shape))):
+        if axes[i] not in _PRIORITY_AXES:
+            assign(i)
     return P(*out)
 
 

@@ -1,0 +1,245 @@
+"""MoE through the engine (ISSUE 9): declared serving capabilities,
+router-as-sparsity properties, and f32 byte-identity of engine-served
+MoE streams against the legacy sequential decode path.
+
+tiny-moe is configured DROP-FREE (capacity_factor >= n_experts), which
+makes per-token routing independent of co-batched tokens: the engine's
+slot-batched windows route every token exactly as the legacy b=1
+sequential loop does, so f32 greedy streams must match byte for byte in
+plain AND chunked-prefill modes (and composing with a dense draft in
+speculative mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.kernels import sparse_matmul as sm
+from repro.models import registry
+from repro.models import serving_protocol as sp
+from repro.serving import ContinuousBatchingEngine
+from repro.serving.engine import ServeEngine
+
+
+# ---------------------------------------------------------------------------
+# declared capabilities: one uniform error, each naming the capability
+
+
+def test_require_names_every_missing_capability():
+    """For EVERY capability an unsupported family's error names it (vlm
+    declares none, so all five must fail with the uniform message)."""
+    caps = registry.serving_caps("vlm")
+    for cap in sp.CAP_FUNCS:
+        with pytest.raises(ValueError) as e:
+            caps.require(cap, "vlm")
+        msg = str(e.value)
+        assert f"{cap!r} serving capability" in msg, (cap, msg)
+        assert "family 'vlm'" in msg and "declared capabilities" in msg
+
+
+def test_require_passes_for_declared_and_rejects_unknown():
+    caps = registry.serving_caps("moe")
+    for cap in ("paged_decode", "chunked_prefill", "spec_verify"):
+        caps.require(cap, "moe")  # declared: no raise
+    with pytest.raises(KeyError, match="unknown serving capability"):
+        caps.require("teleport", "moe")
+
+
+def test_validate_caps_rejects_typo_and_missing_functions():
+    import types
+    mod = types.SimpleNamespace(init_paged_cache=1)
+    with pytest.raises(ValueError, match="unknown serving capability"):
+        sp.validate_caps("x", mod, sp.ServingCaps({"paged_decod"}))
+    with pytest.raises(ValueError, match="missing.*model_prefill_paged"):
+        sp.validate_caps("x", mod, sp.ServingCaps({"paged_decode"}))
+
+
+def test_engine_errors_name_missing_capability(moe_setup):
+    cfg, params, _ = moe_setup
+    # vlm has no paged serving at all -> rejected before params matter
+    vcfg = get_config("tiny-relu").replace(name="t-vlm", family="vlm")
+    with pytest.raises(ValueError, match="'vlm'.*'paged_decode'"):
+        ContinuousBatchingEngine(vcfg, None)
+    # moe declares no predictor capability
+    with pytest.raises(ValueError, match="'moe'.*'predictor'"):
+        ContinuousBatchingEngine(cfg, params, predictor=object())
+    # moe as speculative DRAFT (it has no model_draft_gamma_paged)
+    dense = get_config("tiny-relu").replace(compute_dtype="float32")
+    dparams = registry.get_family(dense).init_params(
+        jax.random.PRNGKey(1), dense)
+    with pytest.raises(ValueError, match="'moe'.*'spec_draft'"):
+        ContinuousBatchingEngine(dense, dparams,
+                                 draft_cfg=cfg, draft_params=params)
+
+
+# ---------------------------------------------------------------------------
+# router-as-sparsity: per-token expert tile lists
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 4), st.integers(1, 8),
+       st.integers(0, 10 ** 6))
+def test_expert_tile_lists_in_range_and_capacity(E, k, tpe, seed):
+    """Indices always land in [0, E*tpe); nvalid respects the top-k
+    capacity; each token's tiles are exactly its experts' contiguous
+    ranges in routing order."""
+    k = min(k, E)
+    rng = np.random.RandomState(seed)
+    topi = jnp.asarray(rng.randint(0, E, (5, k)), jnp.int32)
+    idx, nv = sm.expert_tile_lists(topi, tpe)
+    idx, nv = np.asarray(idx), np.asarray(nv)
+    assert idx.shape == (5, k * tpe) and ((idx >= 0) & (idx < E * tpe)).all()
+    assert (nv == k * tpe).all()
+    for t in range(5):
+        want = np.concatenate(
+            [np.arange(tpe) + e * tpe for e in np.asarray(topi)[t]])
+        np.testing.assert_array_equal(idx[t], want)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 8), st.integers(0, 10 ** 6))
+def test_expert_tile_lists_k_valid_padding_in_range(E, tpe, seed):
+    """Capacity-dropped tokens (k_valid < k): entries past nvalid repeat
+    the token's FIRST tile, so padded ids stay in range for the kernels'
+    scalar-prefetch DMA; live entries are untouched."""
+    rng = np.random.RandomState(seed)
+    k = min(3, E)
+    topi = jnp.asarray(rng.randint(0, E, (6, k)), jnp.int32)
+    kv = jnp.asarray(rng.randint(0, k + 1, (6,)), jnp.int32)
+    idx, nv = sm.expert_tile_lists(topi, tpe, k_valid=kv)
+    idx, nv = np.asarray(idx), np.asarray(nv)
+    full, _ = sm.expert_tile_lists(topi, tpe)
+    full = np.asarray(full)
+    np.testing.assert_array_equal(nv, np.asarray(kv) * tpe)
+    assert ((idx >= 0) & (idx < E * tpe)).all()
+    for t in range(6):
+        np.testing.assert_array_equal(idx[t, : nv[t]], full[t, : nv[t]])
+        np.testing.assert_array_equal(idx[t, nv[t]:],
+                                      np.full(k * tpe - nv[t], full[t, 0]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 10 ** 6))
+def test_full_capacity_packing_matches_dense(E, tpe, seed):
+    """k == E with every expert routed (any permutation order) gathers
+    exactly the dense tile set: the sorted list is bit-identical to
+    arange(E*tpe) — dense routing as the sparsity limit case."""
+    rng = np.random.RandomState(seed)
+    topi = jnp.asarray(np.stack([rng.permutation(E) for _ in range(4)]),
+                       jnp.int32)
+    idx, nv = sm.expert_tile_lists(topi, tpe)
+    assert (np.asarray(nv) == E * tpe).all()
+    for t in range(4):
+        np.testing.assert_array_equal(np.sort(np.asarray(idx)[t]),
+                                      np.arange(E * tpe))
+
+
+def test_expert_gather_kernels_match_dense_reference():
+    """expert_up_matmul -> relu -> expert_down_matmul == per-expert dense
+    matmuls (numpy reference), including zeroed capacity-dropped slots."""
+    E, d, F, tile = 4, 16, 64, 16
+    tpe = F // tile
+    rng = np.random.RandomState(0)
+    T, k = 6, 2
+    x = jnp.asarray(rng.randn(T, d), jnp.float32)
+    wu = jnp.asarray(rng.randn(E, d, F) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.randn(E, F, d) * 0.1, jnp.float32)
+    topi = jnp.asarray(rng.randint(0, E, (T, k)), jnp.int32)
+    kv = jnp.asarray([2, 2, 1, 0, 2, 1], jnp.int32)
+    idx, nv = sm.expert_tile_lists(topi, tpe, k_valid=kv)
+    compact = sm.expert_up_matmul(x, wu, idx, nv, tile=tile, interpret=True)
+    h = jnp.maximum(compact, 0.0)
+    y = sm.expert_down_matmul(h, wd, idx, nv, block_d=d, interpret=True)
+    ref = np.zeros((T, d), np.float32)
+    for t in range(T):
+        for i in range(int(kv[t])):
+            e = int(topi[t, i])
+            ref[t] += np.maximum(np.asarray(x)[t] @ np.asarray(wu)[e],
+                                 0.0) @ np.asarray(wd)[e]
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-4)
+    # compact rows past nvalid are exact zeros (no stray DMA contribution)
+    assert not np.asarray(compact)[3].any()
+
+
+# ---------------------------------------------------------------------------
+# engine-served MoE streams vs legacy sequential decode (f32 byte-identity)
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = get_config("tiny-moe").replace(compute_dtype="float32")
+    params = registry.get_family(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [np.random.RandomState(s).randint(
+                   0, cfg.vocab_size, ln).astype(np.int32)
+               for s, ln in ((1, 9), (2, 5), (3, 13))]
+    return cfg, params, prompts
+
+
+@pytest.fixture(scope="module")
+def legacy_streams(moe_setup):
+    cfg, params, prompts = moe_setup
+    eng = ServeEngine(cfg, params)
+    return [np.asarray(eng.generate({"tokens": jnp.asarray(p)[None]},
+                                    8).tokens[0])
+            for p in prompts]
+
+
+def _serve(cfg, params, prompts, max_new=8, **kw):
+    kws = kw.pop("submit_kw", {})
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=8,
+                                   max_blocks_per_seq=6, **kw)
+    uids = [eng.submit(p, max_new, **kws) for p in prompts]
+    res = eng.run()
+    return [np.asarray(res[u].tokens) for u in uids], eng
+
+
+@pytest.mark.parametrize("mode", ["plain", "chunked"])
+def test_moe_engine_byte_identical_to_legacy(moe_setup, legacy_streams, mode):
+    cfg, params, prompts = moe_setup
+    kw = {} if mode == "plain" else {"prefill_chunk": 4}
+    got, eng = _serve(cfg, params, prompts, **kw)
+    for g, want in zip(got, legacy_streams):
+        np.testing.assert_array_equal(g, want)
+    # activated-expert accounting: measured density is exactly top_k /
+    # n_experts at reuse_window=0 (drop-free, no mask), so bytes/step is
+    # the activated-expert fraction of the dense-all-experts figure
+    frac = eng.expert_io_fraction()
+    assert frac == cfg.top_k / cfg.n_experts
+    dense_all = (cfg.n_layers * cfg.d_ff * cfg.d_model * cfg.n_experts
+                 * jnp.dtype(cfg.compute_dtype).itemsize)
+    assert eng.weight_io_bytes_per_step() == pytest.approx(frac * dense_all)
+    assert eng.weight_io_bytes_per_step() < dense_all
+    snap = eng.metrics_snapshot()
+    assert snap["expert_io_fraction"] == frac
+
+
+def test_moe_speculative_with_dense_draft_byte_identical(
+        moe_setup, legacy_streams):
+    """Speculative mode composes: a 1-layer dense draft proposes, the MoE
+    target verifies windows — stream still byte-identical (rollback is
+    exact) and some drafts are accepted."""
+    cfg, params, prompts = moe_setup
+    dcfg = get_config("tiny-relu").replace(
+        name="tiny-relu-draft", n_layers=1, compute_dtype="float32")
+    dparams = registry.get_family(dcfg).init_params(jax.random.PRNGKey(2),
+                                                    dcfg)
+    got, eng = _serve(cfg, params, prompts, draft_cfg=dcfg,
+                      draft_params=dparams, gamma=3)
+    for g, want in zip(got, legacy_streams):
+        np.testing.assert_array_equal(g, want)
+    assert eng.s_agg_window() is not None
+
+
+def test_moe_gamma_reuse_savings_beat_expert_floor(moe_setup):
+    """γ-window reuse composes WITH routing sparsity: measured weight-I/O
+    savings must be at least the activated-expert floor 1 − k/E (reuse
+    masks then skip rows inside the activated experts on top)."""
+    cfg, params, prompts = moe_setup
+    _, eng = _serve(cfg, params, prompts, submit_kw={"reuse_window": 2})
+    floor = 1.0 - cfg.top_k / cfg.n_experts
+    assert eng.weight_io_saved() >= floor - 1e-9
+    assert eng.weight_io_bytes_per_step() <= (
+        (1.0 - floor) * cfg.n_layers * cfg.d_ff * cfg.d_model
+        * cfg.n_experts * 4 + 1e-6)

@@ -130,6 +130,41 @@ def test_predictor_mode_sharded_byte_identical():
     assert out.count("OK") == 2
 
 
+def test_moe_sharded_expert_dim_byte_identical():
+    """MoE serving on a (2, 4) mesh with the EXPERT dim sharded over
+    "model" (sharding/rules.py serve map priority axis): f32 greedy streams
+    byte-identical to single-device — exact because top_k=2 combine sums
+    are two-term (f32 addition is commutative, and the cross-device
+    partial-sum reduction only ever adds exact zeros) — and per-device
+    weight I/O reports the expert-axis 1/TP split."""
+    out = _run(_COMMON + """
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import rules
+    mesh = make_host_mesh(2, 4)
+    cfg, fam, params, prompts = setup("tiny-moe")
+    # the serve map puts "model" on the expert dim (priority pre-pass),
+    # not on the trailing ffn dim
+    spec = rules.param_pspec("layers/moe/wu", (2, 4, 64, 256), mesh, "serve")
+    assert spec[1] == "model" and spec[3] is None, spec
+    assert rules.param_pspec("layers/moe/wd",
+                             (2, 4, 256, 64), mesh, "serve")[1] == "model"
+    base, e0, _ = serve(cfg, params, prompts)
+    got, e1, _ = serve(cfg, params, prompts, mesh=mesh)
+    assert got == base, (base, got)
+    assert e0.tp == 1 and e1.tp == 4 and e1.ffn_tp == 4
+    b0, b1 = e0.weight_io_bytes_per_step(), e1.weight_io_bytes_per_step()
+    assert abs(b1 - b0 / 4) < 1e-6, (b0, b1)
+    # expert weights really are distributed
+    wu = e1.params["layers"]["moe"]["wu"]
+    assert len(wu.sharding.device_set) == 8, wu.sharding
+    # chunked prefill composes sharded too
+    gotc, _, _ = serve(cfg, params, prompts, mesh=mesh, prefill_chunk=4)
+    assert gotc == base, ("chunked", base, gotc)
+    print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_data_axis_sharded_pool():
     """A (2, 4) mesh shards the paged block pool over "data" as well —
     streams still byte-identical (block-table gathers cross shards)."""
