@@ -25,6 +25,14 @@ Three failure classes (exit code 1, one line per violation):
   pathology, gated only once a baseline records the keys. The engine-side
   span percentiles (``ttft_p50_ms`` .. ``tpot_p99_ms``, read off the obs
   histograms) gate on a rise of more than one factor-2 histogram bucket.
+
+A fourth class gates against FIXED bounds rather than the baseline
+(``ABSOLUTE_BOUNDS``): the kernel/engine byte-accounting cross-check, and
+the SLO-scheduling outcomes (``slo_goodput`` in (0, 1], ``slo_goodput_gain``
+strictly positive — priorities+preemption must beat FIFO at the same
+offered load — and ``preemption_count`` >= 1). These are checked whenever
+the fresh run records the key, and failing to record a key the baseline
+had is itself a violation.
 """
 from __future__ import annotations
 
@@ -43,7 +51,12 @@ ZERO_COLLAPSE_KEYS = ("weight_io_saved_gamma4", "spec_s_agg_gamma4",
                       # MoE through the engine: a zero/missing tokens/s or
                       # expert-I/O fraction means MoE serving silently
                       # stopped flowing through the CB engine
-                      "moe_tokens_per_s", "moe_expert_io_fraction")
+                      "moe_tokens_per_s", "moe_expert_io_fraction",
+                      # SLO scheduling (ISSUE 10): goodput collapsing to
+                      # zero (or the benchmark vanishing) means the
+                      # priority/preemption machinery silently stopped
+                      # serving the interactive class
+                      "slo_goodput", "preemption_count")
 # streaming-latency headlines (lower is better): gate on INCREASES. The
 # tolerance is generous (latency on shared CI runners is far noisier than
 # throughput) — this catches a serve-loop pathology (an extra barrier per
@@ -65,7 +78,16 @@ PERCENTILE_BUCKET_FACTOR = 2.0
 # derivations of the same quantity, so any drift outside ±15% means the
 # kernel geometry and the serving accounting no longer describe the same
 # machine. Gated whenever the fresh run records the key.
-ABSOLUTE_BOUNDS = {"kernel_bytes_ratio": (0.85, 1.15)}
+ABSOLUTE_BOUNDS = {
+    "kernel_bytes_ratio": (0.85, 1.15),
+    # goodput is a fraction; the SLO run must STRICTLY beat the FIFO
+    # baseline at the same offered load (gain > 0), and the benchmark must
+    # actually exercise preemption (>= 1) — both are step-deterministic,
+    # so fixed bounds, not baseline-relative tolerances
+    "slo_goodput": (1e-9, 1.0),
+    "slo_goodput_gain": (1e-9, 1.0),
+    "preemption_count": (1, float("inf")),
+}
 
 
 def _pr_num(path: str) -> int:
@@ -138,10 +160,10 @@ def check(fresh: dict, baseline: dict, tolerance: float,
         b, f = bh.get(key), fh.get(key)
         if f is None and b is not None:
             bad.append(f"{key}: recorded in baseline ({b}) but missing in "
-                       "fresh run — kernel roofline gate silently dropped")
+                       "fresh run — absolute-bound gate silently dropped")
         elif f is not None and not (lo <= f <= hi):
-            bad.append(f"{key}: {f:.4f} outside [{lo}, {hi}] — kernel "
-                       "modeled bytes and engine accounting drifted apart")
+            bad.append(f"{key}: {f:.4f} outside [{lo}, {hi}] — "
+                       "absolute-bound headline out of range")
     return bad
 
 

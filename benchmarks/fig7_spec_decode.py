@@ -18,6 +18,7 @@ import jax
 import numpy as np
 
 from repro.core import spec_theory
+from repro.serving.config import EngineConfig
 from repro.serving.engine import ContinuousBatchingEngine
 from repro.serving.spec_decode import spec_metrics
 
@@ -57,10 +58,10 @@ def _prompts(cfg, n):
 
 def _serve(cfg, params, prompts, max_new, *, dcfg=None, dparams=None,
            gamma=4):
-    eng = ContinuousBatchingEngine(
-        cfg, params, n_slots=min(4, len(prompts)), block_size=16,
+    eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(
+        n_slots=min(4, len(prompts)), block_size=16,
         max_blocks_per_seq=4, draft_cfg=dcfg, draft_params=dparams,
-        gamma=gamma)
+        gamma=gamma))
     uids = [eng.submit(p, max_new) for p in prompts]
     t0 = time.time()
     res = eng.run()

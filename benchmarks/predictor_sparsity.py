@@ -26,7 +26,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import registry
 from repro.predictor import calibrate
-from repro.serving import ContinuousBatchingEngine
+from repro.serving import ContinuousBatchingEngine, EngineConfig
 
 SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
 
@@ -77,8 +77,8 @@ def _settings():
 def _serve(cfg, params, pred):
     rng = np.random.RandomState(0)
     n_req, max_new = (3, 10) if SMOKE else (6, 16)
-    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=16,
-                                   max_blocks_per_seq=4, predictor=pred)
+    eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(
+        n_slots=2, block_size=16, max_blocks_per_seq=4, predictor=pred))
     uids = [eng.submit(rng.randint(0, cfg.vocab_size, int(s)), max_new)
             for s in rng.randint(6, 20, n_req)]
     t0 = time.time()

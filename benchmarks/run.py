@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.fig10_optimal_gamma",
     "benchmarks.appE_scaling",
     "benchmarks.serving_throughput",
+    "benchmarks.slo_traffic",
     "benchmarks.predictor_sparsity",
     "benchmarks.kernel_bench",
 ]
@@ -38,6 +39,7 @@ SMOKE_MODULES = [
     "benchmarks.fig10_optimal_gamma",
     "benchmarks.fig7_spec_decode",
     "benchmarks.serving_throughput",
+    "benchmarks.slo_traffic",
     "benchmarks.predictor_sparsity",
     "benchmarks.kernel_bench",
 ]
@@ -55,7 +57,7 @@ def run_module(mod_name: str) -> None:
         print(r, flush=True)
 
 
-PR_TAG = os.environ.get("BENCH_PR", "pr9")
+PR_TAG = os.environ.get("BENCH_PR", "pr10")
 
 
 def write_trajectory(tag: str = PR_TAG) -> str:
@@ -76,6 +78,7 @@ def write_trajectory(tag: str = PR_TAG) -> str:
             continue
     serving = sources.get("bench_serving.json", {})
     kernels = sources.get("bench_kernels.json", {})
+    slo = sources.get("bench_slo.json", {})
     out = {
         "pr": tag,
         "headline": {
@@ -107,6 +110,13 @@ def write_trajectory(tag: str = PR_TAG) -> str:
             "tpot_p99_ms": serving.get("serving_tpot_p99_ms"),
             "queue_wait_p50_ms": serving.get("serving_queue_wait_p50_ms"),
             "queue_wait_p99_ms": serving.get("serving_queue_wait_p99_ms"),
+            # SLO scheduling (ISSUE 10): interactive-class goodput under a
+            # step-based TTFT SLO, the FIFO baseline at the same offered
+            # load, their gap (gated > 0), and the preemptions exercised
+            "slo_goodput": slo.get("slo_goodput"),
+            "slo_goodput_fifo": slo.get("slo_goodput_fifo"),
+            "slo_goodput_gain": slo.get("slo_goodput_gain"),
+            "preemption_count": slo.get("preemption_count"),
             "kernel_bytes_ratio": kernels.get("kernel_bytes_ratio"),
             "kernel_ffn_fused_us":
                 (kernels.get("ffn_fused_kernel") or {}).get("us_per_call"),

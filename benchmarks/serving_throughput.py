@@ -40,7 +40,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import registry
 from repro.obs import merge_snapshots, render_prometheus
-from repro.serving import ContinuousBatchingEngine, ServeEngine
+from repro.serving import ContinuousBatchingEngine, EngineConfig, ServeEngine
 
 SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
 
@@ -111,10 +111,9 @@ def _run_cb(cfg, params, prompts, max_news, *, arrival_every, gamma=0,
                          gamma=gamma)
     elif predictor is not None:
         engine_kw.update(predictor=predictor)
-    eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
-                                   block_size=16,
-                                   max_blocks_per_seq=max_blocks_per_seq,
-                                   **engine_kw)
+    eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(
+        n_slots=n_slots, block_size=16,
+        max_blocks_per_seq=max_blocks_per_seq, **engine_kw))
     def serve():
         pending = list(zip(prompts, max_news))
         next_arrival = eng.t  # engine step counter keeps running across runs
@@ -168,8 +167,8 @@ def _run_api_stream(cfg, params, prompts, max_news):
 
     from repro.serving import AsyncServingEngine
 
-    eng = ContinuousBatchingEngine(cfg, params, n_slots=4, block_size=16,
-                                   max_blocks_per_seq=4)
+    eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(
+        n_slots=4, block_size=16, max_blocks_per_seq=4))
 
     async def client(api, p, m):
         t0 = time.time()

@@ -102,7 +102,7 @@ def main() -> None:
 
     if args.smoke and args.continuous:
         import numpy as np
-        from repro.serving import ContinuousBatchingEngine
+        from repro.serving import ContinuousBatchingEngine, EngineConfig
         from repro.serving.spec_decode import spec_metrics
         if args.predictor != "none":
             from repro.core.activations import is_sparse_activation
@@ -147,9 +147,9 @@ def main() -> None:
             # strict: an unsatisfiable --mesh shape is an operator error —
             # raise instead of quietly serving single-device
             spec_kw["mesh"] = make_host_mesh(*mesh_shape, strict=True)
-        eng = ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=16,
-                                       max_blocks_per_seq=max_bps,
-                                       track_sparsity=True, **spec_kw)
+        eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(
+            n_slots=2, block_size=16, max_blocks_per_seq=max_bps,
+            track_sparsity=True, **spec_kw))
         uids = [eng.submit(p, args.tokens, reuse_window=args.reuse_window)
                 for p in prompts]
         res = eng.run()

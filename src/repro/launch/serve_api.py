@@ -33,7 +33,14 @@ Request body (JSON)::
      "top_k": 40, "top_p": 0.95,
      "seed": 7,                  # omit -> the engine's --base-seed
      "stop": [[5, 9]],           # stop sequences (token ids)
-     "reuse_window": 0}          # γ-window weight reuse (plain mode)
+     "reuse_window": 0,          # γ-window weight reuse (plain mode)
+     "priority": 0,              # scheduling class (higher = more urgent)
+     "slo_ms": 500.0}            # TTFT target; graded, never scheduled on
+
+This is schema v1: UNKNOWN fields are rejected with a 400 naming the
+field (a typo'd "priorty" must not silently serve at default priority).
+The terminal event carries the scheduling outcome — ``priority``,
+``preemptions``, ``slo_met`` — alongside the token list and latency.
 
 Streaming responses are standard SSE: one ``data: {json}`` line per token,
 a terminal ``data:`` object with ``"done": true`` plus the finish reason,
@@ -101,7 +108,7 @@ def build_engine(args: argparse.Namespace):
 
     from repro.configs import get_config, smoke_config
     from repro.models import registry
-    from repro.serving import ContinuousBatchingEngine
+    from repro.serving import ContinuousBatchingEngine, EngineConfig
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.f32:
@@ -131,7 +138,16 @@ def build_engine(args: argparse.Namespace):
         # tile=1 = exact row-skipping, observable on the tiny smoke models
         kw.update(predictor=calibrate_from_config(params, cfg, calib,
                                                   tile=1))
-    return ContinuousBatchingEngine(cfg, params, **kw)
+    return ContinuousBatchingEngine(cfg, params,
+                                    config=EngineConfig(**kw).validate())
+
+
+# /v1/generate schema v1: the complete field set. Anything else is a 400
+# naming the offender — a misspelled "priorty" must fail loudly, not
+# silently serve at the default priority.
+_SCHEMA_V1_FIELDS = frozenset({
+    "prompt", "max_new", "stream", "temperature", "top_k", "top_p",
+    "seed", "stop", "reuse_window", "priority", "slo_ms"})
 
 
 def _sampling_from(body: dict):
@@ -217,18 +233,26 @@ class ApiServer:
                 return
             try:
                 body = json.loads(raw or b"{}")
+                unknown = sorted(set(body) - _SCHEMA_V1_FIELDS)
+                if unknown:
+                    raise ValueError(
+                        f"unknown field(s) {unknown}; schema v1 accepts "
+                        f"{sorted(_SCHEMA_V1_FIELDS)}")
                 prompt = [int(t) for t in body["prompt"]]
                 max_new = int(body["max_new"])
                 sampling = _sampling_from(body)
                 reuse_window = int(body.get("reuse_window", 0))
+                priority = int(body.get("priority", 0))
+                slo_ms = (float(body["slo_ms"])
+                          if body.get("slo_ms") is not None else None)
             except (KeyError, TypeError, ValueError) as e:
                 writer.write(_response("400 Bad Request", json.dumps(
                     {"error": f"bad request: {e}"}).encode()))
                 await writer.drain()
                 return
             await self._generate(writer, prompt, max_new, sampling,
-                                 reuse_window, stream=body.get("stream",
-                                                               True))
+                                 reuse_window, priority, slo_ms,
+                                 stream=body.get("stream", True))
         except (ConnectionResetError, BrokenPipeError, asyncio.IncompleteReadError):
             pass  # client went away; any in-flight uid is cancelled below
         finally:
@@ -309,10 +333,12 @@ class ApiServer:
         await writer.drain()
 
     async def _generate(self, writer, prompt, max_new, sampling,
-                        reuse_window, stream: bool) -> None:
+                        reuse_window, priority, slo_ms,
+                        stream: bool) -> None:
         try:
             uid = await self.api.submit(prompt, max_new, sampling=sampling,
-                                        reuse_window=reuse_window)
+                                        reuse_window=reuse_window,
+                                        priority=priority, slo_ms=slo_ms)
         except Exception as e:  # validation errors surface as 400s
             writer.write(_response("400 Bad Request", json.dumps(
                 {"error": str(e)}).encode()))
@@ -334,7 +360,10 @@ class ApiServer:
                              "tokens": [int(t) for t in ev.result.tokens],
                              "logprobs": [float(x)
                                           for x in ev.result.logprobs],
-                             "ttft_s": ev.ttft_s, "total_s": ev.total_s}
+                             "ttft_s": ev.ttft_s, "total_s": ev.total_s,
+                             "priority": ev.result.priority,
+                             "preemptions": ev.result.preemptions,
+                             "slo_met": ev.result.slo_met}
                     if stream:
                         writer.write(b"data: " + json.dumps(final).encode()
                                      + b"\n\ndata: [DONE]\n\n")

@@ -50,7 +50,10 @@ def server_args(mode: str) -> List[str]:
 
 def workload(vocab: int) -> List[dict]:
     """8 deterministic client requests: 5 greedy, 3 sampled; request 5
-    (sampled) disconnects after 3 streamed tokens."""
+    (sampled) disconnects after 3 streamed tokens. Traffic is
+    mixed-priority (schema v1): two interactive requests at priority 2
+    with a generous SLO, one at priority 1, the rest default batch class —
+    per-class TTFT series must land in /metrics."""
     rng = np.random.RandomState(0)
     reqs = []
     for i in range(8):
@@ -59,6 +62,10 @@ def workload(vocab: int) -> List[dict]:
         if i in (2, 5, 7):  # the sampled cohort
             r.update(temperature=0.8 + 0.1 * i, top_k=50, top_p=0.95,
                      seed=i)
+        if i in (1, 4):  # the interactive cohort (one greedy, one greedy)
+            r.update(priority=2, slo_ms=120_000.0)
+        elif i == 3:
+            r.update(priority=1)
         reqs.append(r)
     return reqs
 
@@ -211,6 +218,14 @@ async def drive(port: int, mode: str,
                             f"offline engine.run() {ref[i]}")
         if final.get("ttft_s") is None:
             failures.append(f"client {i}: final event missing ttft_s")
+        if final.get("priority") != reqs[i].get("priority", 0):
+            failures.append(f"client {i}: final event priority "
+                            f"{final.get('priority')} != submitted "
+                            f"{reqs[i].get('priority', 0)}")
+        if "slo_ms" in reqs[i] and final.get("slo_met") is not True:
+            failures.append(f"client {i}: slo_met={final.get('slo_met')} "
+                            f"under a {reqs[i]['slo_ms']}ms SLO nothing "
+                            f"in this smoke run can miss")
     # the server must have survived client 5 vanishing mid-stream
     if not await healthz(port):
         failures.append("healthz failed after mid-stream disconnect")
@@ -261,6 +276,16 @@ async def drive(port: int, mode: str,
         failures.append(f"ttft histogram count "
                         f"{counter('repro_request_ttft_seconds_count')} != "
                         f"{n_expected}")
+    # per-class TTFT (SLO scheduling): one labeled series per priority
+    # class the workload used, counts partitioning the 9 requests —
+    # priority 2: clients 1+4; priority 1: client 3; priority 0: the
+    # remaining 5 workload clients + the post-disconnect probe
+    for prio, n_class in (("2", 2), ("1", 1), ("0", n_expected - 3)):
+        got = counter("repro_request_class_ttft_seconds_count",
+                      f'priority="{prio}"')
+        if got != n_class:
+            failures.append(f"class ttft count for priority={prio} is "
+                            f"{got}, expected {n_class}")
     if mode == "predictor" and counter(
             "repro_predictor_active_neurons_total") <= 0:
         failures.append("predictor mode served but recall telemetry "

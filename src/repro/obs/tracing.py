@@ -101,6 +101,11 @@ class RequestSpan:
     cached_tokens: int = 0
     state: str = "queued"
     finish_reason: Optional[str] = None
+    # -- SLO scheduling (PR 10) --
+    priority: int = 0
+    slo_ms: Optional[float] = None
+    preemptions: int = 0
+    slo_met: Optional[bool] = None
 
     def queue_wait_s(self) -> Optional[float]:
         if self.t_admitted is None:
@@ -190,6 +195,18 @@ class EngineObs:
         self.h_ttft = r.histogram(
             "repro_request_ttft_seconds",
             "submit to first token (engine-side)", unit="seconds")
+        # per-priority-class TTFT lives in its OWN histogram: the percentile
+        # keys derived from h_ttft predate priorities and must keep their
+        # unlabeled series
+        self.h_class_ttft = r.histogram(
+            "repro_request_class_ttft_seconds",
+            "submit to first token by priority class", unit="seconds")
+        self.c_preempted = r.counter(
+            "repro_requests_preempted_total",
+            "decode slots preempted under pool/priority pressure")
+        self.c_resumed = r.counter(
+            "repro_requests_resumed_total",
+            "preempted requests re-admitted (resume via chunked prefill)")
         self.h_tpot = r.histogram(
             "repro_request_tpot_seconds",
             "mean inter-token time per finished request", unit="seconds")
@@ -287,15 +304,18 @@ class EngineObs:
         self.self_time_s += _pc() - t
 
     # -- scheduler (request lifecycle) hooks ---------------------------------
-    def req_submitted(self, uid: int, prompt_len: int, max_new: int) -> None:
+    def req_submitted(self, uid: int, prompt_len: int, max_new: int,
+                      priority: int = 0,
+                      slo_ms: Optional[float] = None) -> None:
         if not self.enabled:
             return
         t = _pc()
         self.spans[uid] = RequestSpan(uid=uid, prompt_len=prompt_len,
-                                      max_new=max_new, t_queued=t)
+                                      max_new=max_new, t_queued=t,
+                                      priority=priority, slo_ms=slo_ms)
         self.c_submitted.inc()
         self._event("submit", uid=uid, prompt_len=prompt_len,
-                    max_new=max_new)
+                    max_new=max_new, priority=priority, slo_ms=slo_ms)
         self.self_time_s += _pc() - t
 
     def req_admitted(self, uid: int, cached_tokens: int = 0) -> None:
@@ -316,6 +336,38 @@ class EngineObs:
                         cached_tokens=cached_tokens)
         self.self_time_s += _pc() - t
 
+    def req_preempted(self, uid: int, n_tokens: int,
+                      priority: int = 0) -> None:
+        """Slot evicted under pressure: its KV blocks returned to the pool,
+        the request (prompt + ``n_tokens`` generated so far) requeued."""
+        if not self.enabled:
+            return
+        t = _pc()
+        self.c_preempted.inc(priority=str(priority))
+        span = self.spans.get(uid)
+        if span is not None:
+            span.state = "preempted"
+            span.preemptions += 1
+        self._event("preempt", uid=uid, n_tokens=n_tokens,
+                    priority=priority)
+        self.self_time_s += _pc() - t
+
+    def req_resumed(self, uid: int, cached_tokens: int = 0) -> None:
+        """Preempted request re-admitted to a slot; its prefix resumes via
+        chunked prefill (``cached_tokens`` of it straight from the trie)."""
+        if not self.enabled:
+            return
+        t = _pc()
+        self.c_resumed.inc()
+        span = self.spans.get(uid)
+        if span is not None:
+            span.state = "prefilling"
+            if cached_tokens:
+                span.cached_tokens = cached_tokens
+                self.c_prefill_cached.inc(cached_tokens)
+        self._event("resume", uid=uid, cached_tokens=cached_tokens)
+        self.self_time_s += _pc() - t
+
     def req_tokens(self, uid: int, n: int) -> None:
         """``n`` tokens just emitted to ``uid`` (seed / decode / accepted
         speculative window). The first call marks prefill complete."""
@@ -329,7 +381,11 @@ class EngineObs:
                 span.t_first = t
                 span.state = "decoding"
                 self.h_ttft.observe(span.ttft_s())
+                self.h_class_ttft.observe(span.ttft_s(),
+                                          priority=str(span.priority))
                 self._event("first_token", uid=uid, ttft_s=span.ttft_s())
+            elif span.state == "preempted":
+                span.state = "decoding"
             span.t_last = t
             span.n_tokens += n
         self.self_time_s += _pc() - t
@@ -350,6 +406,9 @@ class EngineObs:
             span.t_finished = t
             span.state = "finished"
             span.finish_reason = reason
+            span.preemptions = getattr(result, "preemptions",
+                                       span.preemptions)
+            span.slo_met = getattr(result, "slo_met", None)
             self.h_e2e.observe(span.e2e_s())
             tpot = span.tpot_s()
             if tpot is not None:
@@ -357,7 +416,9 @@ class EngineObs:
             self.finished_spans.append(span)
             self._event("finish", uid=result.uid, reason=reason,
                         n_tokens=span.n_tokens, ttft_s=span.ttft_s(),
-                        tpot_s=tpot, e2e_s=span.e2e_s())
+                        tpot_s=tpot, e2e_s=span.e2e_s(),
+                        priority=span.priority,
+                        preemptions=span.preemptions, slo_met=span.slo_met)
         self.self_time_s += _pc() - t
 
     # -- API front-door hooks ------------------------------------------------
@@ -429,7 +490,8 @@ def format_statusz(engine) -> str:
         f"occupancy: {len(sched.active_indices())}/{sched.n_slots} slots "
         f"decoding, {len(sched.prefill_indices())} prefilling, "
         f"{len(sched.queue)} queued, pool "
-        f"{sched.allocator.allocated}/{sched.allocator.n_blocks - 1} blocks",
+        f"{sched.allocator.allocated}/{sched.allocator.n_blocks - 1} blocks, "
+        f"{sched.preemption_count} preemptions",
     ]
     snap = engine.metrics_snapshot()
     lines.append("engine metrics: " + (", ".join(
@@ -447,7 +509,7 @@ def format_statusz(engine) -> str:
         live = sorted(obs.spans.values(), key=lambda s: s.uid)
         lines.append(f"live requests ({len(live)}):")
         for s in live[:32]:
-            lines.append(f"  uid={s.uid} {s.state} "
+            lines.append(f"  uid={s.uid} {s.state} prio={s.priority} "
                          f"tokens={s.n_tokens}/{s.max_new} "
                          f"prompt={s.prompt_len} "
                          f"queue_wait={_ms(s.queue_wait_s())} "

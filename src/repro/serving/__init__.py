@@ -4,6 +4,7 @@ per-request sampling, the legacy single-batch engine, scheduler,
 speculative-decoding metrics, and the observability hub (repro.obs)."""
 from repro.obs import EngineObs, format_statusz  # noqa: F401
 from repro.serving.api import AsyncServingEngine, TokenEvent  # noqa: F401
+from repro.serving.config import EngineConfig  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
     ContinuousBatchingEngine, GenerationResult, ServeEngine,
 )

@@ -73,7 +73,8 @@ class AsyncServingEngine:
 
     def __init__(self, engine: ContinuousBatchingEngine):
         self.engine = engine
-        self._pending: deque = deque()  # (prompt, max_new, rw, sp, future)
+        # pending: (prompt, max_new, rw, sp, priority, slo_ms, future)
+        self._pending: deque = deque()
         self._cancels: deque = deque()  # uids to cancel
         self._sessions: Dict[int, _Session] = {}
         self._wake: Optional[asyncio.Event] = None
@@ -107,15 +108,18 @@ class AsyncServingEngine:
     # -- client API ----------------------------------------------------------
     async def submit(self, prompt, max_new: int, *,
                      sampling: Optional[SamplingParams] = None,
-                     reuse_window: int = 0) -> int:
+                     reuse_window: int = 0, priority: int = 0,
+                     slo_ms: Optional[float] = None) -> int:
         """Enqueue a request; resolves to its uid once the serve loop has
         accepted it (malformed requests raise here, exactly like
-        ``engine.submit``). Pair with ``events(uid)`` — or use ``stream``,
-        which fuses both."""
+        ``engine.submit``). ``priority``/``slo_ms`` pass straight through
+        to the SLO scheduler (engine.submit). Pair with ``events(uid)`` —
+        or use ``stream``, which fuses both."""
         if self._task is None:
             raise RuntimeError("serve loop not started")
         fut = asyncio.get_running_loop().create_future()
-        self._pending.append((prompt, max_new, reuse_window, sampling, fut))
+        self._pending.append((prompt, max_new, reuse_window, sampling,
+                              priority, slo_ms, fut))
         self._wake.set()
         return await fut
 
@@ -145,21 +149,26 @@ class AsyncServingEngine:
 
     async def stream(self, prompt, max_new: int, *,
                      sampling: Optional[SamplingParams] = None,
-                     reuse_window: int = 0) -> AsyncIterator[TokenEvent]:
+                     reuse_window: int = 0, priority: int = 0,
+                     slo_ms: Optional[float] = None
+                     ) -> AsyncIterator[TokenEvent]:
         """submit + events in one async generator — one call per client
         session."""
         uid = await self.submit(prompt, max_new, sampling=sampling,
-                                reuse_window=reuse_window)
+                                reuse_window=reuse_window,
+                                priority=priority, slo_ms=slo_ms)
         async for ev in self.events(uid):
             yield ev
 
     async def generate(self, prompt, max_new: int, *,
                        sampling: Optional[SamplingParams] = None,
-                       reuse_window: int = 0) -> TokenEvent:
+                       reuse_window: int = 0, priority: int = 0,
+                       slo_ms: Optional[float] = None) -> TokenEvent:
         """Non-streaming convenience: the terminal event (with .result)."""
         ev = None
         async for ev in self.stream(prompt, max_new, sampling=sampling,
-                                    reuse_window=reuse_window):
+                                    reuse_window=reuse_window,
+                                    priority=priority, slo_ms=slo_ms):
             pass
         return ev
 
@@ -196,10 +205,12 @@ class AsyncServingEngine:
         """Apply buffered submits/cancels on the loop thread, between
         engine steps (the engine is not thread-safe)."""
         while self._pending:
-            prompt, max_new, rw, sp, fut = self._pending.popleft()
+            (prompt, max_new, rw, sp, priority, slo_ms,
+             fut) = self._pending.popleft()
             try:
                 uid = self.engine.submit(prompt, max_new, reuse_window=rw,
-                                         sampling=sp)
+                                         sampling=sp, priority=priority,
+                                         slo_ms=slo_ms)
             except Exception as e:
                 if not fut.cancelled():
                     fut.set_exception(e)

@@ -37,6 +37,7 @@ from repro.models import registry
 from repro.models import serving_protocol as sp
 from repro.obs import EngineObs
 from repro.serving import sampling as smp
+from repro.serving.config import EngineConfig
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Request, RequestResult, Scheduler
 from repro.sharding import rules
@@ -66,8 +67,16 @@ def _place_serve_params(params, mesh):
 class ContinuousBatchingEngine:
     """Continuous-batching sparse serving over a paged KV cache.
 
-    Parameters
-    ----------
+    Constructed as ``ContinuousBatchingEngine(cfg, params,
+    config=EngineConfig(...))`` (serving/config.py — a validated dataclass
+    holding every field below plus the SLO-scheduling knobs
+    ``prefill_budget`` / ``preemption`` / ``aging_steps``). The historical
+    keyword form ``ContinuousBatchingEngine(cfg, params, n_slots=4, ...)``
+    still works through a deprecation shim that warns once per process and
+    round-trips exactly onto an EngineConfig.
+
+    Parameters (= EngineConfig fields)
+    ----------------------------------
     n_slots: max concurrently decoding requests (the jitted batch width).
     block_size: tokens per KV block.
     n_blocks: shared pool size (block 0 is scratch). Defaults to full
@@ -160,17 +169,34 @@ class ContinuousBatchingEngine:
         ``EngineObs.disabled()`` to turn every hook into an early return.
     """
 
-    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
-                 block_size: int = 16, max_blocks_per_seq: int = 8,
-                 n_blocks: Optional[int] = None,
-                 track_sparsity: bool = False,
-                 draft_cfg: Optional[ModelConfig] = None,
-                 draft_params=None, gamma: int = 4,
-                 predictor=None, predictor_telemetry: bool = True,
-                 prefill_chunk: int = 0, prefix_cache: bool = False,
-                 warm_masks: bool = False, mesh=None, base_seed: int = 0,
-                 fast_kernels: Optional[bool] = None,
-                 obs: Optional[EngineObs] = None):
+    def __init__(self, cfg: ModelConfig, params,
+                 config: Optional[EngineConfig] = None, **legacy_kw):
+        if config is None:
+            config = (EngineConfig.from_legacy_kwargs(**legacy_kw)
+                      if legacy_kw else EngineConfig())
+        elif legacy_kw:
+            raise TypeError(
+                "pass either config=EngineConfig(...) or legacy keyword "
+                f"arguments, not both (got {sorted(legacy_kw)})")
+        config.validate()
+        self.config = config
+        n_slots = config.n_slots
+        block_size = config.block_size
+        max_blocks_per_seq = config.max_blocks_per_seq
+        n_blocks = config.resolved_n_blocks
+        track_sparsity = config.track_sparsity
+        draft_cfg = config.draft_cfg
+        draft_params = config.draft_params
+        gamma = config.gamma
+        predictor = config.predictor
+        predictor_telemetry = config.predictor_telemetry
+        prefill_chunk = config.prefill_chunk
+        prefix_cache = config.prefix_cache
+        warm_masks = config.warm_masks
+        mesh = config.mesh
+        base_seed = config.base_seed
+        fast_kernels = config.fast_kernels
+        obs = config.obs
         fam = registry.get_family(cfg)
         # every serving-mode gate below goes through the family's DECLARED
         # capability set (models/serving_protocol.py) — one uniform error
@@ -179,22 +205,6 @@ class ContinuousBatchingEngine:
         caps.require("paged_decode", cfg.family)
         if not cfg.d_ff:
             raise ValueError("continuous batching requires an FFN (d_ff > 0)")
-        if n_blocks is None:
-            n_blocks = 1 + n_slots * max_blocks_per_seq
-        if n_blocks - 1 < max_blocks_per_seq:
-            raise ValueError("pool smaller than one request's worst case")
-        if prefill_chunk < 0:
-            raise ValueError("prefill_chunk must be >= 0")
-        if prefix_cache and not prefill_chunk:
-            raise ValueError(
-                "prefix_cache requires chunked prefill (prefill_chunk > 0): "
-                "a cache hit prefills only the cold suffix, which resumes "
-                "mid-prompt against cached blocks — the whole-prompt "
-                "executable always starts at position 0")
-        if warm_masks and not prefill_chunk:
-            raise ValueError("warm_masks requires chunked prefill "
-                             "(prefill_chunk > 0): the warm γ-mask is "
-                             "harvested from the prefill chunks")
         if prefill_chunk:
             caps.require("chunked_prefill", cfg.family)
         self.mesh = mesh
@@ -249,10 +259,17 @@ class ContinuousBatchingEngine:
         self.track = track_sparsity
         self.prefill_chunk = prefill_chunk
         self.warm_masks = warm_masks
+        self.prefill_budget = config.prefill_budget
         self.obs = obs if obs is not None else EngineObs()
+        # preemption resumes a request mid-sequence via chunked prefill of
+        # its prompt+generated prefix — without the chunked path the knob
+        # is inert (downgraded, not an error: it defaults on)
         self.scheduler = Scheduler(n_slots, n_blocks, block_size,
                                    max_blocks_per_seq,
-                                   prefix_cache=prefix_cache, obs=self.obs)
+                                   prefix_cache=prefix_cache, obs=self.obs,
+                                   preemption=(config.preemption
+                                               and prefill_chunk > 0),
+                                   aging_steps=config.aging_steps)
         self.pages = fam.init_paged_cache(
             cfg, n_blocks, block_size,
             sharding=self._pool_sharding(cfg, n_blocks))
@@ -326,7 +343,7 @@ class ContinuousBatchingEngine:
         if prefill_chunk:
             def prefill_chunk_step(params, pages, table, tokens, pos0, clen,
                                    masks, refresh, keep, temps, tks, tps,
-                                   keys):
+                                   keys, gen):
                 (logits, pages, new_masks,
                  (act, _, _, _)) = fam.model_prefill_chunk_paged(
                     params, {"tokens": tokens}, cfg, pages, table, pos0,
@@ -338,10 +355,12 @@ class ContinuousBatchingEngine:
                 # final mask covers the whole cold suffix
                 new_masks = jnp.where(keep[None, :, None], masks | act,
                                       new_masks)
-                # every chunk position samples with the slot's gen-0 key —
+                # every chunk position samples with the slot's CURRENT
+                # generated-index key (gen=0 for a fresh prompt; a resumed
+                # preempted slot continues its key schedule at len(out)) —
                 # only clen-1 (the seed token) is read on the host
                 B, C = logits.shape[:2]
-                k0 = smp.position_keys(keys, jnp.zeros((B,), jnp.int32))
+                k0 = smp.position_keys(keys, gen)
                 nxt, lp = head(logits,
                                jnp.broadcast_to(temps[:, None], (B, C)),
                                jnp.broadcast_to(tks[:, None], (B, C)),
@@ -356,9 +375,6 @@ class ContinuousBatchingEngine:
         self.predictor = predictor
         self.predictor_telemetry = predictor_telemetry
         if predictor is not None:
-            if draft_cfg is not None:
-                raise ValueError("predictor and speculative modes are "
-                                 "mutually exclusive serving modes")
             caps.require("predictor", cfg.family)
             if predictor.n_tiles * predictor.tile != cfg.d_ff:
                 raise ValueError(
@@ -412,8 +428,6 @@ class ContinuousBatchingEngine:
         self.spec = draft_cfg is not None
         self.gamma = gamma
         if self.spec:
-            if gamma < 1:
-                raise ValueError("speculative mode needs gamma >= 1")
             if draft_cfg.vocab_size != cfg.vocab_size:
                 raise ValueError("draft and target must share a vocabulary")
             caps.require("spec_verify", cfg.family)
@@ -547,7 +561,9 @@ class ContinuousBatchingEngine:
 
     # -- request API --------------------------------------------------------
     def submit(self, prompt, max_new: int, reuse_window: int = 0,
-               sampling: Optional[SamplingParams] = None) -> int:
+               sampling: Optional[SamplingParams] = None, *,
+               priority: int = 0,
+               slo_ms: Optional[float] = None) -> int:
         """Enqueue a request; returns its uid. Admission happens inside
         step() when a slot and enough KV blocks are free.
 
@@ -555,7 +571,14 @@ class ContinuousBatchingEngine:
         distribution and stop sequences. A sampled request's PRNG key is
         derived here from (seed, request fingerprint) — never from the
         uid, slot, or admission order — so its stream replays identically
-        whatever else is co-scheduled (serving/sampling.py)."""
+        whatever else is co-scheduled (serving/sampling.py).
+
+        ``priority`` (higher = more urgent; default 0) orders admission
+        and selects preemption victims; aging (EngineConfig.aging_steps)
+        keeps low classes from starving. ``slo_ms`` is this request's
+        time-to-first-token target: it never changes scheduling, it is
+        judged (RequestResult.slo_met, /metrics) — the scheduler works on
+        priorities, the SLO grades the outcome."""
         self._uid += 1
         key = None
         if sampling is not None and not sampling.is_greedy:
@@ -563,8 +586,9 @@ class ContinuousBatchingEngine:
         req = Request(uid=self._uid,
                       tokens=np.asarray(prompt, np.int32).reshape(-1),
                       max_new=max_new, reuse_window=reuse_window,
-                      sampling=sampling, key=key)
-        self.scheduler.submit(req)
+                      sampling=sampling, key=key,
+                      priority=priority, slo_ms=slo_ms)
+        self.scheduler.submit(req, self.t)
         return self._uid
 
     def cancel(self, uid: int) -> bool:
@@ -599,8 +623,11 @@ class ContinuousBatchingEngine:
             newly = sched.admit(self.t)
             if self.track:
                 for _, slot in newly:
-                    self.trackers[slot.request.uid] = AggregatedTracker(
-                        self.cfg.n_layers, self.cfg.d_ff)
+                    # a resumed (preempted) slot keeps its tracker: the
+                    # union statistics span the whole logical request
+                    if slot.request.uid not in self.trackers:
+                        self.trackers[slot.request.uid] = AggregatedTracker(
+                            self.cfg.n_layers, self.cfg.d_ff)
         if not self.prefill_chunk:
             if not newly:
                 return False
@@ -618,10 +645,10 @@ class ContinuousBatchingEngine:
         legacy lowering — prefill_chunk == 0)."""
         sched = self.scheduler
         for _, slot in newly:
-            s = slot.request.prompt_len
+            s = slot.prefill_len
             nb_eff = -(-s // self.block_size)  # blocks the prompt holds
             toks = np.zeros((1, nb_eff * self.block_size), np.int32)
-            toks[0, :s] = slot.request.tokens
+            toks[0, :s] = slot.prefill_tokens
             jt = jnp.asarray(toks)
             blocks = jnp.asarray(slot.blocks[:nb_eff], jnp.int32)
             true_len = jnp.asarray(s, jnp.int32)
@@ -638,14 +665,15 @@ class ContinuousBatchingEngine:
                 self.draft_pages = self._prefill_draft(
                     self.draft_params, jt, self.draft_pages, blocks,
                     true_len)
-            sched.seed(slot, int(nxt), float(lp))
+            sched.seed(slot, int(nxt), float(lp), step=self.t)
 
     def _prefill_one_chunk(self) -> None:
         """One fixed-shape chunked-prefill window step (see _admit)."""
         sched = self.scheduler
         (tokens, pos0, table, clen,
-         first) = sched.prefill_batch(self.prefill_chunk)
-        temps, tks, tps, skeys, _ = sched.sampling_arrays()
+         first) = sched.prefill_batch(self.prefill_chunk,
+                                      self.prefill_budget)
+        temps, tks, tps, skeys, gen = sched.sampling_arrays()
         # prefilling slots run DENSE (refresh on): the chunk records fresh
         # union activity into their mask rows — the warm-mask harvest, and
         # harmless otherwise (an age-0 decode refresh overwrites it).
@@ -660,12 +688,13 @@ class ContinuousBatchingEngine:
         nxt, lp, self.pages, self.masks = self._prefill_chunk(
             self.params, self.pages, jt, jtok, jp, jc, self.masks,
             jnp.asarray(refresh), jnp.asarray(keep), jnp.asarray(temps),
-            jnp.asarray(tks), jnp.asarray(tps), jnp.asarray(skeys))
+            jnp.asarray(tks), jnp.asarray(tps), jnp.asarray(skeys),
+            jnp.asarray(gen))
         if self.spec:
             self.draft_pages = self._prefill_chunk_draft(
                 self.draft_params, self.draft_pages, jt, jtok, jp, jc)
         sched.record_prefill(np.asarray(nxt), np.asarray(lp), clen,
-                             warm=self.warm_masks)
+                             warm=self.warm_masks, step=self.t)
 
     def _account(self, active, dens_np, tiles_np, act) -> None:
         """Per-(active slot, step) weight-I/O + sparsity-tracker updates.

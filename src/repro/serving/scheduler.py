@@ -7,7 +7,11 @@ testable without a model. The engine (serving/engine.py) owns the device
 state (page pool, γ-window masks) and calls into this scheduler every step:
 
   1. retire slots whose requests finished, dropping their block references;
-  2. admit queued requests into free slots while blocks last (strict FIFO);
+  2. admit queued requests into free slots while blocks last, highest
+     EFFECTIVE priority first (priority + waiting-time aging), skipping
+     entries whose block demand cannot currently be met — bounded by the
+     aging barrier — and preempting strictly-lower-priority slots when the
+     candidate cannot fit otherwise;
   3. advance chunked prefill for admitted-but-not-yet-decoding slots;
   4. build the fixed-shape slot batch the jitted decode step consumes.
 
@@ -21,18 +25,23 @@ Admission state machine (one request's lifecycle)
     submit()            queued      validated against max_blocks_per_seq AND
        |                            the pool itself (a request the pool could
        v                            never hold is rejected, not starved)
-    admit()             prefilling  head-of-line FIFO: a free slot + the full
-       |                            lifetime block need, with any cached
-       |                            full-block prompt prefix mapped from the
-       |                            prefix trie (refcount++, prefilled jumps
-       |                            to the cached length) and only the cold
-       |                            suffix left to compute
+    admit()             prefilling  highest effective priority first
+       |                            (priority, then FIFO; queued entries age
+       |                            one class per ``aging_steps`` waited); a
+       |                            free slot + the full lifetime block need,
+       |                            with any cached full-block prompt prefix
+       |                            mapped from the prefix trie (refcount++,
+       |                            prefilled jumps to the cached length) and
+       |                            only the cold suffix left to compute. An
+       |                            entry that does not fit is SKIPPED (not a
+       |                            hard stop) until it has aged, after which
+       |                            it becomes a barrier nothing passes.
        v
     record_prefill()    prefilling  one fixed-shape chunk per engine step,
        | (xN chunks)                interleaved with the decode step, until
-       |                            ``prefilled == prompt_len``; whole-prompt
-       |                            mode (prefill_chunk=0) collapses this to
-       |                            a single jump
+       |                            ``prefilled == prefill_len``; whole-
+       |                            prompt mode (prefill_chunk=0) collapses
+       |                            this to a single jump
        v
     seed()              decoding    first generated token recorded from the
        |                            final chunk's logits; the prompt's full
@@ -40,6 +49,18 @@ Admission state machine (one request's lifecycle)
        v
     record()/record_spec()  ...     one token (or one accepted window) per
        |                            step; ``age`` drives the γ-refresh phase
+       |
+       |   preempt()    queued      under slot/pool pressure a strictly
+       |                            higher-priority admission may EVICT the
+       |                            slot TO RECOMPUTE: its written full
+       |                            blocks are parked in the prefix trie,
+       |                            every block reference is dropped, and
+       |                            the request re-enters the queue carrying
+       |                            its generated prefix. Re-admission maps
+       |                            the parked blocks back from the trie and
+       |                            chunk-prefills only the cold suffix of
+       |                            prompt+generated — f32 greedy streams
+       |                            are byte-identical across the cycle.
        v
     retire_finished()   retired     block refcounts dropped — blocks shared
                                     with the trie or other slots survive;
@@ -48,7 +69,7 @@ Admission state machine (one request's lifecycle)
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import time
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -72,6 +93,13 @@ class Request:
     # (seed, request fingerprint), never from uid/slot/admission order
     sampling: Optional["SamplingParams"] = None
     key: Optional[np.ndarray] = None
+    # scheduling class: higher admits first and may preempt strictly lower.
+    # 0 (default) keeps today's FIFO behavior for homogeneous traffic.
+    priority: int = 0
+    # TTFT service-level objective in milliseconds (None = no SLO):
+    # informational — the scheduler never drops a request for missing it,
+    # but RequestResult.slo_met reports the outcome per request
+    slo_ms: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -105,6 +133,18 @@ class RequestResult:
     # why generation ended: "length" (max_new budget), "stop" (a stop
     # sequence matched) or "cancelled" (client abandoned the request)
     finish_reason: str = "length"
+    # -- SLO-aware scheduling outcomes --
+    priority: int = 0
+    slo_ms: Optional[float] = None
+    # times this request was preempted (evicted to recompute and requeued)
+    preemptions: int = 0
+    # TTFT SLO verdict: None when the request carried no slo_ms, else
+    # whether wall-clock submit→first-token beat it
+    slo_met: Optional[bool] = None
+    # engine-step stamps for deterministic (wall-clock-free) latency
+    # accounting: TTFT in steps = first_token_step - submit_step
+    submit_step: int = -1
+    first_token_step: int = -1
 
     @property
     def accept_rate(self) -> float:
@@ -113,31 +153,78 @@ class RequestResult:
         return self.draft_accepted / max(1, self.draft_proposed)
 
 
+@dataclasses.dataclass
+class _QueueEntry:
+    """One queued admission candidate: a fresh request, or a preempted
+    slot re-entering with its generated prefix (``resume`` carries the
+    live _Slot so no progress is lost)."""
+    req: Request
+    seq: int            # submission order — the FIFO tiebreak
+    submit_step: int    # engine step when (re)queued — drives aging
+    t_submit: float     # wall clock when first submitted (SLO accounting)
+    resume: Optional["_Slot"] = None
+
+
 class RequestQueue:
-    """FIFO admission queue. Head-of-line blocking is deliberate: a large
-    request is never starved by small ones slipping past it."""
+    """Priority admission queue with aging.
+
+    Order = (effective priority DESC, submission seq ASC) where effective
+    priority is ``req.priority`` plus one class per ``aging_steps`` engine
+    steps waited (aging_steps=0 disables aging → raw priority, then FIFO).
+    With homogeneous priorities this degenerates to exactly the historical
+    FIFO. Starvation is bounded two ways: a waiting low-priority request
+    ages into higher classes, and once an entry has waited ``aging_steps``
+    without fitting it becomes an admission BARRIER (Scheduler.admit stops
+    skipping past it)."""
 
     def __init__(self):
-        self._q: deque = deque()
+        self._q: List[_QueueEntry] = []
+        self._seq = 0
 
-    def push(self, req: Request) -> None:
-        self._q.append(req)
+    @staticmethod
+    def effective_priority(entry: _QueueEntry, step: int,
+                           aging_steps: int) -> int:
+        aged = (max(0, step - entry.submit_step) // aging_steps
+                if aging_steps > 0 else 0)
+        return entry.req.priority + aged
+
+    def ordered(self, step: int = 0,
+                aging_steps: int = 0) -> List[_QueueEntry]:
+        """Entries in admission order for this step."""
+        return sorted(self._q, key=lambda e: (
+            -self.effective_priority(e, step, aging_steps), e.seq))
+
+    def push(self, req: Request, step: int = 0,
+             resume: Optional["_Slot"] = None,
+             t_submit: Optional[float] = None) -> _QueueEntry:
+        entry = _QueueEntry(req, self._seq, step,
+                            time.monotonic() if t_submit is None
+                            else t_submit, resume)
+        self._seq += 1
+        self._q.append(entry)
+        return entry
 
     def peek(self) -> Optional[Request]:
-        return self._q[0] if self._q else None
+        """Head of the admission order (raw priority, no aging)."""
+        return self.ordered()[0].req if self._q else None
 
     def pop(self) -> Request:
-        return self._q.popleft()
+        entry = self.ordered()[0]
+        self._q.remove(entry)
+        return entry.req
+
+    def remove_entry(self, entry: _QueueEntry) -> None:
+        self._q.remove(entry)
 
     def uids(self) -> List[int]:
-        return [r.uid for r in self._q]
+        return [e.req.uid for e in self.ordered()]
 
-    def remove(self, uid: int) -> Optional[Request]:
-        """Withdraw a queued request (cancellation before admission)."""
-        for r in self._q:
-            if r.uid == uid:
-                self._q.remove(r)
-                return r
+    def remove(self, uid: int) -> Optional[_QueueEntry]:
+        """Withdraw a queued entry (cancellation before (re)admission)."""
+        for e in self._q:
+            if e.req.uid == uid:
+                self._q.remove(e)
+                return e
         return None
 
     def __len__(self) -> int:
@@ -331,9 +418,13 @@ class _Slot:
     request: Request
     blocks: List[int]
     admitted_step: int
-    age: int = 0  # decoded tokens since admission (drives the γ phase)
-    # prompt tokens whose K/V is already in the pool: starts at the cached
-    # prefix length, advances chunk by chunk, reaches prompt_len at seed()
+    # generated tokens whose K/V is written (drives the γ phase and
+    # next_pos). Maintained as len(out) - 1 while decoding — seed() pins
+    # that equality so a preempted slot resumes at the exact γ phase and
+    # write position it would have reached unpreempted.
+    age: int = 0
+    # prefill tokens whose K/V is already in the pool: starts at the cached
+    # prefix length, advances chunk by chunk, reaches prefill_len at seed()
     prefilled: int = 0
     cached_tokens: int = 0  # of those, mapped from the prefix cache
     warm: bool = False  # γ-mask seeded from the prefill activity harvest
@@ -353,14 +444,36 @@ class _Slot:
     io_steps: int = 0
     # early-finish marker ("stop" / "cancelled"); None = run to max_new
     finish: Optional[str] = None
+    # -- SLO-aware scheduling state --
+    preemptions: int = 0
+    # set at preempt(): the prompt + everything generated so far, frozen as
+    # the token sequence the NEXT admission must prefill (via the trie's
+    # parked blocks + a chunked prefill of the cold tail). None = never
+    # preempted: prefill covers just the prompt.
+    resume_tokens: Optional[np.ndarray] = None
+    submit_step: int = -1       # engine step of the original submit()
+    t_submit: float = 0.0       # wall clock of the original submit()
+    first_token_step: int = -1  # engine step of the first generated token
+    t_first: Optional[float] = None
 
     @property
     def done(self) -> bool:
         return self.finish is not None or len(self.out) >= self.request.max_new
 
     @property
+    def prefill_tokens(self) -> np.ndarray:
+        """Token sequence the current prefill pass must cover: the prompt,
+        or prompt + generated prefix when resuming from a preemption."""
+        return (self.resume_tokens if self.resume_tokens is not None
+                else self.request.tokens)
+
+    @property
+    def prefill_len(self) -> int:
+        return int(self.prefill_tokens.shape[0])
+
+    @property
     def prefilling(self) -> bool:
-        return self.prefilled < self.request.prompt_len
+        return self.prefilled < self.prefill_len
 
     @property
     def next_pos(self) -> int:
@@ -378,7 +491,7 @@ class Scheduler:
 
     def __init__(self, n_slots: int, n_blocks: int, block_size: int,
                  max_blocks_per_seq: int, prefix_cache: bool = False,
-                 obs=None):
+                 obs=None, preemption: bool = True, aging_steps: int = 32):
         self.n_slots = n_slots
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
@@ -388,6 +501,12 @@ class Scheduler:
         self.results: Dict[int, RequestResult] = {}
         self.prefix: Optional[PrefixCache] = (PrefixCache() if prefix_cache
                                               else None)
+        # SLO-aware scheduling knobs (see EngineConfig for semantics):
+        # preemption lets admission evict strictly-lower-priority slots;
+        # aging_steps bounds both starvation and admission skip-ahead
+        self.preemption = preemption
+        self.aging_steps = aging_steps
+        self.preemption_count = 0
         # prompt-token accounting behind the engine's prefix_hit_rate()
         self.prefill_tokens_total = 0
         self.prefill_tokens_saved = 0
@@ -401,7 +520,9 @@ class Scheduler:
     def blocks_needed(self, req: Request) -> int:
         return -(-(req.prompt_len + req.max_new) // self.block_size)
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, step: int = 0) -> None:
+        """Validate and enqueue. ``step`` is the engine step of submission:
+        it stamps RequestResult.submit_step and starts the aging clock."""
         # reject malformed requests here, before any slot/block state exists:
         # a prefill failure mid-admission would leave a zombie slot behind
         if req.prompt_len == 0:
@@ -422,9 +543,44 @@ class Scheduler:
                 f"request {req.uid}: needs {need} blocks but the pool holds "
                 f"only {self.allocator.n_blocks - 1} allocatable blocks — "
                 f"it could never be admitted")
-        self.queue.push(req)
+        self.queue.push(req, step)
         if self.obs is not None:  # span starts only for ACCEPTED requests
-            self.obs.req_submitted(req.uid, req.prompt_len, req.max_new)
+            self.obs.req_submitted(req.uid, req.prompt_len, req.max_new,
+                                   priority=req.priority, slo_ms=req.slo_ms)
+
+    def _result(self, slot: _Slot, step: int) -> RequestResult:
+        """Terminal RequestResult from a slot's accumulated state."""
+        req = slot.request
+        slo_met = None
+        if req.slo_ms is not None:
+            slo_met = (slot.t_first is not None
+                       and (slot.t_first - slot.t_submit) * 1e3 <= req.slo_ms)
+        return RequestResult(
+            uid=req.uid,
+            tokens=np.asarray(slot.out, np.int32),
+            logprobs=np.asarray(slot.lps, np.float32),
+            prompt_len=req.prompt_len,
+            admitted_step=slot.admitted_step,
+            finished_step=step,
+            draft_proposed=slot.draft_proposed,
+            draft_accepted=slot.draft_accepted,
+            target_calls=slot.target_calls,
+            predicted_density=(slot.pred_dens_sum / slot.pred_steps
+                               if slot.pred_steps else 1.0),
+            realized_recall=(1.0 - slot.pred_miss / slot.pred_active
+                             if slot.pred_active else 1.0),
+            pred_misses=slot.pred_miss,
+            cached_prompt_tokens=slot.cached_tokens,
+            ffn_read_fraction=(slot.io_dens_sum / slot.io_steps
+                               if slot.io_steps else 1.0),
+            finish_reason=slot.finish or "length",
+            priority=req.priority,
+            slo_ms=req.slo_ms,
+            preemptions=slot.preemptions,
+            slo_met=slo_met,
+            submit_step=slot.submit_step,
+            first_token_step=slot.first_token_step,
+        )
 
     def retire_finished(self, step: int) -> List[int]:
         """Free the blocks of finished slots; returns retired request uids."""
@@ -432,74 +588,190 @@ class Scheduler:
         for i, slot in enumerate(self.slots):
             if slot is not None and slot.done:
                 self.allocator.free(slot.blocks)
-                self.results[slot.request.uid] = RequestResult(
-                    uid=slot.request.uid,
-                    tokens=np.asarray(slot.out, np.int32),
-                    logprobs=np.asarray(slot.lps, np.float32),
-                    prompt_len=slot.request.prompt_len,
-                    admitted_step=slot.admitted_step,
-                    finished_step=step,
-                    draft_proposed=slot.draft_proposed,
-                    draft_accepted=slot.draft_accepted,
-                    target_calls=slot.target_calls,
-                    predicted_density=(slot.pred_dens_sum / slot.pred_steps
-                                       if slot.pred_steps else 1.0),
-                    realized_recall=(1.0 - slot.pred_miss / slot.pred_active
-                                     if slot.pred_active else 1.0),
-                    pred_misses=slot.pred_miss,
-                    cached_prompt_tokens=slot.cached_tokens,
-                    ffn_read_fraction=(slot.io_dens_sum / slot.io_steps
-                                       if slot.io_steps else 1.0),
-                    finish_reason=slot.finish or "length",
-                )
+                self.results[slot.request.uid] = self._result(slot, step)
                 if self.obs is not None:
                     self.obs.req_finished(self.results[slot.request.uid])
                 retired.append(slot.request.uid)
                 self.slots[i] = None
         return retired
 
-    def admit(self, step: int) -> List[Tuple[int, _Slot]]:
-        """Fill free slots from the queue while blocks last (strict FIFO).
+    def preempt(self, i: int, step: int) -> None:
+        """Evict slot ``i`` to recompute and requeue it with its progress.
 
-        With a prefix cache, the request's longest cached full-block prompt
-        prefix is mapped from the trie (refcount++ — no prefill, no new
-        blocks) and only the cold suffix is allocated; under pool pressure,
-        LRU cached prefixes nobody currently shares are evicted first.
-        Returns (slot_index, slot) pairs needing (suffix) prefill."""
-        admitted = []
-        for i in range(self.n_slots):
-            if self.slots[i] is not None:
-                continue
-            req = self.queue.peek()
-            if req is None:
-                break
-            need = self.blocks_needed(req)
-            cached: List[int] = []
-            if self.prefix is not None:
-                cached = self.prefix.lookup(req.tokens, self.block_size)
-                if cached:
-                    # pin before any eviction below can consider them
-                    self.allocator.ref(cached)
+        The slot's fully WRITTEN full blocks (prompt + generated prefix K/V)
+        are parked in the prefix trie (when enabled) so re-admission maps
+        them back with zero prefill; every block reference the slot holds is
+        dropped (parked blocks survive on the trie's reference and stay
+        reclaimable by LRU eviction if pressure demands); the request
+        re-enters the queue carrying the SAME _Slot — output, sampling
+        schedule position and γ phase intact. Resume is then an ordinary
+        admission whose prefill covers ``prompt + generated`` (the cold
+        tail only, under a trie hit), and the final chunk's logits re-derive
+        the next token exactly where decode left off: f32 greedy streams
+        are byte-identical across the cycle."""
+        s = self.slots[i]
+        assert s is not None and not s.done, "preempting idle/finished slot"
+        resume = np.concatenate(
+            [s.request.tokens, np.asarray(s.out, np.int32)]
+        ) if s.out else s.request.tokens
+        if self.prefix is not None:
+            # only positions < written hold valid K/V (the latest generated
+            # token's K/V is written when it is FED, not when it is emitted;
+            # a mid-prefill slot has written exactly `prefilled`), so park
+            # exactly the full blocks below that bound: trie keys are capped
+            # one token short of the sequence passed
+            written = s.prefilled if s.prefilling else s.next_pos
+            self.prefix.insert(resume[:written + 1], s.blocks,
+                               self.block_size, self.allocator)
+        self.allocator.free(s.blocks)
+        s.blocks = []
+        s.resume_tokens = resume
+        s.preemptions += 1
+        s.prefilled = 0
+        s.cached_tokens = 0
+        s.warm = False
+        self.slots[i] = None
+        self.preemption_count += 1
+        self.queue.push(s.request, step, resume=s, t_submit=s.t_submit)
+        if self.obs is not None:
+            self.obs.req_preempted(s.request.uid, len(s.out),
+                                   priority=s.request.priority)
+
+    def _try_alloc(self, tokens, need: int
+                   ) -> Optional[Tuple[List[int], List[int]]]:
+        """(cached, cold) blocks for a sequence needing ``need`` total, or
+        None without side effects. Cached blocks come pinned (refcount++);
+        under pressure, LRU trie blocks nobody shares are evicted first."""
+        cached: List[int] = []
+        if self.prefix is not None:
+            cached = self.prefix.lookup(tokens, self.block_size)
+            if cached:
+                # pin before any eviction below can consider them
+                self.allocator.ref(cached)
+        cold = self.allocator.alloc(need - len(cached))
+        if cold is None and self.prefix is not None:
+            self.prefix.evict(self.allocator, need - len(cached)
+                              - self.allocator.available)
             cold = self.allocator.alloc(need - len(cached))
-            if cold is None and self.prefix is not None:
-                self.prefix.evict(self.allocator, need - len(cached)
-                                  - self.allocator.available)
-                cold = self.allocator.alloc(need - len(cached))
-            if cold is None:
-                if cached:
-                    self.allocator.free(cached)  # drop our pins
-                break  # head of line doesn't fit yet — wait for retirements
-            self.queue.pop()
-            n_cached = len(cached) * self.block_size
+        if cold is None:
+            if cached:
+                self.allocator.free(cached)  # drop our pins
+            return None
+        return cached, cold
+
+    def _pick_victim(self, req: Request,
+                     protect: frozenset = frozenset()) -> Optional[int]:
+        """Slot to preempt so ``req`` can be admitted: strictly lower RAW
+        priority only (aging never makes queued work evict running work),
+        lowest class first, least progress first (cheapest recompute).
+        ``protect`` holds slot indices admitted earlier in the SAME admit()
+        call — that order was already committed by effective priority, so
+        a later candidate may not churn it back out within the call (an
+        aged entry's admission would otherwise be reversed immediately by
+        any queued higher-raw-priority entry, re-starving it).
+        Returns None when preemption is off, no slot qualifies, or evicting
+        every qualifying slot still could not cover the block need (blocks
+        shared with other live slots stay allocated — preempting for an
+        admission that then fails would churn victims for nothing)."""
+        if not self.preemption:
+            return None
+        victims = [i for i, s in enumerate(self.slots)
+                   if s is not None and not s.done and i not in protect
+                   and s.request.priority < req.priority]
+        if not victims:
+            return None
+        reclaimable = self.allocator.available + sum(
+            sum(1 for b in self.slots[i].blocks
+                if self.allocator.refcount(b) == 1)
+            for i in victims)
+        if self.prefix is not None:
+            # unshared trie blocks are reclaimable via _try_alloc's eviction
+            reclaimable += sum(
+                1 for b in self.prefix.blocks()
+                if self.allocator.refcount(b) == 1)
+        if reclaimable < self.blocks_needed(req):
+            return None
+        return min(victims, key=lambda i: (
+            self.slots[i].request.priority,
+            self.slots[i].prefilled + len(self.slots[i].out)))
+
+    def _try_admit(self, entry: _QueueEntry, step: int,
+                   protect: frozenset = frozenset()
+                   ) -> Optional[Tuple[int, _Slot]]:
+        """Place one queued entry: free slot + blocks, preempting strictly
+        lower-priority slots (outside ``protect``) while that is what
+        admission is missing. Returns the (slot_index, slot) needing
+        prefill, or None."""
+        req = entry.req
+        need = self.blocks_needed(req)
+        tokens = (entry.resume.prefill_tokens if entry.resume is not None
+                  else req.tokens)
+        while True:
+            slot_i = next((i for i, s in enumerate(self.slots)
+                           if s is None), None)
+            if slot_i is not None:
+                got = self._try_alloc(tokens, need)
+                if got is not None:
+                    cached, cold = got
+                    break
+            victim = self._pick_victim(req, protect)
+            if victim is None:
+                return None
+            self.preempt(victim, step)
+        self.queue.remove_entry(entry)
+        n_cached = len(cached) * self.block_size
+        if entry.resume is not None:
+            slot = entry.resume
+            slot.blocks = cached + cold
+            slot.prefilled = n_cached
+            slot.cached_tokens = n_cached
+        else:
             slot = _Slot(request=req, blocks=cached + cold,
                          admitted_step=step, prefilled=n_cached,
-                         cached_tokens=n_cached)
-            self.prefill_tokens_total += req.prompt_len
-            self.prefill_tokens_saved += n_cached
-            self.slots[i] = slot
-            admitted.append((i, slot))
-            if self.obs is not None:
+                         cached_tokens=n_cached,
+                         submit_step=entry.submit_step,
+                         t_submit=entry.t_submit)
+        self.prefill_tokens_total += slot.prefill_len
+        self.prefill_tokens_saved += n_cached
+        self.slots[slot_i] = slot
+        if self.obs is not None:
+            if entry.resume is not None:
+                self.obs.req_resumed(req.uid, n_cached)
+            else:
                 self.obs.req_admitted(req.uid, n_cached)
+        return slot_i, slot
+
+    def admit(self, step: int) -> List[Tuple[int, _Slot]]:
+        """Fill free slots from the queue while blocks last, highest
+        effective priority first (aging promotes waiting entries one class
+        per ``aging_steps``; ties admit FIFO). An entry whose block demand
+        cannot currently be met is SKIPPED — later entries may admit around
+        it — unless it has already waited ``aging_steps``, at which point
+        it becomes a hard barrier (the historical head-of-line guarantee,
+        now bounded instead of immediate). When the candidate outranks a
+        running slot and nothing else fits, admission preempts (see
+        ``preempt``) — but never a slot admitted earlier in this same
+        call: the call's own effective-priority order is final.
+
+        With a prefix cache, the entry's longest cached full-block prefix
+        is mapped from the trie (refcount++ — no prefill, no new blocks)
+        and only the cold suffix is allocated; under pool pressure, LRU
+        cached prefixes nobody currently shares are evicted first.
+        Returns (slot_index, slot) pairs needing (suffix) prefill."""
+        admitted = []
+        placed = True
+        while placed:
+            placed = False
+            protect = frozenset(i for i, _ in admitted)
+            for entry in self.queue.ordered(step, self.aging_steps):
+                got = self._try_admit(entry, step, protect)
+                if got is not None:
+                    admitted.append(got)
+                    placed = True
+                    break  # queue/slots changed: recompute the order
+                if (self.aging_steps > 0
+                        and step - entry.submit_step >= self.aging_steps):
+                    return admitted  # aged stuck entry: hard barrier
         return admitted
 
     def cancel(self, uid: int) -> bool:
@@ -507,15 +779,24 @@ class Scheduler:
         "cancelled" RequestResult is synthesized so waiters always observe
         a terminal result). Slotted and unfinished: marked finished — the
         next ``retire_finished`` frees its blocks and emits its partial
-        output with ``finish_reason="cancelled"``. Returns False if the
-        uid is unknown or already finished."""
-        req = self.queue.remove(uid)
-        if req is not None:
-            self.results[uid] = RequestResult(
-                uid=uid, tokens=np.zeros((0,), np.int32),
-                logprobs=np.zeros((0,), np.float32),
-                prompt_len=req.prompt_len, admitted_step=-1,
-                finished_step=-1, finish_reason="cancelled")
+        output with ``finish_reason="cancelled"``. A PREEMPTED request
+        (queued for resume) is withdrawn with the partial output it already
+        generated. Returns False if the uid is unknown or already
+        finished."""
+        entry = self.queue.remove(uid)
+        if entry is not None:
+            if entry.resume is not None:  # preempted: blocks already freed
+                entry.resume.finish = "cancelled"
+                self.results[uid] = self._result(entry.resume, -1)
+            else:
+                self.results[uid] = RequestResult(
+                    uid=uid, tokens=np.zeros((0,), np.int32),
+                    logprobs=np.zeros((0,), np.float32),
+                    prompt_len=entry.req.prompt_len, admitted_step=-1,
+                    finished_step=-1, finish_reason="cancelled",
+                    priority=entry.req.priority, slo_ms=entry.req.slo_ms,
+                    slo_met=(None if entry.req.slo_ms is None else False),
+                    submit_step=entry.submit_step)
             if self.obs is not None:  # terminal even without admission
                 self.obs.req_finished(self.results[uid])
             return True
@@ -539,18 +820,26 @@ class Scheduler:
             slot.finish = "stop"
         return slot.finish is not None
 
-    def seed(self, slot: _Slot, token: int, logprob: float) -> None:
-        """Record the first generated token (from the prefill logits),
-        marking prefill complete and registering the prompt's full blocks
-        in the prefix cache."""
-        slot.prefilled = slot.request.prompt_len
+    def seed(self, slot: _Slot, token: int, logprob: float,
+             step: int = 0) -> None:
+        """Record the next generated token (from the prefill logits),
+        marking prefill complete and registering the prefilled sequence's
+        full blocks in the prefix cache. For a fresh slot this is the FIRST
+        token; for a preempted slot resuming, it is the token decode would
+        have produced next — either way ``age = len(out) - 1`` afterwards,
+        so next_pos and the γ-refresh phase continue exactly."""
+        slot.prefilled = slot.prefill_len
         slot.out.append(int(token))
         slot.lps.append(float(logprob))
-        if self.obs is not None:  # the span's first token (TTFT edge)
+        slot.age = len(slot.out) - 1
+        if slot.t_first is None:  # the span's first token (TTFT edge)
+            slot.t_first = time.monotonic()
+            slot.first_token_step = step
+        if self.obs is not None:
             self.obs.req_tokens(slot.request.uid, 1)
         self._check_stop(slot)
         if self.prefix is not None:
-            self.prefix.insert(slot.request.tokens, slot.blocks,
+            self.prefix.insert(slot.prefill_tokens, slot.blocks,
                                self.block_size, self.allocator)
 
     # -- batch assembly -----------------------------------------------------
@@ -619,25 +908,35 @@ class Scheduler:
             gen[i] = len(s.out)
         return temps, top_ks, top_ps, keys, gen
 
-    def prefill_batch(self, chunk: int):
+    def prefill_batch(self, chunk: int, budget: int = 0):
         """Fixed-shape arrays for one chunked-prefill step: the next
-        ``chunk`` prompt tokens of every prefilling slot, written at its
+        ``chunk`` prefill tokens of every prefilling slot, written at its
         own resume position. Idle/decoding slots get clen 0 (their window
-        tokens are scratch-routed in-graph). Returns (tokens (B, C),
-        pos0 (B,), table (B, nb), clen (B,), first (B,)) — ``first`` marks
-        a slot's FIRST chunk, whose harvest must replace (not OR into) any
-        stale mask left by the slot's previous occupant."""
+        tokens are scratch-routed in-graph). ``budget`` > 0 caps the TOTAL
+        prefill tokens across slots this step (the TTFT-vs-TPOT knob): a
+        slot past the cap keeps clen 0 and resumes next step; the first
+        prefilling slot always gets at least one token, so prefill can
+        never stall. Returns (tokens (B, C), pos0 (B,), table (B, nb),
+        clen (B,), first (B,)) — ``first`` marks a slot's FIRST chunk of
+        the current prefill pass, whose harvest must replace (not OR into)
+        any stale mask left by the slot's previous occupant."""
         B, nb = self.n_slots, self.max_blocks_per_seq
         tokens = np.zeros((B, chunk), np.int32)
         pos0 = np.zeros((B,), np.int32)
         table = np.full((B, nb), SCRATCH_BLOCK, np.int32)
         clen = np.zeros((B,), np.int32)
         first = np.zeros((B,), bool)
+        spent = 0
         for i in self.prefill_indices():
             s = self.slots[i]
             p = s.prefilled
-            n = min(chunk, s.request.prompt_len - p)
-            tokens[i, :n] = s.request.tokens[p:p + n]
+            n = min(chunk, s.prefill_len - p)
+            if budget > 0:
+                n = min(n, max(0, budget - spent))
+                if n <= 0:
+                    continue  # over budget this step: resume next step
+            spent += n
+            tokens[i, :n] = s.prefill_tokens[p:p + n]
             pos0[i] = p
             clen[i] = n
             first[i] = p == s.cached_tokens
@@ -645,8 +944,9 @@ class Scheduler:
         return tokens, pos0, table, clen, first
 
     def record_prefill(self, nxt: np.ndarray, lp: np.ndarray,
-                       clen: np.ndarray, *, warm: bool = False) -> None:
-        """Advance every prefilling slot by its chunk; a slot whose prompt
+                       clen: np.ndarray, *, warm: bool = False,
+                       step: int = 0) -> None:
+        """Advance every prefilling slot by its chunk; a slot whose prefill
         just completed is seeded from the logits at its last valid chunk
         position (nxt/lp are the (B, C) per-position greedy outputs).
         ``warm`` marks completed slots to skip their age-0 γ-refresh — the
@@ -657,9 +957,10 @@ class Scheduler:
             if n <= 0:
                 continue
             s.prefilled += n
-            if s.prefilled >= s.request.prompt_len:
+            if s.prefilled >= s.prefill_len:
                 s.warm = bool(warm)
-                self.seed(s, int(nxt[i, n - 1]), float(lp[i, n - 1]))
+                self.seed(s, int(nxt[i, n - 1]), float(lp[i, n - 1]),
+                          step=step)
 
     def record_io(self, active, dens: np.ndarray) -> None:
         """Accumulate each active slot's per-step FFN weight-read fraction

@@ -234,3 +234,47 @@ def test_http_sse_roundtrip():
                 await server.aclose()
 
     _run(serve())
+
+
+def test_http_schema_v1_priority_slo_and_unknown_field_400():
+    """Schema v1: ``priority``/``slo_ms`` are accepted and surfaced in the
+    terminal event (with ``preemptions`` and the ``slo_met`` verdict); an
+    unknown field is a 400 that NAMES the offender instead of being
+    silently dropped."""
+    eng = _engine("plain")
+    prompt = _prompts(1, seed=11)[0]
+
+    async def serve():
+        async with AsyncServingEngine(eng) as api:
+            server = ApiServer(api, mode="plain")
+            await server.start(port=0)
+            try:
+                status, body = await _http(
+                    server.port, "POST", "/v1/generate",
+                    {"prompt": prompt, "max_new": 3, "stream": False,
+                     "priority": 2, "slo_ms": 60_000.0})
+                assert status == "200"
+                one = json.loads(body)
+                assert one["done"] and one["priority"] == 2
+                assert one["preemptions"] == 0
+                assert one["slo_met"] is True  # a minute did not elapse
+                # no SLO -> no verdict, priority defaults to 0
+                status, body = await _http(
+                    server.port, "POST", "/v1/generate",
+                    {"prompt": prompt, "max_new": 3, "stream": False})
+                one = json.loads(body)
+                assert one["priority"] == 0 and one["slo_met"] is None
+
+                status, body = await _http(
+                    server.port, "POST", "/v1/generate",
+                    {"prompt": prompt, "max_new": 3, "prioritty": 1})
+                assert status == "400" and b"prioritty" in body
+                # a schema error must not have consumed engine capacity
+                status, _ = await _http(
+                    server.port, "POST", "/v1/generate",
+                    {"prompt": prompt, "max_new": 3})
+                assert status == "200"
+            finally:
+                await server.aclose()
+
+    _run(serve())

@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import registry
-from repro.serving import ContinuousBatchingEngine
+from repro.serving import ContinuousBatchingEngine, EngineConfig
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -33,7 +33,7 @@ def _engine(cfg, params, **kw):
     kw.setdefault("n_slots", 2)
     kw.setdefault("block_size", 8)
     kw.setdefault("max_blocks_per_seq", 6)
-    return ContinuousBatchingEngine(cfg, params, **kw)
+    return ContinuousBatchingEngine(cfg, params, config=EngineConfig(**kw))
 
 
 def _serve(cfg, params, prompts, max_new, reuse_window=0, **kw):
@@ -207,9 +207,9 @@ def test_prefix_cache_evicts_under_pool_pressure():
     cfg, params = _setup("tiny-relu")
     prompts = _prompts(cfg, [17, 18, 17, 19], seed=7)
     # pool = one request's worst case: admission must reclaim trie blocks
-    eng = ContinuousBatchingEngine(cfg, params, n_slots=1, block_size=8,
-                                   max_blocks_per_seq=4, n_blocks=5,
-                                   prefill_chunk=8, prefix_cache=True)
+    eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(
+        n_slots=1, block_size=8, max_blocks_per_seq=4, n_blocks=5,
+        prefill_chunk=8, prefix_cache=True))
     uids = [eng.submit(p, max_new=8) for p in prompts]
     res = eng.run()
     assert sorted(res) == sorted(uids)

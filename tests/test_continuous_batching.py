@@ -9,7 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import common as cm
 from repro.models import registry
-from repro.serving import ContinuousBatchingEngine, ServeEngine
+from repro.serving import ContinuousBatchingEngine, EngineConfig, ServeEngine
 from repro.serving.scheduler import BlockAllocator, Request, Scheduler
 
 
@@ -30,7 +30,7 @@ def _engine(cfg, params, **kw):
     kw.setdefault("n_slots", 2)
     kw.setdefault("block_size", 8)
     kw.setdefault("max_blocks_per_seq", 6)
-    return ContinuousBatchingEngine(cfg, params, **kw)
+    return ContinuousBatchingEngine(cfg, params, config=EngineConfig(**kw))
 
 
 def _solo(cfg, params, prompt, max_new, reuse_window=0, **kw):

@@ -159,6 +159,72 @@ def test_interleaved_admit_retire_conserves_pool(n_slots, seed):
     assert len(sched.prefix) == 0
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 10_000))
+def test_random_preempt_resume_conserves_pool(n_slots, seed):
+    """ISSUE 10: the drain loop above, now with randomly injected
+    preemptions (mixed priorities, preemption also firing organically via
+    admission). Preempt parks written blocks in the trie and frees the
+    slot's references; resume maps them back — the ledger must balance at
+    every step and every request must still complete with its full
+    output."""
+    rng = np.random.RandomState(seed)
+    bs, max_bps = 4, 4
+    n_blocks = 1 + n_slots * max_bps
+    sched = Scheduler(n_slots, n_blocks, bs, max_bps, prefix_cache=True,
+                      aging_steps=16)
+    lib = [rng.randint(0, 50, bs * k).astype(np.int32) for k in (1, 2)]
+    n_req = rng.randint(3, 9)
+    expect_len = {}
+    for uid in range(1, n_req + 1):
+        parts = []
+        if rng.rand() < 0.5:
+            parts.append(lib[rng.randint(len(lib))])
+        parts.append(rng.randint(0, 50, rng.randint(1, 5)).astype(np.int32))
+        tokens = np.concatenate(parts)
+        max_new = int(rng.randint(1, max_bps * bs - len(tokens) + 1))
+        expect_len[uid] = max_new
+        sched.submit(Request(uid=uid, tokens=tokens, max_new=max_new,
+                             priority=int(rng.randint(3))))
+
+    chunk, forced = 3, 0
+    for step in range(2000):
+        sched.retire_finished(step)
+        if not sched.has_work():
+            break
+        sched.admit(step)
+        _check_invariants(sched, n_blocks)
+        victims = [i for i, s in enumerate(sched.slots)
+                   if s is not None and not s.done]
+        if victims and forced < 6 and rng.rand() < 0.15:
+            sched.preempt(int(victims[rng.randint(len(victims))]), step)
+            forced += 1
+            _check_invariants(sched, n_blocks)
+            continue  # re-admit before advancing (as the engine would)
+        if sched.prefill_indices():
+            _, _, _, clen, _ = sched.prefill_batch(chunk)
+            sched.record_prefill(
+                np.zeros((n_slots, chunk), np.int64),
+                np.zeros((n_slots, chunk), np.float32), clen)
+            _check_invariants(sched, n_blocks)
+        if sched.active_indices():
+            sched.record(np.zeros(n_slots, np.int64),
+                         np.zeros(n_slots, np.float32))
+    else:
+        raise AssertionError("scheduler failed to drain under preemption")
+
+    sched.retire_finished(step)
+    assert sorted(sched.results) == sorted(expect_len)
+    for uid, res in sched.results.items():
+        assert len(res.tokens) == expect_len[uid]  # no token lost/duplicated
+    assert (sched.preemption_count >= forced)
+    _check_invariants(sched, n_blocks)
+    n_cached = len(sched.prefix)
+    assert sched.allocator.available == n_blocks - 1 - n_cached
+    assert sched.prefix.evict(sched.allocator, n_cached) == n_cached
+    assert sched.allocator.available == n_blocks - 1
+
+
 @settings(max_examples=8, deadline=None)
 @given(st.integers(2, 5), st.integers(0, 10_000))
 def test_trie_lookup_is_longest_block_aligned_proper_prefix(bs, seed):

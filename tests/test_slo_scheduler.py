@@ -1,0 +1,490 @@
+"""SLO-aware scheduling (ISSUE 10): priority-ordered admission with aging,
+preempt-and-requeue under KV-pressure, resume via chunked prefill — plus
+the redesigned EngineConfig/submit surface.
+
+Scheduler-level tests drive the policy directly (obs=None, no jax);
+engine-level tests pin the house exactness invariant: an f32 greedy stream
+FORCED through a preempt/resume cycle is byte-identical to the unpreempted
+stream, in all three serving modes."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.serving import ContinuousBatchingEngine, EngineConfig
+from repro.serving import config as config_mod
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _setup(name="tiny-relu", dtype="float32"):
+    cfg = get_config(name)
+    if dtype is not None:
+        cfg = cfg.replace(compute_dtype=dtype)
+    fam = registry.get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=1):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, s).astype(np.int32)
+            for s in lengths]
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("max_blocks_per_seq", 6)
+    return ContinuousBatchingEngine(cfg, params, config=EngineConfig(**kw))
+
+
+def _spec_kw(cfg, fam, seed=9):
+    dcfg = cfg.replace(name=f"{cfg.name}-draft", n_layers=1)
+    return dict(draft_cfg=dcfg,
+                draft_params=fam.init_params(jax.random.PRNGKey(seed), dcfg),
+                gamma=3)
+
+
+def _predictor_kw(cfg, params):
+    from repro.predictor import calibrate
+    calib = {"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 24),
+                                          0, cfg.vocab_size)}
+    return dict(predictor=calibrate(params, cfg, calib, kind="sign",
+                                    probe_dtype="float32",
+                                    target_recall=1.0, tile=1))
+
+
+def _mode_kw(mode, cfg, params):
+    if mode == "spec":
+        return _spec_kw(cfg, registry.get_family(cfg))
+    if mode == "predictor":
+        return _predictor_kw(cfg, params)
+    return {}
+
+
+def _req(uid, prompt_len=4, max_new=4, priority=0, slo_ms=None, seed=0):
+    rng = np.random.RandomState(seed + uid)
+    return Request(uid=uid,
+                   tokens=rng.randint(0, 97, prompt_len).astype(np.int32),
+                   max_new=max_new, priority=priority, slo_ms=slo_ms)
+
+
+def _start_decode(sched, slot, token=7, step=0):
+    """Whole-prompt-prefill shortcut: seed() completes prefill and emits
+    the first token, exactly like the engine's prefill_chunk=0 path."""
+    sched.seed(slot, token, 0.0, step=step)
+
+
+def _decode_steps(sched, n):
+    for _ in range(n):
+        sched.record(np.full(sched.n_slots, 7, np.int32),
+                     np.zeros(sched.n_slots, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# admission order: priorities, FIFO within class, aging
+
+
+def test_priority_orders_admission():
+    sched = Scheduler(n_slots=1, n_blocks=8, block_size=4,
+                      max_blocks_per_seq=4)
+    for uid, prio in ((1, 0), (2, 2), (3, 1)):
+        sched.submit(_req(uid, priority=prio))
+    admitted = sched.admit(step=0)
+    assert [s.request.uid for _, s in admitted] == [2]
+    assert sched.queue.uids() == [3, 1]  # remaining order: prio 1, then 0
+
+
+def test_fifo_within_priority_class():
+    sched = Scheduler(n_slots=2, n_blocks=8, block_size=4,
+                      max_blocks_per_seq=4)
+    for uid in (1, 2, 3):
+        sched.submit(_req(uid, priority=1))
+    admitted = sched.admit(step=0)
+    assert [s.request.uid for _, s in admitted] == [1, 2]
+
+
+def test_aging_promotes_waiting_low_priority():
+    """A low-priority entry that has waited gains one class per
+    aging_steps, eventually outranking a fresh high-priority arrival."""
+    sched = Scheduler(n_slots=1, n_blocks=8, block_size=4,
+                      max_blocks_per_seq=4, aging_steps=4)
+    sched.submit(_req(1, priority=0), step=0)
+    sched.submit(_req(2, priority=1), step=16)
+    # at step 16: uid 1 effective = 0 + 16//4 = 4 > uid 2's 1 + 0
+    admitted = sched.admit(step=16)
+    assert [s.request.uid for _, s in admitted] == [1]
+
+
+def test_aging_disabled_means_raw_priority():
+    sched = Scheduler(n_slots=1, n_blocks=8, block_size=4,
+                      max_blocks_per_seq=4, aging_steps=0)
+    sched.submit(_req(1, priority=0), step=0)
+    sched.submit(_req(2, priority=1), step=10_000)
+    admitted = sched.admit(step=10_000)
+    assert [s.request.uid for _, s in admitted] == [2]
+
+
+# ---------------------------------------------------------------------------
+# bugfix: an unfit head is SKIPPED, bounded by the aging barrier
+
+
+def test_unfit_head_is_skipped_not_a_hard_stop():
+    """Historically admit() broke at the first entry that didn't fit; now
+    later entries admit around it while it has not yet aged."""
+    sched = Scheduler(n_slots=2, n_blocks=4, block_size=4,
+                      max_blocks_per_seq=3, aging_steps=32)
+    sched.submit(_req(1, prompt_len=2, max_new=2))  # 1 block
+    assert len(sched.admit(step=0)) == 1            # 2 of 3 blocks left
+    sched.submit(_req(2, prompt_len=8, max_new=4), step=0)  # 3 blocks: unfit
+    sched.submit(_req(3, prompt_len=2, max_new=2), step=0)  # 1 block: fits
+    admitted = sched.admit(step=0)
+    assert [s.request.uid for _, s in admitted] == [3]
+    assert sched.queue.uids() == [2]  # still queued, not dropped/rejected
+
+
+def test_aged_unfit_entry_becomes_admission_barrier():
+    """Once the skipped entry has waited aging_steps it becomes a barrier:
+    nothing admits past it, restoring the head-of-line guarantee."""
+    sched = Scheduler(n_slots=2, n_blocks=5, block_size=4,
+                      max_blocks_per_seq=3, aging_steps=8)
+    sched.submit(_req(1, prompt_len=4, max_new=4))  # 2 of 4 blocks
+    assert len(sched.admit(step=0)) == 1
+    sched.submit(_req(2, prompt_len=8, max_new=4), step=0)   # unfit, aging
+    sched.submit(_req(3, prompt_len=2, max_new=2), step=32)  # would fit
+    assert sched.admit(step=32) == []  # uid 2 aged into a barrier
+    # the moment uid 2 fits, it admits first and the barrier lifts
+    sched.slots[0].finish = "stop"
+    sched.retire_finished(step=33)
+    admitted = sched.admit(step=33)
+    assert [s.request.uid for _, s in admitted] == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# preemption: victim selection, requeue, resume, ledger
+
+
+def _full_house(prefix_cache=False, preemption=True):
+    """Two decoding slots (prio 0 and 1) holding the whole pool."""
+    sched = Scheduler(n_slots=2, n_blocks=5, block_size=4,
+                      max_blocks_per_seq=4, prefix_cache=prefix_cache,
+                      preemption=preemption)
+    sched.submit(_req(1, prompt_len=4, max_new=4, priority=0))
+    sched.submit(_req(2, prompt_len=4, max_new=4, priority=1))
+    for _, slot in sched.admit(step=0):
+        _start_decode(sched, slot)
+    assert sched.allocator.available == 0
+    return sched
+
+
+def test_preemption_evicts_strictly_lower_priority():
+    sched = _full_house()
+    sched.submit(_req(3, prompt_len=4, max_new=4, priority=2), step=1)
+    admitted = sched.admit(step=1)
+    assert [s.request.uid for _, s in admitted] == [3]
+    assert sched.preemption_count == 1
+    live = {s.request.uid for s in sched.slots if s is not None}
+    assert live == {2, 3}           # prio-0 uid 1 was the victim
+    assert sched.queue.uids() == [1]
+    entry = sched.queue.ordered()[0]
+    assert entry.resume is not None
+    assert entry.resume.preemptions == 1
+    # requeued with prompt + generated prefix frozen for recompute
+    np.testing.assert_array_equal(
+        entry.resume.resume_tokens,
+        np.concatenate([entry.req.tokens,
+                        np.asarray(entry.resume.out, np.int32)]))
+
+
+def test_no_preemption_within_the_same_class():
+    """Equal priority never evicts: the candidate waits for retirement."""
+    sched = _full_house()
+    sched.submit(_req(3, prompt_len=4, max_new=4, priority=0), step=1)
+    assert sched.admit(step=1) == []
+    assert sched.preemption_count == 0
+    assert sched.queue.uids() == [3]
+
+
+def test_preemption_flag_off_never_evicts():
+    sched = _full_house(preemption=False)
+    sched.submit(_req(3, prompt_len=4, max_new=4, priority=5), step=1)
+    assert sched.admit(step=1) == []
+    assert sched.preemption_count == 0
+
+
+def test_victim_is_least_progress_within_lowest_class():
+    sched = Scheduler(n_slots=2, n_blocks=5, block_size=8,
+                      max_blocks_per_seq=4)
+    sched.submit(_req(1, prompt_len=4, max_new=8, priority=0))
+    for _, slot in sched.admit(step=0):
+        _start_decode(sched, slot)
+    _decode_steps(sched, 3)  # uid 1 is 4 tokens in
+    sched.submit(_req(2, prompt_len=4, max_new=8, priority=0))
+    for _, slot in sched.admit(step=3):
+        _start_decode(sched, slot)  # uid 2 just seeded: 1 token
+    sched.submit(_req(3, prompt_len=4, max_new=4, priority=1), step=4)
+    sched.admit(step=4)
+    live = {s.request.uid for s in sched.slots if s is not None}
+    assert live == {1, 3}  # uid 2 (least progress) was evicted
+
+
+def test_preempt_frees_blocks_and_ledger_balances():
+    sched = _full_house()
+    held = sum(len(s.blocks) for s in sched.slots if s is not None)
+    sched.preempt(0, step=1)
+    assert sched.allocator.available == 2  # victim's blocks back in the pool
+    now_held = sum(len(s.blocks) for s in sched.slots if s is not None)
+    assert held - now_held == 2
+    assert sched.allocator.available + sched.allocator.allocated == (
+        sched.allocator.n_blocks - 1)
+
+
+def test_resume_reuses_slot_and_maps_parked_blocks():
+    """Re-admission of a preempted request reuses the SAME _Slot (output,
+    γ phase, sampling position intact) and maps its parked full blocks
+    back from the trie — only the cold tail is left to prefill."""
+    sched = Scheduler(n_slots=1, n_blocks=6, block_size=4,
+                      max_blocks_per_seq=4, prefix_cache=True)
+    sched.submit(_req(1, prompt_len=8, max_new=4, priority=0))
+    ((_, slot),) = sched.admit(step=0)
+    _start_decode(sched, slot)
+    _decode_steps(sched, 2)  # out = 3 tokens, written K/V through pos 10
+    out_before = list(slot.out)
+    sched.preempt(0, step=3)
+    ((_, resumed),) = sched.admit(step=4)
+    assert resumed is slot  # progress carried by the very same slot
+    assert resumed.out == out_before
+    assert resumed.preemptions == 1
+    # prompt(8) + out(3) = 11 to cover; 2 full written blocks were parked
+    assert resumed.prefill_len == 11
+    assert resumed.cached_tokens == 8
+    assert resumed.prefilling and resumed.prefilled == 8
+    # finishing the cold tail re-derives the next token and continues
+    sched.seed(resumed, 9, 0.0, step=5)
+    assert resumed.out == out_before + [9]
+    assert resumed.age == len(resumed.out) - 1  # γ phase pinned
+
+
+def test_cancel_preempted_request_emits_partial_result():
+    sched = _full_house()
+    (i,) = [i for i, s in enumerate(sched.slots)
+            if s is not None and s.request.uid == 1]
+    sched.preempt(i, step=1)
+    parked = sched.queue.ordered()[0].resume
+    assert sched.cancel(1)
+    res = sched.results[1]
+    assert res.finish_reason == "cancelled"
+    assert res.preemptions == 1
+    np.testing.assert_array_equal(res.tokens,
+                                  np.asarray(parked.out, np.int32))
+    assert len(sched.queue) == 0
+
+
+def test_result_carries_slo_and_step_stamps():
+    sched = Scheduler(n_slots=1, n_blocks=8, block_size=4,
+                      max_blocks_per_seq=4)
+    sched.submit(_req(1, max_new=1, priority=3, slo_ms=60_000.0), step=3)
+    ((_, slot),) = sched.admit(step=5)
+    _start_decode(sched, slot, step=7)
+    sched.retire_finished(step=8)
+    res = sched.results[1]
+    assert res.priority == 3 and res.slo_ms == 60_000.0
+    assert res.submit_step == 3 and res.first_token_step == 7
+    assert res.slo_met is True  # a minute of wall clock cannot have passed
+    sched.submit(_req(2, max_new=1, slo_ms=0.0))
+    ((_, slot),) = sched.admit(step=9)
+    _start_decode(sched, slot, step=9)
+    sched.retire_finished(step=9)
+    assert sched.results[2].slo_met is False
+    sched.submit(_req(3, max_new=1))  # no SLO → no verdict
+    ((_, slot),) = sched.admit(step=10)
+    _start_decode(sched, slot, step=10)
+    sched.retire_finished(step=10)
+    assert sched.results[3].slo_met is None
+
+
+# ---------------------------------------------------------------------------
+# exactness: forced preempt/resume is byte-identical (acceptance criterion)
+
+
+@pytest.mark.parametrize("mode", ["plain", "spec", "predictor"])
+def test_forced_preempt_resume_byte_identical(mode):
+    """Preempt the only decoding slot mid-stream, let it resume through
+    trie-mapped blocks + chunked prefill of the cold tail: the f32 greedy
+    stream must equal the never-preempted stream exactly."""
+    cfg, params = _setup("tiny-relu")
+    kw = _mode_kw(mode, cfg, params)
+    (p,) = _prompts(cfg, [11], seed=13)
+    ref_eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=True, **kw)
+    ref_uid = ref_eng.submit(p, max_new=10)
+    ref = ref_eng.run()[ref_uid]
+
+    eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=True, **kw)
+    uid = eng.submit(p, max_new=10)
+    while True:  # run until mid-decode with a few tokens out
+        eng.step()
+        slots = [s for s in eng.scheduler.slots if s is not None]
+        if slots and not slots[0].prefilling and len(slots[0].out) >= 3:
+            break
+    (i,) = [i for i, s in enumerate(eng.scheduler.slots) if s is not None]
+    eng.scheduler.preempt(i, eng.t)
+    res = eng.run()[uid]
+
+    np.testing.assert_array_equal(res.tokens, ref.tokens)
+    np.testing.assert_allclose(res.logprobs, ref.logprobs,
+                               rtol=1e-6, atol=1e-6)
+    assert res.preemptions == 1 and ref.preemptions == 0
+    assert res.cached_prompt_tokens > 0  # resume mapped parked blocks
+
+
+def test_forced_preempt_resume_sampled_stream_identical():
+    """A SAMPLED request's key schedule is positional (gen = len(out)), so
+    the resumed slot keeps drawing the same per-token keys it would have
+    drawn unpreempted — the stochastic stream is reproducible too."""
+    cfg, params = _setup("tiny-relu")
+    (p,) = _prompts(cfg, [9], seed=14)
+    sp = SamplingParams(temperature=0.8, top_k=20, seed=42)
+    ref_eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=True)
+    ref_uid = ref_eng.submit(p, max_new=8, sampling=sp)
+    ref = ref_eng.run()[ref_uid]
+
+    eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=True)
+    uid = eng.submit(p, max_new=8, sampling=sp)
+    while True:
+        eng.step()
+        slots = [s for s in eng.scheduler.slots if s is not None]
+        if slots and not slots[0].prefilling and len(slots[0].out) >= 3:
+            break
+    (i,) = [i for i, s in enumerate(eng.scheduler.slots) if s is not None]
+    eng.scheduler.preempt(i, eng.t)
+    res = eng.run()[uid]
+    np.testing.assert_array_equal(res.tokens, ref.tokens)
+
+
+def test_engine_priority_preemption_end_to_end():
+    """A high-priority submit against a saturated engine preempts a
+    batch-class slot, decodes first, and the victim still completes with
+    its exact solo stream."""
+    cfg, params = _setup("tiny-relu")
+    pb, pi = _prompts(cfg, [10, 8], seed=15)
+    ref_eng = _engine(cfg, params, n_slots=1, max_blocks_per_seq=4,
+                      n_blocks=5, prefill_chunk=4, prefix_cache=True)
+    rb = ref_eng.submit(pb, max_new=12)
+    ref = ref_eng.run()[rb]
+
+    eng = _engine(cfg, params, n_slots=1, max_blocks_per_seq=4, n_blocks=5,
+                  prefill_chunk=4, prefix_cache=True)
+    ub = eng.submit(pb, max_new=12, priority=0, slo_ms=1e6)
+    while not eng.scheduler.active_indices():
+        eng.step()
+    for _ in range(3):
+        eng.step()
+    ui = eng.submit(pi, max_new=4, priority=2, slo_ms=1e6)
+    res = eng.run()
+    assert res[ub].preemptions >= 1
+    assert res[ui].preemptions == 0
+    # the interactive request got the slot: it finished first
+    assert res[ui].finished_step < res[ub].finished_step
+    np.testing.assert_array_equal(res[ub].tokens, ref.tokens)
+    assert res[ub].priority == 0 and res[ui].priority == 2
+    assert res[ui].slo_met is True
+
+
+# ---------------------------------------------------------------------------
+# per-step prefill token budget (TTFT-vs-TPOT knob)
+
+
+def test_prefill_batch_budget_caps_total_tokens():
+    sched = Scheduler(n_slots=2, n_blocks=9, block_size=4,
+                      max_blocks_per_seq=4)
+    sched.submit(_req(1, prompt_len=8, max_new=4))
+    sched.submit(_req(2, prompt_len=8, max_new=4))
+    sched.admit(step=0)
+    _, _, _, clen, _ = sched.prefill_batch(chunk=4, budget=6)
+    assert clen.sum() == 6 and list(clen) == [4, 2]
+    # the first prefilling slot always advances, even under a 1-token budget
+    _, _, _, clen, _ = sched.prefill_batch(chunk=4, budget=1)
+    assert clen.sum() == 1
+    # budget=0 disables the cap entirely
+    _, _, _, clen, _ = sched.prefill_batch(chunk=4, budget=0)
+    assert list(clen) == [4, 4]
+
+
+def test_engine_prefill_budget_is_exact_and_slower():
+    """The budgeted engine produces the identical streams, just spread over
+    more prefill steps."""
+    cfg, params = _setup("tiny-relu")
+    prompts = _prompts(cfg, [9, 11], seed=16)
+    ref_eng = _engine(cfg, params, prefill_chunk=4)
+    ref_uids = [ref_eng.submit(p, max_new=6) for p in prompts]
+    ref = ref_eng.run()
+    eng = _engine(cfg, params, prefill_chunk=4, prefill_budget=4)
+    uids = [eng.submit(p, max_new=6) for p in prompts]
+    eng.step()  # both slots admitted; budget lets only 4 tokens prefill
+    assert sum(s.prefilled for s in eng.scheduler.slots
+               if s is not None) == 4
+    res = eng.run()
+    for ru, u in zip(ref_uids, uids):
+        np.testing.assert_array_equal(res[u].tokens, ref[ru].tokens)
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig surface: validation, legacy shim, downgrades
+
+
+def test_engine_config_validate_errors():
+    with pytest.raises(ValueError, match="pool"):
+        EngineConfig(n_slots=2, block_size=4, max_blocks_per_seq=4,
+                     n_blocks=4).validate()
+    with pytest.raises(ValueError, match="prefix_cache"):
+        EngineConfig(prefix_cache=True).validate()
+    with pytest.raises(ValueError, match="warm_masks"):
+        EngineConfig(warm_masks=True).validate()
+
+
+def test_engine_config_defaults_validate():
+    cfg = EngineConfig().validate()
+    assert cfg.resolved_n_blocks == 1 + cfg.n_slots * cfg.max_blocks_per_seq
+    assert cfg.preemption is True and cfg.aging_steps > 0
+
+
+def test_engine_rejects_config_plus_legacy_kwargs():
+    cfg, params = _setup("tiny-relu")
+    with pytest.raises(TypeError, match="not both"):
+        ContinuousBatchingEngine(cfg, params, config=EngineConfig(),
+                                 n_slots=2)
+
+
+def test_legacy_kwargs_shim_warns_once_and_matches_config():
+    cfg, params = _setup("tiny-relu")
+    config_mod._LEGACY_KWARGS_WARNED = False
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = ContinuousBatchingEngine(cfg, params, n_slots=2,
+                                          block_size=8, max_blocks_per_seq=6,
+                                          prefill_chunk=4)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ContinuousBatchingEngine(cfg, params, n_slots=2, block_size=8,
+                                 max_blocks_per_seq=6)
+    assert not [w for w in caught  # warn-ONCE: the second use is silent
+                if issubclass(w.category, DeprecationWarning)
+                and "EngineConfig" in str(w.message)]
+    assert legacy.config == EngineConfig(n_slots=2, block_size=8,
+                                         max_blocks_per_seq=6,
+                                         prefill_chunk=4)
+    with pytest.raises(TypeError, match="bogus_knob"):
+        ContinuousBatchingEngine(cfg, params, bogus_knob=1)
+
+
+def test_preemption_downgraded_without_chunked_prefill():
+    """Resume needs the chunked-prefill path; a prefill_chunk=0 engine must
+    not break under the default-on preemption knob."""
+    cfg, params = _setup("tiny-relu")
+    eng = _engine(cfg, params)  # prefill_chunk=0
+    assert eng.scheduler.preemption is False
+    eng = _engine(cfg, params, prefill_chunk=4)
+    assert eng.scheduler.preemption is True
